@@ -1,0 +1,55 @@
+//! §5 walkthrough: the communication model as a user-facing planning tool.
+//! For each paper model, derive the memory floor on G_tensor, the
+//! closed-form optimal G_c, and the exact discrete optimum; show how the
+//! Megatron-LM degenerate configuration compares.
+//!
+//! Run: `cargo run --release --example planner_demo`
+
+use tensor3d::comm_model;
+use tensor3d::mesh::Mesh;
+use tensor3d::models::{gpt, unet};
+use tensor3d::planner::{self, NetKind};
+use tensor3d::sim::Machine;
+use tensor3d::strategies;
+use tensor3d::util::table::{fmt_bytes, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "§5 planner across the paper's models",
+        &[
+            "model", "GPUs", "machine", "mem floor G_t", "plan (d,r,c)",
+            "Eq.7/9 G_c", "plan vol/GPU", "megatron vol/GPU", "reduction",
+        ],
+    );
+    let cases: Vec<(String, tensor3d::models::NetworkDesc, NetKind, usize, usize, Machine)> = gpt::table3()
+        .into_iter()
+        .map(|r| {
+            (r.label.to_string(), r.dims.network(), NetKind::Transformer, r.batch, r.gpus, Machine::polaris())
+        })
+        .chain(unet::table2().into_iter().map(|r| {
+            (r.label.to_string(), r.dims.network(), NetKind::Unet, r.batch, r.gpus, Machine::perlmutter())
+        }))
+        .collect();
+
+    for (label, net, kind, batch, gpus, machine) in cases {
+        let floor = planner::min_g_tensor(&net, &machine, gpus);
+        let plan = planner::plan(&net, kind, batch, gpus, &machine);
+        let meg_mesh = Mesh::new(plan.mesh.g_data, 1, plan.mesh.g_tensor(), 1);
+        let meg_vol = comm_model::tensor3d_network_volume(&net, batch as f64, &meg_mesh);
+        t.row(vec![
+            label,
+            gpus.to_string(),
+            machine.name.clone(),
+            floor.to_string(),
+            format!("({},{},{})", plan.mesh.g_data, plan.mesh.g_r, plan.mesh.g_c),
+            format!("{:.2}", plan.gc_closed_form),
+            fmt_bytes(plan.volume_elems * strategies::BYTES_PER_ELEM),
+            fmt_bytes(meg_vol * strategies::BYTES_PER_ELEM),
+            format!("{:.0}%", (1.0 - plan.volume_elems / meg_vol) * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "rule 1 (Eq. 5): maximize g_data subject to memory; rule 2 (Eq. 7/9): G_c near the closed form."
+    );
+}

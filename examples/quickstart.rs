@@ -1,0 +1,47 @@
+//! Quickstart: plan a decomposition with the §5 communication model, then
+//! simulate one training iteration of Tensor3D vs Megatron-LM on the
+//! modelled cluster.  No artifacts needed — this exercises the analytic +
+//! simulation layers only (see train_gpt_mini for the live stack).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tensor3d::models::gpt;
+use tensor3d::planner::{self, NetKind};
+use tensor3d::sim::Machine;
+use tensor3d::strategies::{self, Strategy};
+use tensor3d::util::table::fmt_bytes;
+
+fn main() {
+    let machine = Machine::polaris();
+    let row = &gpt::table3()[1]; // GPT 10B, 64 GPUs
+    let net = row.dims.network();
+
+    println!("=== 1. plan the 4-D decomposition (paper §5) ===");
+    let plan = planner::plan(&net, NetKind::Transformer, row.batch, row.gpus, &machine);
+    println!(
+        "{} on {} x {}: recommended g_data={} g_r={} g_c={} (closed-form G_c = {:.2})",
+        net.name, row.gpus, machine.name, plan.mesh.g_data, plan.mesh.g_r, plan.mesh.g_c,
+        plan.gc_closed_form
+    );
+    println!(
+        "  state/GPU {}  modelled volume/GPU {}",
+        fmt_bytes(plan.state_bytes),
+        fmt_bytes(plan.volume_elems * strategies::BYTES_PER_ELEM)
+    );
+
+    println!("\n=== 2. simulate one iteration (Fig. 8 point) ===");
+    for (label, strat) in [
+        ("tensor3d (depth 2)", Strategy::Tensor3d { depth: 2, transpose_opt: true }),
+        ("tensor3d (sync)", Strategy::Tensor3d { depth: 1, transpose_opt: true }),
+        ("megatron-lm", Strategy::Megatron),
+    ] {
+        let (time, gb) = strategies::iterate(strat, &net, &plan.mesh, row.batch, &machine);
+        let mfu = strategies::mfu(&net, row.batch, row.gpus, time, &machine);
+        println!(
+            "  {label:<22} {time:>7.2} s/iter   {:>10}/GPU   MFU {:>5.1}%",
+            fmt_bytes(gb * 1e9),
+            mfu * 100.0
+        );
+    }
+    println!("\nNext: `make artifacts && cargo run --release --example train_gpt_mini`");
+}

@@ -1,0 +1,27 @@
+//! The paper's weak-scaling study (Figures 7 and 8) end to end on the
+//! cluster simulator: U-Nets 3.5B-28B on modelled Perlmutter and GPTs
+//! 5B-40B on modelled Polaris, Tensor3D vs Megatron-LM, with the volume
+//! curves whose asymptotics §7.2 derives (Eq. 12 vs Eq. 13).  Writes CSVs
+//! under results/.
+//!
+//! Run: `cargo run --release --example weak_scaling_study`
+
+use tensor3d::planner::NetKind;
+use tensor3d::repro;
+
+fn main() {
+    let _ = std::fs::create_dir_all("results");
+    let fig7 = repro::weak_scaling(NetKind::Unet);
+    println!("{fig7}");
+    std::fs::write("results/fig7_weak_scaling_unet.txt", &fig7).unwrap();
+
+    let fig8 = repro::weak_scaling(NetKind::Transformer);
+    println!("{fig8}");
+    std::fs::write("results/fig8_weak_scaling_gpt.txt", &fig8).unwrap();
+
+    let fig9 = repro::fig9_strong_scaling();
+    println!("{fig9}");
+    std::fs::write("results/fig9_strong_scaling.txt", &fig9).unwrap();
+
+    println!("written: results/fig7_weak_scaling_unet.txt, fig8_weak_scaling_gpt.txt, fig9_strong_scaling.txt");
+}

@@ -1,0 +1,191 @@
+"""AOT compiler: lower every L2 entry point to HLO text + manifest.json.
+
+Usage (from python/):
+
+    python -m compile.aot --config gpt-nano --grid 2x2 --batch 8 \
+        --depth 2 --backend jnp --out ../artifacts
+
+Emits ``<out>/<config>_r<G_r>c<G_c>d<depth>b<batch>_<backend>/``
+containing one ``<entry>.hlo.txt`` per entry point plus ``manifest.json``
+describing shapes/dtypes, which the Rust runtime consumes.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here, at build time.  The Rust binary is self-contained
+once the artifacts exist; ``make artifacts`` is a no-op when inputs are
+unchanged (mtime-based, via Make).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _aval(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dt(a) -> str:
+    return {"float32": "f32", "int32": "i32", "bfloat16": "bf16"}[str(a.dtype)]
+
+
+def build_entries(cfg: M.ModelConfig, grid: M.GridConfig, batch: int, backend: str):
+    """The full entry-point table for one (config, grid, batch) tuple.
+
+    Returns list of (name, fn, avals, n_outputs).  Shapes follow
+    sharded_ref.py exactly; see that module for the collective protocol
+    between entries.
+    """
+    M.validate(cfg, grid, batch)
+    h, f, v, s = cfg.hidden, cfg.ffn, cfg.vocab, cfg.seq
+    hr, hc = h // grid.g_r, h // grid.g_c
+    tc, fc, vc = 3 * h // grid.g_c, f // grid.g_c, v // grid.g_c
+    hl, dh = cfg.heads // grid.g_c, cfg.head_dim
+    mb = batch // (grid.g_data * grid.depth)  # sequences per exec
+    m = mb * s                                # rows per exec
+    total_rows = batch * s                    # global mean divisor
+    f32, i32 = jnp.float32, jnp.int32
+
+    B = backend
+    ent = []
+
+    def add(name, fn, avals, n_out):
+        ent.append((name, fn, avals, n_out))
+
+    add("embed_fwd", M.embed_fwd, [_aval((mb, s), i32), _aval((v, hr)), _aval((s, hr))], 1)
+    # NOTE: tokens are not an input here — XLA prunes unused parameters at
+    # compile time, so the entry signature must only carry live arguments.
+    add("embed_bwd_pos", lambda dx: dx.reshape(mb, s, hr).sum(axis=0),
+        [_aval((m, hr))], 1)
+    add("embed_bwd_table", functools.partial(M.embed_bwd_table, vocab=v),
+        [_aval((mb, s), i32), _aval((m, hr))], 1)
+
+    add("ln_stats", M.ln_stats, [_aval((m, hr))], 1)
+    add("ln_apply", functools.partial(M.ln_apply, total_h=h),
+        [_aval((m, hr)), _aval((m, 2)), _aval((hr,)), _aval((hr,))], 1)
+    add("ln_bwd_stats", functools.partial(M.ln_bwd_stats, total_h=h),
+        [_aval((m, hr)), _aval((m, 2)), _aval((hr,)), _aval((m, hr))], 1)
+    add("ln_bwd_finish", functools.partial(M.ln_bwd_finish, total_h=h),
+        [_aval((m, hr)), _aval((m, 2)), _aval((hr,)), _aval((m, hr)), _aval((m, 2))], 3)
+
+    for tag, k, n in [
+        ("qkv", hr, tc), ("proj", hc, hr), ("mlp1", hr, fc),
+        ("mlp2", fc, hr), ("head", hr, vc),
+    ]:
+        add(f"mm_{tag}_fwd", functools.partial(M.mm_fwd, backend=B),
+            [_aval((m, k)), _aval((k, n))], 1)
+        add(f"mm_{tag}_dx", functools.partial(M.mm_dx, backend=B),
+            [_aval((m, n)), _aval((k, n))], 1)
+        add(f"mm_{tag}_dw", functools.partial(M.mm_dw, backend=B),
+            [_aval((m, k)), _aval((m, n))], 1)
+
+    add("attn_fwd",
+        functools.partial(M.attn_fwd, mb=mb, seq=s, heads_local=hl, head_dim=dh),
+        [_aval((m, 3 * hl * dh))], 1)
+    add("attn_bwd",
+        functools.partial(M.attn_bwd, mb=mb, seq=s, heads_local=hl, head_dim=dh),
+        [_aval((m, 3 * hl * dh)), _aval((m, hl * dh))], 1)
+
+    gelu_b = jnp.zeros((fc,), f32)
+    add("gelu_fwd", lambda u: M.bias_act_fwd(u, jnp.zeros((u.shape[1],), u.dtype), "gelu"),
+        [_aval((m, fc))], 1)
+    add("gelu_bwd", lambda u, dv: M.bias_act_bwd(u, jnp.zeros((u.shape[1],), u.dtype), dv, "gelu")[0],
+        [_aval((m, fc)), _aval((m, fc))], 1)
+
+    add("xent_rowmax", M.xent_rowmax, [_aval((m, vc))], 1)
+    add("xent_sumexp", M.xent_sumexp, [_aval((m, vc)), _aval((m,))], 1)
+    add("xent_loss_grad", functools.partial(M.xent_loss_grad, total_rows=total_rows),
+        [_aval((m, vc)), _aval((m,), i32), _aval((m,)), _aval((m,)), _aval((1,), i32)], 2)
+
+    return ent, dict(rows_per_exec=m, seqs_per_exec=mb, total_rows=total_rows)
+
+
+def lower_all(cfg: M.ModelConfig, grid: M.GridConfig, batch: int, backend: str,
+              out_dir: str, quiet: bool = False):
+    entries, meta = build_entries(cfg, grid, batch, backend)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "hidden": cfg.hidden,
+            "layers": cfg.layers, "heads": cfg.heads, "seq": cfg.seq,
+            "head_dim": cfg.head_dim, "ffn": cfg.ffn, "params": cfg.params(),
+        },
+        "grid": {
+            "g_data": grid.g_data, "g_r": grid.g_r, "g_c": grid.g_c,
+            "depth": grid.depth,
+        },
+        "batch": batch,
+        "backend": backend,
+        **meta,
+        "entries": [],
+    }
+    for name, fn, avals, n_out in entries:
+        lowered = jax.jit(fn).lower(*avals)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        out_avals = jax.eval_shape(fn, *avals)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        manifest["entries"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [{"shape": list(a.shape), "dtype": _dt(a)} for a in avals],
+            "outputs": [{"shape": list(a.shape), "dtype": _dt(a)} for a in out_avals],
+        })
+        if not quiet:
+            print(f"  lowered {name:18s} ({len(text)//1024} KiB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def artifact_dirname(cfg_name: str, grid: M.GridConfig, batch: int, backend: str) -> str:
+    return f"{cfg_name}_r{grid.g_r}c{grid.g_c}d{grid.depth}b{batch}_{backend}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="gpt-nano", choices=sorted(M.CONFIGS))
+    ap.add_argument("--grid", default="1x1", help="G_r x G_c, e.g. 2x2")
+    ap.add_argument("--g-data", type=int, default=1)
+    ap.add_argument("--depth", type=int, default=1,
+                    help="overdecomposition degree (paper §4.2 uses 2)")
+    ap.add_argument("--batch", type=int, default=8, help="global batch (sequences)")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args(argv)
+
+    g_r, g_c = (int(t) for t in args.grid.lower().split("x"))
+    grid = M.GridConfig(g_data=args.g_data, g_r=g_r, g_c=g_c, depth=args.depth)
+    cfg = M.CONFIGS[args.config]
+    out_dir = os.path.join(args.out, artifact_dirname(cfg.name, grid, args.batch, args.backend))
+    print(f"AOT: {cfg.name} grid={g_r}x{g_c} g_data={grid.g_data} depth={grid.depth} "
+          f"batch={args.batch} backend={args.backend} -> {out_dir}")
+    lower_all(cfg, grid, args.batch, args.backend, out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

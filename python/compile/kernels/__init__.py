@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for Tensor3D.
+
+Each kernel is the per-GPU *local* hot spot of Algorithm 1 (the shard GEMM
+and its fusions).  Kernels are written in TPU idiom -- BlockSpec tiling for
+VMEM, MXU-aligned 128-multiple tiles where shapes allow -- and are lowered
+with ``interpret=True`` so the emitted HLO runs on the CPU PJRT client that
+the Rust coordinator drives (real-TPU lowering emits a Mosaic custom call
+the CPU plugin cannot execute; see DESIGN.md section Hardware-Adaptation).
+
+Public surface:
+  matmul.matmul             -- blocked C = A @ B
+  fused_linear.fused_linear -- act(A @ B + bias)
+  layernorm.layernorm       -- row-wise layer normalization
+  softmax_xent.softmax_xent -- fused log-softmax + NLL (vocab-sharded aware)
+  ref                       -- pure-jnp oracles used by pytest
+"""
+from . import matmul, fused_linear, layernorm, softmax_xent, ref  # noqa: F401

@@ -1,0 +1,96 @@
+"""Row-wise LayerNorm Pallas kernel.
+
+Two entry points matching the sharded-LN protocol of the Rust coordinator
+(DESIGN.md: activations are column-sharded across the grid, so the mean and
+variance over the full hidden dimension need a 2-float-per-row all-reduce
+that Rust performs between these two kernels):
+
+  ln_partials(x)           -> (rows, 2) partial [sum, sum-of-squares]
+  ln_apply(x, stats, g, b) -> normalized rows given *global* stats
+
+``layernorm`` composes the two for the unsharded (serial / oracle-vs-kernel
+test) case.  The kernel tiles rows into VMEM-sized blocks; the hidden dim
+of one row block always fits (H <= a few K for our configs), so each grid
+step is one HBM pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _row_block(rows: int, cols: int) -> int:
+    """Pick a row-block size so a (br, cols) f32 tile is <= ~2 MiB."""
+    target = max(1, (2 * 1024 * 1024) // (4 * max(cols, 1)))
+    return pick_block(rows, min(rows, target))
+
+
+def _partials_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    s = jnp.sum(x, axis=1)
+    ss = jnp.sum(x * x, axis=1)
+    o_ref[...] = jnp.stack([s, ss], axis=1)
+
+
+@jax.jit
+def ln_partials(x: jax.Array) -> jax.Array:
+    """Per-row [sum, sum_sq] over the *local* hidden shard: (m, h) -> (m, 2)."""
+    m, h = x.shape
+    br = _row_block(m, h)
+    return pl.pallas_call(
+        _partials_kernel,
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, h), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 2), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _apply_kernel(x_ref, stats_ref, g_ref, b_ref, o_ref, *, total_h, eps):
+    x = x_ref[...].astype(jnp.float32)
+    s = stats_ref[..., 0]
+    ss = stats_ref[..., 1]
+    mean = s / total_h
+    var = ss / total_h - mean * mean
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean[:, None]) * rstd[:, None]
+    o_ref[...] = (xhat * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("total_h", "eps"))
+def ln_apply(x: jax.Array, stats: jax.Array, gamma: jax.Array, beta: jax.Array,
+             total_h: int, eps: float = 1e-5) -> jax.Array:
+    """Normalize local shard ``x`` (m, h_local) with global stats (m, 2).
+
+    ``total_h`` is the full (unsharded) hidden width the stats were reduced
+    over; gamma/beta are the local shard's slices (h_local,).
+    """
+    m, h = x.shape
+    br = _row_block(m, h)
+    kernel = functools.partial(_apply_kernel, total_h=float(total_h), eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // br,),
+        in_specs=[
+            pl.BlockSpec((br, h), lambda i: (i, 0)),
+            pl.BlockSpec((br, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, h), lambda i: (0, 0)),
+            pl.BlockSpec((1, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, h), x.dtype),
+        interpret=True,
+    )(x, stats, gamma.reshape(1, h), beta.reshape(1, h))
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    """Unsharded layernorm = partials + apply with h_local == total_h."""
+    stats = ln_partials(x)
+    return ln_apply(x, stats, gamma, beta, total_h=x.shape[1], eps=eps)

@@ -1,0 +1,178 @@
+"""Blocked matrix-multiply Pallas kernel — the shard-GEMM hot spot.
+
+This is the per-GPU local computation of Algorithm 1 in the paper
+(``X_i @ W_ij`` in the forward pass, ``dY_j @ W_ij^T`` and ``X_i^T @ dY_j``
+in the backward pass — the transposed variants are expressed by passing
+pre-transposed operands so a single kernel serves all three).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * the CUDA threadblock tiling of the paper's GPU kernels becomes a 3-D
+    Pallas ``grid`` of ``(m/bm, n/bn, k/bk)`` with ``BlockSpec`` index maps;
+  * tiles live in VMEM (the TPU scratchpad); block sizes are chosen so
+    ``(bm*bk + bk*bn + bm*bn) * 4B`` stays well under the ~16 MiB VMEM
+    budget, leaving headroom for double buffering;
+  * the inner dimension iterates fastest so the f32 accumulator tile is
+    reused across the k-loop and only written back once — this is the MXU
+    (128x128 systolic array) friendly schedule, with tile edges padded to
+    multiples of the 8x128 vreg layout where shapes allow.
+
+Run with ``interpret=True`` everywhere: the lowered HLO is plain XLA ops
+that the CPU PJRT client (Rust side) executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget we tile for (bytes).  Real TPUs have ~16 MiB of VMEM per
+# core; we target half of it so the compiler has room to double-buffer the
+# HBM->VMEM streams for the A and B tiles.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+# MXU systolic array edge; tiles snap to multiples of this when possible.
+MXU_EDGE = 128
+# f32 vector register sublane size: min sensible tile in the row dim.
+SUBLANE = 8
+
+
+def _divisors_desc(n: int, cap: int) -> list:
+    """Divisors of ``n`` that are <= cap, descending."""
+    out = [d for d in range(1, min(n, cap) + 1) if n % d == 0]
+    out.sort(reverse=True)
+    return out
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target, preferring multiples
+    of MXU_EDGE, then of SUBLANE, then anything."""
+    divs = _divisors_desc(dim, target)
+    for d in divs:
+        if d % MXU_EDGE == 0:
+            return d
+    for d in divs:
+        if d % SUBLANE == 0:
+            return d
+    return divs[0] if divs else dim
+
+
+def pick_blocks(m: int, k: int, n: int):
+    """Choose (bm, bk, bn) fitting the VMEM budget.
+
+    Strategy: start from MXU-friendly 256x256x256 and shrink to divisors.
+    The A-tile (bm x bk), B-tile (bk x bn) and f32 accumulator (bm x bn)
+    must fit VMEM_BUDGET together.
+    """
+    bm = pick_block(m, 256)
+    bn = pick_block(n, 256)
+    bk = pick_block(k, 256)
+
+    def footprint(bm, bk, bn):
+        return 4 * (bm * bk + bk * bn + bm * bn)
+
+    # Shrink the largest tile edge until we fit.
+    while footprint(bm, bk, bn) > VMEM_BUDGET:
+        if bk >= bm and bk >= bn and bk > 1:
+            bk = pick_block(k, bk // 2)
+        elif bm >= bn and bm > 1:
+            bm = pick_block(m, bm // 2)
+        elif bn > 1:
+            bn = pick_block(n, bn // 2)
+        else:  # pragma: no cover - degenerate shapes always fit
+            break
+    return bm, bk, bn
+
+
+def vmem_bytes(m: int, k: int, n: int) -> int:
+    """VMEM footprint (bytes) of the chosen tiling — used by the §Perf
+    analysis in DESIGN.md / EXPERIMENTS.md."""
+    bm, bk, bn = pick_blocks(m, k, n)
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int) -> float:
+    """Fraction of MXU lanes a (bm, bk, bn) tiling keeps busy.
+
+    A tile edge that is not a multiple of 128 wastes the remainder lanes of
+    the systolic array on its last pass; this returns the utilization of
+    the steady state, i.e. prod(edge / ceil128(edge) rounded up).
+    """
+    bm, bk, bn = pick_blocks(m, k, n)
+
+    def eff(e):
+        pad = -e % MXU_EDGE
+        return e / (e + pad) if e + pad else 1.0
+
+    return eff(bm) * eff(bk) * eff(bn)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """Grid = (m/bm, n/bn, k/bk); k innermost; f32 accumulator in VMEM."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def matmul(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A @ B via the blocked Pallas kernel.
+
+    A: (m, k), B: (k, n) -> C: (m, n).  Accumulation is always f32
+    (``preferred_element_type``), output cast to ``out_dtype`` (defaults to
+    the promoted input dtype) — this mirrors the paper's mixed-precision
+    setup where bf16 operands accumulate in f32 on the MXU.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"matmul inner dims mismatch: {a.shape} @ {b.shape}")
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    bm, bk, bn = pick_blocks(m, k, n)
+    k_steps = k // bk
+
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pl.pltpu.VMEM((bm, bn), jnp.float32)]
+        if hasattr(pl, "pltpu")
+        else [_vmem_scratch((bm, bn))],
+        interpret=True,
+    )(a, b)
+
+
+def _vmem_scratch(shape):
+    """VMEM scratch allocation, tolerant of pallas API layout differences."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:  # pragma: no cover - interpret mode fallback
+        return pl.MemoryRef(shape, jnp.float32)
+
+
+def matmul_at(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A^T @ B — the dW = X^T dY step of Algorithm 1 (line 14)."""
+    return matmul(a.T, b)
+
+
+def matmul_bt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B^T — the dX = dY W^T step of Algorithm 1 (line 13)."""
+    return matmul(a, b.T)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis
+and asserts allclose between each kernel and its oracle here.  Nothing in
+this module uses Pallas.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a, b, out_dtype=None):
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    return jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def gelu(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fused_linear(a, b, bias, act="none"):
+    y = jnp.dot(a, b, preferred_element_type=jnp.float32) + bias.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = gelu(y)
+    elif act != "none":
+        raise ValueError(act)
+    return y.astype(jnp.promote_types(a.dtype, b.dtype))
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=1, keepdims=True)
+    xhat = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (xhat * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def softmax_xent(logits, labels):
+    """Mean NLL and gradient wrt logits."""
+    m = logits.shape[0]
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=1)
+    picked = jnp.take_along_axis(lf, labels[:, None], axis=1)[:, 0]
+    loss = jnp.mean(logz - picked)
+    softmax = jnp.exp(lf - logz[:, None])
+    onehot = jax.nn.one_hot(labels, logits.shape[1], dtype=jnp.float32)
+    dlogits = ((softmax - onehot) / m).astype(logits.dtype)
+    return loss, dlogits

@@ -1,0 +1,513 @@
+"""Layer-2 JAX model: per-shard GPT segment functions for Algorithm 1.
+
+The Rust coordinator owns every collective; this module defines the *local*
+computation between collectives as standalone jittable functions, each of
+which aot.py lowers to its own HLO artifact.  The decomposition follows the
+paper exactly:
+
+  * activations are column-sharded: at a block boundary ``x_i`` is the
+    ``H/G_r`` column slice held by every GPU of grid row ``i``
+    (replicated across the row's ``G_c`` members);
+  * weights are 2-D sharded ``(G_r x G_c)``; *alternate* layers store the
+    transposed layout of §4.1 (the attention out-projection and the second
+    MLP matmul), which flips the forward all-reduce from the column
+    communicator to the row communicator and removes all layer-boundary
+    redistribution;
+  * LayerNorm over the sharded hidden dim uses the 2-floats-per-row
+    partial-stats protocol (ln_stats -> AR -> ln_apply), and its backward
+    the symmetric one;
+  * the output head is a plain Algorithm-1 FC over the vocabulary, with
+    the fused vocab-parallel softmax-xent protocol of kernels/softmax_xent.
+
+With ``G_r == G_c == 1`` the same entry points compose into the serial
+reference model — there is deliberately no separate serial code path, so
+the Fig.-6 loss-equivalence experiment compares the *same* numerics under
+different decompositions.
+
+Every matmul routes through the L1 Pallas kernel (``kernels.matmul``);
+``backend='jnp'`` swaps in the pure-jnp oracle, which lowers to a single
+``dot`` HLO (used for the fast CPU training path; the pallas and jnp
+artifacts are asserted allclose in python/tests).
+"""
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mm_kernel
+from .kernels import layernorm as ln_kernel
+from .kernels import softmax_xent as sx_kernel
+from .kernels import ref as kref
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """GPT architecture hyper-parameters (full, unsharded dims)."""
+
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    seq: int
+
+    @property
+    def ffn(self) -> int:
+        return 4 * self.hidden
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def params(self) -> int:
+        """Total parameter count (embeddings + blocks + final LN + head)."""
+        h, f, v, s = self.hidden, self.ffn, self.vocab, self.seq
+        per_block = (
+            h * 3 * h + 3 * h        # qkv + bias
+            + h * h + h              # proj + bias
+            + h * f + f              # mlp1 + bias
+            + f * h + h              # mlp2 + bias
+            + 4 * h                  # 2 x LN gamma/beta
+        )
+        return v * h + s * h + self.layers * per_block + 2 * h + h * v + v
+
+
+@dataclasses.dataclass(frozen=True)
+class GridConfig:
+    """The 4-D decomposition: G = g_data * g_r * g_c, depth-way
+    overdecomposition of each group's batch shard (§4.2)."""
+
+    g_data: int = 1
+    g_r: int = 1
+    g_c: int = 1
+    depth: int = 1  # sub-shards per batch shard (paper uses 2)
+
+    @property
+    def g_tensor(self) -> int:
+        return self.g_r * self.g_c
+
+    @property
+    def world(self) -> int:
+        return self.g_data * self.g_tensor
+
+
+# Registry of live-runnable configs (the table-3 style giants are described
+# on the Rust side for the simulator; these are the ones we actually train).
+CONFIGS: Dict[str, ModelConfig] = {
+    # smoke-test scale
+    "gpt-nano": ModelConfig("gpt-nano", vocab=256, hidden=64, layers=2, heads=4, seq=32),
+    # ~10M params; fast CPU demo scale
+    "gpt-micro": ModelConfig("gpt-micro", vocab=1024, hidden=256, layers=4, heads=8, seq=128),
+    # ~27M params
+    "gpt-mini": ModelConfig("gpt-mini", vocab=4096, hidden=512, layers=8, heads=8, seq=128),
+    # ~124M params (GPT-2 small shape): the end-to-end driver target
+    "gpt-100m": ModelConfig("gpt-100m", vocab=8192, hidden=768, layers=12, heads=12, seq=256),
+}
+
+
+def validate(cfg: ModelConfig, grid: GridConfig, batch: int) -> None:
+    """Check that the decomposition divides the model evenly."""
+    if cfg.hidden % (grid.g_r * 1) != 0:
+        raise ValueError(f"hidden {cfg.hidden} % g_r {grid.g_r} != 0")
+    if cfg.hidden % grid.g_c != 0 or cfg.ffn % grid.g_c != 0:
+        raise ValueError(f"hidden/ffn not divisible by g_c {grid.g_c}")
+    if cfg.ffn % grid.g_r != 0:
+        raise ValueError(f"ffn {cfg.ffn} % g_r {grid.g_r} != 0")
+    if cfg.heads % grid.g_c != 0:
+        raise ValueError(f"heads {cfg.heads} % g_c {grid.g_c} != 0")
+    if cfg.vocab % grid.g_c != 0 or cfg.vocab % grid.g_r != 0:
+        raise ValueError(f"vocab {cfg.vocab} not divisible by grid")
+    if batch % (grid.g_data * grid.depth) != 0:
+        raise ValueError(
+            f"batch {batch} % (g_data*depth)={grid.g_data * grid.depth} != 0"
+        )
+
+
+# --------------------------------------------------------------------------
+# Segment functions (the units Rust executes between collectives)
+# --------------------------------------------------------------------------
+
+
+def matmul_fn(backend: str):
+    if backend == "pallas":
+        return mm_kernel.matmul
+    if backend == "jnp":
+        return kref.matmul
+    raise ValueError(f"backend must be 'pallas' or 'jnp', got {backend!r}")
+
+
+def embed_fwd(tokens, wemb, wpos):
+    """(mb, S) int32, (V, h_r), (S, h_r) -> (mb*S, h_r) local embedding."""
+    mb, s = tokens.shape
+    x = wemb[tokens] + wpos[None, :, :]
+    return x.reshape(mb * s, wemb.shape[1])
+
+
+def embed_bwd(tokens, dx):
+    """Scatter-add gradient into the embedding shards."""
+    mb, s = tokens.shape
+    hr = dx.shape[1]
+    dx3 = dx.reshape(mb, s, hr)
+    dwpos = jnp.sum(dx3, axis=0)
+    return dx3, dwpos
+
+
+def embed_bwd_table(tokens, dx, vocab: int):
+    """d(wemb): scatter-add over token ids. Separate entry because the
+    output shape depends on the (static) vocab size."""
+    mb, s = tokens.shape
+    hr = dx.shape[1]
+    flat = dx.reshape(mb * s, hr)
+    dwemb = jnp.zeros((vocab, hr), flat.dtype).at[tokens.reshape(-1)].add(flat)
+    return dwemb
+
+
+def mm_fwd(x, w, backend="pallas"):
+    """Local partial of Algorithm 1 line 6: X_i @ W_ij (AR done by Rust)."""
+    return matmul_fn(backend)(x, w)
+
+
+def mm_dx(dy, w, backend="pallas"):
+    """Local partial of Algorithm 1 line 13: dY_j @ W_ij^T."""
+    return matmul_fn(backend)(dy, w.T)
+
+
+def mm_dw(x, dy, backend="pallas"):
+    """Algorithm 1 line 14 (fully local): X_i^T @ dY_j."""
+    return matmul_fn(backend)(x.T, dy)
+
+
+def bias_act_fwd(y, bias, act: str):
+    """Post-all-reduce epilogue: add the (sharded) bias, apply activation."""
+    out = y + bias[None, :]
+    if act == "gelu":
+        out = kref.gelu(out)
+    elif act != "none":
+        raise ValueError(act)
+    return out
+
+
+def bias_act_bwd(y, bias, dz, act: str):
+    """d(pre-bias y) and d(bias) for the epilogue above."""
+    if act == "gelu":
+        _, vjp = jax.vjp(lambda t: kref.gelu(t + bias[None, :]), y)
+        dy = vjp(dz)[0]
+    elif act == "none":
+        dy = dz
+    else:
+        raise ValueError(act)
+    dbias = jnp.sum(dy, axis=0)
+    return dy, dbias
+
+
+def attn_fwd(qkv, *, mb: int, seq: int, heads_local: int, head_dim: int):
+    """Causal multi-head attention over this GPU's local heads.
+
+    qkv: (mb*seq, heads_local*3*head_dim), laid out head-major so a vocab
+    column shard owns whole heads: per head [q | k | v].
+    """
+    hl, dh = heads_local, head_dim
+    x = qkv.reshape(mb, seq, hl, 3 * dh)
+    q, k, v = x[..., :dh], x[..., dh:2 * dh], x[..., 2 * dh:]
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) * scale
+    causal = jnp.tril(jnp.ones((seq, seq), bool))
+    scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out.reshape(mb * seq, hl * dh)
+
+
+def attn_bwd(qkv, dout, *, mb: int, seq: int, heads_local: int, head_dim: int):
+    """VJP of attn_fwd with in-segment recompute (activation checkpointing:
+    only qkv is cached across the fwd/bwd boundary, as in the paper)."""
+    f = functools.partial(
+        attn_fwd, mb=mb, seq=seq, heads_local=heads_local, head_dim=head_dim
+    )
+    _, vjp = jax.vjp(f, qkv)
+    return vjp(dout)[0]
+
+
+def ln_stats(x):
+    return ln_kernel.ln_partials(x)
+
+
+def ln_apply(x, stats, gamma, beta, *, total_h: int):
+    return ln_kernel.ln_apply(x, stats, gamma, beta, total_h=total_h)
+
+
+def _ln_xhat(x, stats, total_h: float, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = stats[:, 0] / total_h
+    var = stats[:, 1] / total_h - mean * mean
+    rstd = jax.lax.rsqrt(var + eps)
+    return (xf - mean[:, None]) * rstd[:, None], rstd
+
+
+def ln_bwd_stats(x, stats, gamma, dy, *, total_h: int):
+    """Local partial sums for the LN backward: per row [sum(dy*g),
+    sum(dy*g*xhat)] over the local hidden shard (m, 2).  Rust all-reduces
+    this over the column communicator."""
+    xhat, _ = _ln_xhat(x, stats, float(total_h))
+    dyg = dy.astype(jnp.float32) * gamma.astype(jnp.float32)[None, :]
+    return jnp.stack([jnp.sum(dyg, axis=1), jnp.sum(dyg * xhat, axis=1)], axis=1)
+
+
+def ln_bwd_finish(x, stats, gamma, dy, bstats, *, total_h: int):
+    """dx, dgamma, dbeta given globally reduced backward stats."""
+    xhat, rstd = _ln_xhat(x, stats, float(total_h))
+    dyg = dy.astype(jnp.float32) * gamma.astype(jnp.float32)[None, :]
+    h = float(total_h)
+    mean_dyg = bstats[:, 0] / h
+    mean_dyg_xhat = bstats[:, 1] / h
+    dx = rstd[:, None] * (dyg - mean_dyg[:, None] - xhat * mean_dyg_xhat[:, None])
+    dgamma = jnp.sum(dy.astype(jnp.float32) * xhat, axis=0)
+    dbeta = jnp.sum(dy.astype(jnp.float32), axis=0)
+    return dx.astype(x.dtype), dgamma, dbeta
+
+
+def xent_rowmax(logits):
+    return sx_kernel.xent_rowmax(logits)
+
+
+def xent_sumexp(logits, gmax):
+    return sx_kernel.xent_sumexp(logits, gmax)
+
+
+def xent_loss_grad(logits, labels, gmax, gsum, vocab_offset, *, total_rows: int):
+    return sx_kernel.xent_loss_grad(
+        logits, labels, gmax, gsum, vocab_offset, total_rows
+    )
+
+
+def adamw_update(w, g, m, v, t, lr, beta1, beta2, eps, weight_decay):
+    """One fused AdamW step over a parameter shard (all scalars are runtime
+    inputs so one artifact serves the whole schedule)."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    w2 = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+    return w2, m2, v2
+
+
+def grad_sq_sum(g):
+    """Sum of squares of a gradient shard — local term of the global grad
+    norm (clip decision is made by the coordinator after an all-reduce)."""
+    gf = g.astype(jnp.float32)
+    return jnp.sum(gf * gf).reshape(1)
+
+
+def scale_buf(g, scale):
+    """g * scale — used for gradient clipping and data-parallel averaging."""
+    return g * scale
+
+
+# --------------------------------------------------------------------------
+# Whole-model serial reference (used by python tests to validate the
+# segment decomposition end-to-end before Rust ever runs it)
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic full (unsharded) parameter set (python tests only).
+
+    The Rust trainer has its own deterministic initializer
+    (rust/src/layout/init.rs); serial-vs-parallel equivalence runs both
+    configurations inside Rust from the same seed, so the two language
+    sides never need to agree on an RNG stream.
+    """
+    import numpy as np
+
+    h, f, v, s = cfg.hidden, cfg.ffn, cfg.vocab, cfg.seq
+    scale = 0.02
+
+    def norm(rng, shape):
+        return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+    rng = np.random.default_rng(seed)
+    p = {
+        "wemb": norm(rng, (v, h)),
+        "wpos": norm(rng, (s, h)),
+        "head_w": norm(rng, (h, v)),
+        "head_b": jnp.zeros((v,), jnp.float32),
+        "lnf_g": jnp.ones((h,), jnp.float32),
+        "lnf_b": jnp.zeros((h,), jnp.float32),
+    }
+    for l in range(cfg.layers):
+        p[f"b{l}.ln1_g"] = jnp.ones((h,), jnp.float32)
+        p[f"b{l}.ln1_b"] = jnp.zeros((h,), jnp.float32)
+        p[f"b{l}.wqkv"] = norm(rng, (h, 3 * h))
+        p[f"b{l}.bqkv"] = jnp.zeros((3 * h,), jnp.float32)
+        p[f"b{l}.wproj"] = norm(rng, (h, h)) / math.sqrt(2 * cfg.layers)
+        p[f"b{l}.bproj"] = jnp.zeros((h,), jnp.float32)
+        p[f"b{l}.ln2_g"] = jnp.ones((h,), jnp.float32)
+        p[f"b{l}.ln2_b"] = jnp.zeros((h,), jnp.float32)
+        p[f"b{l}.wmlp1"] = norm(rng, (h, f))
+        p[f"b{l}.bmlp1"] = jnp.zeros((f,), jnp.float32)
+        p[f"b{l}.wmlp2"] = norm(rng, (f, h)) / math.sqrt(2 * cfg.layers)
+        p[f"b{l}.bmlp2"] = jnp.zeros((h,), jnp.float32)
+    return p
+
+
+def qkv_head_major(w, b, heads: int, head_dim: int):
+    """Permute a (h, 3h) qkv weight from [Q|K|V] to head-major
+    [q0|k0|v0|q1|k1|v1|...] so that column shards own whole heads."""
+    h = w.shape[0]
+    wq, wk, wv = w[:, :h], w[:, h:2 * h], w[:, 2 * h:]
+    bq, bk, bv = b[:h], b[h:2 * h], b[2 * h:]
+
+    def per_head(t):
+        return t.reshape(t.shape[0], heads, head_dim) if t.ndim == 2 else t.reshape(heads, head_dim)
+
+    wq, wk, wv = per_head(wq), per_head(wk), per_head(wv)
+    bq, bk, bv = per_head(bq), per_head(bk), per_head(bv)
+    w2 = jnp.concatenate([wq, wk, wv], axis=2).reshape(h, 3 * h)
+    b2 = jnp.concatenate([bq, bk, bv], axis=1).reshape(3 * h)
+    return w2, b2
+
+
+def serial_forward_backward(cfg: ModelConfig, params, tokens, labels,
+                            backend="jnp"):
+    """Full serial fwd+bwd assembled from the SAME segment functions with a
+    1x1 grid — the oracle for the sharded execution tests and the source of
+    truth for the Fig. 6 loss-equivalence run."""
+    mb, s = tokens.shape
+    h = cfg.hidden
+    m = mb * s
+
+    grads = {}
+    x = embed_fwd(tokens, params["wemb"], params["wpos"])
+    resid_in = [x]
+    cache = []
+    for l in range(cfg.layers):
+        pre = x
+        st1 = ln_stats(x)
+        xn = ln_apply(x, st1, params[f"b{l}.ln1_g"], params[f"b{l}.ln1_b"], total_h=h)
+        wq, bq = qkv_head_major(
+            params[f"b{l}.wqkv"], params[f"b{l}.bqkv"], cfg.heads, cfg.head_dim
+        )
+        qkv = bias_act_fwd(mm_fwd(xn, wq, backend), bq, "none")
+        att = attn_fwd(qkv, mb=mb, seq=s, heads_local=cfg.heads, head_dim=cfg.head_dim)
+        proj = bias_act_fwd(
+            mm_fwd(att, params[f"b{l}.wproj"], backend), params[f"b{l}.bproj"], "none"
+        )
+        x1 = pre + proj
+        st2 = ln_stats(x1)
+        x1n = ln_apply(x1, st2, params[f"b{l}.ln2_g"], params[f"b{l}.ln2_b"], total_h=h)
+        u = bias_act_fwd(
+            mm_fwd(x1n, params[f"b{l}.wmlp1"], backend), params[f"b{l}.bmlp1"], "gelu"
+        )
+        mlp = bias_act_fwd(
+            mm_fwd(u, params[f"b{l}.wmlp2"], backend), params[f"b{l}.bmlp2"], "none"
+        )
+        x = x1 + mlp
+        cache.append((pre, st1, xn, wq, bq, qkv, att, x1, st2, x1n, u))
+
+    stf = ln_stats(x)
+    xf = ln_apply(x, stf, params["lnf_g"], params["lnf_b"], total_h=h)
+    logits = bias_act_fwd(mm_fwd(xf, params["head_w"], backend), params["head_b"], "none")
+    gmax = xent_rowmax(logits)
+    gsum = xent_sumexp(logits, gmax)
+    loss_vec, dlogits = xent_loss_grad(
+        logits, labels, gmax, gsum, jnp.zeros((1,), jnp.int32), total_rows=m
+    )
+    loss = jnp.sum(loss_vec)
+
+    # ---- backward ----
+    _, grads["head_b"] = bias_act_bwd(None, params["head_b"], dlogits, "none")
+    grads["head_w"] = mm_dw(xf, dlogits, backend)
+    dxf = mm_dx(dlogits, params["head_w"], backend)
+    bst = ln_bwd_stats(x, stf, params["lnf_g"], dxf, total_h=h)
+    dx, grads["lnf_g"], grads["lnf_b"] = ln_bwd_finish(
+        x, stf, params["lnf_g"], dxf, bst, total_h=h
+    )
+
+    for l in reversed(range(cfg.layers)):
+        pre, st1, xn, wq, bq, qkv, att, x1, st2, x1n, u = cache[l]
+        # mlp2
+        dmlp, grads[f"b{l}.bmlp2"] = bias_act_bwd(None, params[f"b{l}.bmlp2"], dx, "none")
+        grads[f"b{l}.wmlp2"] = mm_dw(u, dmlp, backend)
+        du_post = mm_dx(dmlp, params[f"b{l}.wmlp2"], backend)
+        # gelu epilogue of mlp1: u = gelu(pre_u + b); we cached u POST-act?
+        # We cached u post-activation; recompute needs pre-act — instead we
+        # recompute the epilogue from x1n (checkpointing):
+        pre_u = mm_fwd(x1n, params[f"b{l}.wmlp1"], backend)
+        du, grads[f"b{l}.bmlp1"] = bias_act_bwd(pre_u, params[f"b{l}.bmlp1"], du_post, "gelu")
+        grads[f"b{l}.wmlp1"] = mm_dw(x1n, du, backend)
+        dx1n = mm_dx(du, params[f"b{l}.wmlp1"], backend)
+        bst2 = ln_bwd_stats(x1, st2, params[f"b{l}.ln2_g"], dx1n, total_h=h)
+        dx1, grads[f"b{l}.ln2_g"], grads[f"b{l}.ln2_b"] = ln_bwd_finish(
+            x1, st2, params[f"b{l}.ln2_g"], dx1n, bst2, total_h=h
+        )
+        dx1 = dx1 + dx  # residual
+        # proj
+        dproj, grads[f"b{l}.bproj"] = bias_act_bwd(None, params[f"b{l}.bproj"], dx1, "none")
+        grads[f"b{l}.wproj"] = mm_dw(att, dproj, backend)
+        datt = mm_dx(dproj, params[f"b{l}.wproj"], backend)
+        dqkv = attn_bwd(qkv, datt, mb=mb, seq=s, heads_local=cfg.heads, head_dim=cfg.head_dim)
+        dqkv_b = jnp.sum(dqkv, axis=0)
+        gwq = mm_dw(xn, dqkv, backend)
+        dxn = mm_dx(dqkv, wq, backend)
+        # un-permute the head-major qkv gradient back to [Q|K|V] layout
+        grads[f"b{l}.wqkv"], grads[f"b{l}.bqkv"] = qkv_head_major_inv(
+            gwq, dqkv_b, cfg.heads, cfg.head_dim
+        )
+        bst1 = ln_bwd_stats(pre, st1, params[f"b{l}.ln1_g"], dxn, total_h=h)
+        dpre, grads[f"b{l}.ln1_g"], grads[f"b{l}.ln1_b"] = ln_bwd_finish(
+            pre, st1, params[f"b{l}.ln1_g"], dxn, bst1, total_h=h
+        )
+        dx = dpre + dx1  # residual into the block input
+
+    dx3, grads["wpos"] = embed_bwd(tokens, dx)
+    grads["wemb"] = embed_bwd_table(tokens, dx, cfg.vocab)
+    return loss, grads, logits
+
+
+def qkv_head_major_inv(w2, b2, heads: int, head_dim: int):
+    """Inverse permutation of qkv_head_major (gradients back to [Q|K|V])."""
+    h = w2.shape[0]
+    w3 = w2.reshape(h, heads, 3, head_dim)
+    b3 = b2.reshape(heads, 3, head_dim)
+    wq, wk, wv = w3[:, :, 0, :], w3[:, :, 1, :], w3[:, :, 2, :]
+    bq, bk, bv = b3[:, 0, :], b3[:, 1, :], b3[:, 2, :]
+    w = jnp.concatenate(
+        [wq.reshape(h, -1), wk.reshape(h, -1), wv.reshape(h, -1)], axis=1
+    )
+    b = jnp.concatenate([bq.reshape(-1), bk.reshape(-1), bv.reshape(-1)])
+    return w, b
+
+
+def serial_loss_via_jax_grad(cfg: ModelConfig, params, tokens, labels):
+    """Independent oracle: the same architecture written as one jax fn and
+    differentiated with jax.grad — validates the hand-rolled backward."""
+
+    def fwd(p):
+        mb, s = tokens.shape
+        x = embed_fwd(tokens, p["wemb"], p["wpos"])
+        for l in range(cfg.layers):
+            xn = kref.layernorm(x, p[f"b{l}.ln1_g"], p[f"b{l}.ln1_b"])
+            wq, bq = qkv_head_major(p[f"b{l}.wqkv"], p[f"b{l}.bqkv"], cfg.heads, cfg.head_dim)
+            qkv = xn @ wq + bq[None, :]
+            att = attn_fwd(qkv, mb=mb, seq=s, heads_local=cfg.heads, head_dim=cfg.head_dim)
+            x = x + att @ p[f"b{l}.wproj"] + p[f"b{l}.bproj"][None, :]
+            xn2 = kref.layernorm(x, p[f"b{l}.ln2_g"], p[f"b{l}.ln2_b"])
+            u = kref.gelu(xn2 @ p[f"b{l}.wmlp1"] + p[f"b{l}.bmlp1"][None, :])
+            x = x + u @ p[f"b{l}.wmlp2"] + p[f"b{l}.bmlp2"][None, :]
+        xf = kref.layernorm(x, p["lnf_g"], p["lnf_b"])
+        logits = xf @ p["head_w"] + p["head_b"][None, :]
+        lf = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lf, axis=1)
+        picked = jnp.take_along_axis(lf, labels.reshape(-1)[:, None], axis=1)[:, 0]
+        return jnp.mean(logz - picked)
+
+    return jax.value_and_grad(fwd)(params)

@@ -1,0 +1,369 @@
+"""Executable specification of the Rust coordinator's sharded protocol.
+
+This module emulates, in pure Python over in-process "GPUs", exactly the
+sequence of local segment executions and collectives that the Rust
+coordinator (rust/src/coordinator/) performs for one training step of the
+live GPT under Algorithm 1 + §4.1 (transposed alternate layers).  It is the
+source of truth for:
+
+  * how every parameter is sharded onto GPU(i, j) of a G_r x G_c grid
+    (``shard_params``), including the §4.1 transposed layout for the
+    attention out-projection and second MLP matmul;
+  * which communicator (row / column) each all-reduce uses, and in which
+    order (``grid_forward_backward``);
+  * ownership flags used for gradient-norm accounting (replicated shards
+    are counted exactly once).
+
+python/tests/test_sharded.py asserts that assembling the sharded gradients
+reproduces the serial reference for every grid that divides gpt-nano, which
+pins the protocol before Rust ever executes it.  The Rust implementation
+mirrors this file collective-for-collective; keep them in sync.
+
+Communicator naming follows the paper: GPUs sharing a grid *column*
+(same j, varying i) form the column communicator (All-Reduce_c, used by
+the forward pass of non-transposed layers); GPUs sharing a grid *row*
+(same i, varying j) form the row communicator (All-Reduce_r).
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+@dataclasses.dataclass
+class Shard:
+    """A parameter shard on one GPU: array + ownership for norm accounting."""
+
+    array: jax.Array
+    owned: bool  # True iff this GPU is the canonical owner of the values
+
+
+def _slice(t, dim: int, idx: int, parts: int):
+    n = t.shape[dim] // parts
+    sl = [slice(None)] * t.ndim
+    sl[dim] = slice(idx * n, (idx + 1) * n)
+    return t[tuple(sl)]
+
+
+def shard_params(cfg: M.ModelConfig, params, g_r: int, g_c: int
+                 ) -> List[List[Dict[str, Shard]]]:
+    """Distribute full params onto the grid. Returns grid[i][j] -> shards.
+
+    Layout rules (mirrored by rust/src/layout/):
+      * activation-dim (hidden) vectors — LN params, wemb/wpos columns,
+        row-sharded biases — are sliced over the r-index, replicated over
+        columns; owner is j == 0.
+      * column-sharded biases (bqkv, bmlp1, head_b) are sliced over the
+        c-index, replicated over rows; owner is i == 0.
+      * non-transposed weights W (k, n) -> block (i, j) of (k/G_r, n/G_c).
+      * §4.1 transposed weights W (k, n) -> block (j, i) of (k/G_c, n/G_r):
+        the *input* dim is sharded over columns because the producing
+        layer's output was column-sharded over the c-index.
+      * every weight block is unique, hence always owned.
+    """
+    grid = [[{} for _ in range(g_c)] for _ in range(g_r)]
+    h = cfg.hidden
+
+    def put(name, fn_ij, owned_fn):
+        for i in range(g_r):
+            for j in range(g_c):
+                grid[i][j][name] = Shard(fn_ij(i, j), owned_fn(i, j))
+
+    own_j0 = lambda i, j: j == 0
+    own_i0 = lambda i, j: i == 0
+    own_all = lambda i, j: True
+
+    put("wemb", lambda i, j: _slice(params["wemb"], 1, i, g_r), own_j0)
+    put("wpos", lambda i, j: _slice(params["wpos"], 1, i, g_r), own_j0)
+    put("lnf_g", lambda i, j: _slice(params["lnf_g"], 0, i, g_r), own_j0)
+    put("lnf_b", lambda i, j: _slice(params["lnf_b"], 0, i, g_r), own_j0)
+    # head: plain Algorithm-1 FC (non-transposed)
+    put(
+        "head_w",
+        lambda i, j: _slice(_slice(params["head_w"], 0, i, g_r), 1, j, g_c),
+        own_all,
+    )
+    put("head_b", lambda i, j: _slice(params["head_b"], 0, j, g_c), own_i0)
+
+    for l in range(cfg.layers):
+        wq, bq = M.qkv_head_major(
+            params[f"b{l}.wqkv"], params[f"b{l}.bqkv"], cfg.heads, cfg.head_dim
+        )
+        put(f"b{l}.ln1_g", lambda i, j, l=l: _slice(params[f"b{l}.ln1_g"], 0, i, g_r), own_j0)
+        put(f"b{l}.ln1_b", lambda i, j, l=l: _slice(params[f"b{l}.ln1_b"], 0, i, g_r), own_j0)
+        put(
+            f"b{l}.wqkv",
+            lambda i, j, wq=wq: _slice(_slice(wq, 0, i, g_r), 1, j, g_c),
+            own_all,
+        )
+        put(f"b{l}.bqkv", lambda i, j, bq=bq: _slice(bq, 0, j, g_c), own_i0)
+        # §4.1 transposed: block (j, i), input dim sharded over c-index
+        put(
+            f"b{l}.wproj",
+            lambda i, j, l=l: _slice(_slice(params[f"b{l}.wproj"], 0, j, g_c), 1, i, g_r),
+            own_all,
+        )
+        put(f"b{l}.bproj", lambda i, j, l=l: _slice(params[f"b{l}.bproj"], 0, i, g_r), own_j0)
+        put(f"b{l}.ln2_g", lambda i, j, l=l: _slice(params[f"b{l}.ln2_g"], 0, i, g_r), own_j0)
+        put(f"b{l}.ln2_b", lambda i, j, l=l: _slice(params[f"b{l}.ln2_b"], 0, i, g_r), own_j0)
+        put(
+            f"b{l}.wmlp1",
+            lambda i, j, l=l: _slice(_slice(params[f"b{l}.wmlp1"], 0, i, g_r), 1, j, g_c),
+            own_all,
+        )
+        put(f"b{l}.bmlp1", lambda i, j, l=l: _slice(params[f"b{l}.bmlp1"], 0, j, g_c), own_i0)
+        put(
+            f"b{l}.wmlp2",
+            lambda i, j, l=l: _slice(_slice(params[f"b{l}.wmlp2"], 0, j, g_c), 1, i, g_r),
+            own_all,
+        )
+        put(f"b{l}.bmlp2", lambda i, j, l=l: _slice(params[f"b{l}.bmlp2"], 0, i, g_r), own_j0)
+    return grid
+
+
+def assemble_grads(cfg: M.ModelConfig, grad_grid, g_r: int, g_c: int):
+    """Reassemble full gradients from the per-GPU shard grids (the inverse
+    of shard_params; includes the qkv head-major inverse permutation)."""
+    out = {}
+
+    def cat_r(name):  # row-sharded vectors / matrices along last dim
+        return jnp.concatenate([grad_grid[i][0][name] for i in range(g_r)], axis=-1)
+
+    def cat_c(name):
+        return jnp.concatenate([grad_grid[0][j][name] for j in range(g_c)], axis=-1)
+
+    def blocks(name, transposed=False):
+        if transposed:
+            rows = [
+                jnp.concatenate([grad_grid[i][j][name] for i in range(g_r)], axis=1)
+                for j in range(g_c)
+            ]
+            return jnp.concatenate(rows, axis=0)
+        rows = [
+            jnp.concatenate([grad_grid[i][j][name] for j in range(g_c)], axis=1)
+            for i in range(g_r)
+        ]
+        return jnp.concatenate(rows, axis=0)
+
+    out["wemb"] = cat_r("wemb")
+    out["wpos"] = cat_r("wpos")
+    out["lnf_g"] = cat_r("lnf_g")
+    out["lnf_b"] = cat_r("lnf_b")
+    out["head_w"] = blocks("head_w")
+    out["head_b"] = cat_c("head_b")
+    for l in range(cfg.layers):
+        wq = blocks(f"b{l}.wqkv")
+        bq = cat_c(f"b{l}.bqkv")
+        out[f"b{l}.wqkv"], out[f"b{l}.bqkv"] = M.qkv_head_major_inv(
+            wq, bq, cfg.heads, cfg.head_dim
+        )
+        out[f"b{l}.ln1_g"] = cat_r(f"b{l}.ln1_g")
+        out[f"b{l}.ln1_b"] = cat_r(f"b{l}.ln1_b")
+        out[f"b{l}.wproj"] = blocks(f"b{l}.wproj", transposed=True)
+        out[f"b{l}.bproj"] = cat_r(f"b{l}.bproj")
+        out[f"b{l}.ln2_g"] = cat_r(f"b{l}.ln2_g")
+        out[f"b{l}.ln2_b"] = cat_r(f"b{l}.ln2_b")
+        out[f"b{l}.wmlp1"] = blocks(f"b{l}.wmlp1")
+        out[f"b{l}.bmlp1"] = cat_c(f"b{l}.bmlp1")
+        out[f"b{l}.wmlp2"] = blocks(f"b{l}.wmlp2", transposed=True)
+        out[f"b{l}.bmlp2"] = cat_r(f"b{l}.bmlp2")
+    return out
+
+
+# -------------------------------------------------------------------------
+# Collectives over the in-process grid (lists indexed [i][j])
+# -------------------------------------------------------------------------
+
+
+def ar_col(vals, g_r, g_c, op="sum"):
+    """All-reduce over column communicators: reduce over i for fixed j."""
+    out = [[None] * g_c for _ in range(g_r)]
+    for j in range(g_c):
+        acc = vals[0][j]
+        for i in range(1, g_r):
+            acc = jnp.maximum(acc, vals[i][j]) if op == "max" else acc + vals[i][j]
+        for i in range(g_r):
+            out[i][j] = acc
+    return out
+
+
+def ar_row(vals, g_r, g_c, op="sum"):
+    """All-reduce over row communicators: reduce over j for fixed i."""
+    out = [[None] * g_c for _ in range(g_r)]
+    for i in range(g_r):
+        acc = vals[i][0]
+        for j in range(1, g_c):
+            acc = jnp.maximum(acc, vals[i][j]) if op == "max" else acc + vals[i][j]
+        for j in range(g_c):
+            out[i][j] = acc
+    return out
+
+
+def _each(g_r, g_c, fn):
+    return [[fn(i, j) for j in range(g_c)] for i in range(g_r)]
+
+
+# -------------------------------------------------------------------------
+# One forward+backward over the grid — the coordinator's step, verbatim
+# -------------------------------------------------------------------------
+
+
+def grid_forward_backward(cfg: M.ModelConfig, grid, tokens, labels,
+                          g_r: int, g_c: int, total_rows: int = None,
+                          backend: str = "jnp"):
+    """Forward+backward of one (sub-)batch shard on a G_r x G_c grid.
+
+    tokens: (mb, S) — identical on every GPU of the grid (the group's
+    shard); labels flattened (mb*S,).  Returns (loss, grad_grid) where
+    grad_grid[i][j] maps param name -> gradient shard.
+    """
+    mb, s = tokens.shape
+    m = mb * s
+    h = cfg.hidden
+    if total_rows is None:
+        total_rows = m
+    hl = cfg.heads // g_c  # local heads per column shard
+    P = lambda i, j, name: grid[i][j][name].array
+
+    # ---------------- forward ----------------
+    x = _each(g_r, g_c, lambda i, j: M.embed_fwd(tokens, P(i, j, "wemb"), P(i, j, "wpos")))
+    cache = []
+    for l in range(cfg.layers):
+        pre = x
+        st1 = ar_col(_each(g_r, g_c, lambda i, j: M.ln_stats(x[i][j])), g_r, g_c)
+        xn = _each(g_r, g_c, lambda i, j: M.ln_apply(
+            x[i][j], st1[i][j], P(i, j, f"b{l}.ln1_g"), P(i, j, f"b{l}.ln1_b"), total_h=h))
+        # qkv: non-transposed FC -> forward AR over column comm (Alg. 1 l.6)
+        qkv = ar_col(_each(g_r, g_c, lambda i, j: M.mm_fwd(
+            xn[i][j], P(i, j, f"b{l}.wqkv"), backend)), g_r, g_c)
+        qkv = _each(g_r, g_c, lambda i, j: qkv[i][j] + P(i, j, f"b{l}.bqkv")[None, :])
+        att = _each(g_r, g_c, lambda i, j: M.attn_fwd(
+            qkv[i][j], mb=mb, seq=s, heads_local=hl, head_dim=cfg.head_dim))
+        # out-projection: §4.1 transposed FC -> forward AR over ROW comm
+        proj = ar_row(_each(g_r, g_c, lambda i, j: M.mm_fwd(
+            att[i][j], P(i, j, f"b{l}.wproj"), backend)), g_r, g_c)
+        x1 = _each(g_r, g_c, lambda i, j: pre[i][j] + proj[i][j] + P(i, j, f"b{l}.bproj")[None, :])
+        st2 = ar_col(_each(g_r, g_c, lambda i, j: M.ln_stats(x1[i][j])), g_r, g_c)
+        x1n = _each(g_r, g_c, lambda i, j: M.ln_apply(
+            x1[i][j], st2[i][j], P(i, j, f"b{l}.ln2_g"), P(i, j, f"b{l}.ln2_b"), total_h=h))
+        # mlp1: non-transposed -> AR over column comm; cache PRE-activation
+        upre = ar_col(_each(g_r, g_c, lambda i, j: M.mm_fwd(
+            x1n[i][j], P(i, j, f"b{l}.wmlp1"), backend)), g_r, g_c)
+        upre = _each(g_r, g_c, lambda i, j: upre[i][j] + P(i, j, f"b{l}.bmlp1")[None, :])
+        u = _each(g_r, g_c, lambda i, j: M.bias_act_fwd(
+            upre[i][j], jnp.zeros((upre[i][j].shape[1],), upre[i][j].dtype), "gelu"))
+        # mlp2: transposed -> AR over ROW comm
+        mlp = ar_row(_each(g_r, g_c, lambda i, j: M.mm_fwd(
+            u[i][j], P(i, j, f"b{l}.wmlp2"), backend)), g_r, g_c)
+        x = _each(g_r, g_c, lambda i, j: x1[i][j] + mlp[i][j] + P(i, j, f"b{l}.bmlp2")[None, :])
+        cache.append((pre, st1, xn, qkv, att, x1, st2, x1n, upre, u))
+
+    stf = ar_col(_each(g_r, g_c, lambda i, j: M.ln_stats(x[i][j])), g_r, g_c)
+    xf = _each(g_r, g_c, lambda i, j: M.ln_apply(
+        x[i][j], stf[i][j], P(i, j, "lnf_g"), P(i, j, "lnf_b"), total_h=h))
+    logits = ar_col(_each(g_r, g_c, lambda i, j: M.mm_fwd(
+        xf[i][j], P(i, j, "head_w"), backend)), g_r, g_c)
+    logits = _each(g_r, g_c, lambda i, j: logits[i][j] + P(i, j, "head_b")[None, :])
+    # vocab-parallel softmax-xent: two tiny ARs over the ROW comm
+    gmax = ar_row(_each(g_r, g_c, lambda i, j: M.xent_rowmax(logits[i][j])), g_r, g_c, op="max")
+    gsum = ar_row(_each(g_r, g_c, lambda i, j: M.xent_sumexp(logits[i][j], gmax[i][j])), g_r, g_c)
+    vshard = cfg.vocab // g_c
+    lg = _each(g_r, g_c, lambda i, j: M.xent_loss_grad(
+        logits[i][j], labels, gmax[i][j], gsum[i][j],
+        jnp.asarray(np.array([j * vshard], np.int32)), total_rows=total_rows))
+    loss_part = _each(g_r, g_c, lambda i, j: jnp.sum(lg[i][j][0]))
+    loss = float(sum(loss_part[0][j] for j in range(g_c)))  # row comm of rank (0, :)
+    dlogits = _each(g_r, g_c, lambda i, j: lg[i][j][1])
+
+    # ---------------- backward ----------------
+    g = _each(g_r, g_c, lambda i, j: {})
+
+    def setg(i, j, name, val):
+        g[i][j][name] = val
+
+    # head (non-transposed): bwd AR over ROW comm
+    for i in range(g_r):
+        for j in range(g_c):
+            setg(i, j, "head_b", jnp.sum(dlogits[i][j], axis=0))
+            setg(i, j, "head_w", M.mm_dw(xf[i][j], dlogits[i][j], backend))
+    dxf = ar_row(_each(g_r, g_c, lambda i, j: M.mm_dx(
+        dlogits[i][j], P(i, j, "head_w"), backend)), g_r, g_c)
+    bstf = ar_col(_each(g_r, g_c, lambda i, j: M.ln_bwd_stats(
+        x[i][j], stf[i][j], P(i, j, "lnf_g"), dxf[i][j], total_h=h)), g_r, g_c)
+    dx = [[None] * g_c for _ in range(g_r)]
+    for i in range(g_r):
+        for j in range(g_c):
+            d, dg_, db_ = M.ln_bwd_finish(
+                x[i][j], stf[i][j], P(i, j, "lnf_g"), dxf[i][j], bstf[i][j], total_h=h)
+            dx[i][j] = d
+            setg(i, j, "lnf_g", dg_)
+            setg(i, j, "lnf_b", db_)
+
+    for l in reversed(range(cfg.layers)):
+        pre, st1, xn, qkv, att, x1, st2, x1n, upre, u = cache[l]
+        # mlp2 (transposed): bwd AR over COLUMN comm
+        for i in range(g_r):
+            for j in range(g_c):
+                setg(i, j, f"b{l}.bmlp2", jnp.sum(dx[i][j], axis=0))
+                setg(i, j, f"b{l}.wmlp2", M.mm_dw(u[i][j], dx[i][j], backend))
+        dv = ar_col(_each(g_r, g_c, lambda i, j: M.mm_dx(
+            dx[i][j], P(i, j, f"b{l}.wmlp2"), backend)), g_r, g_c)
+        dupre = [[None] * g_c for _ in range(g_r)]
+        for i in range(g_r):
+            for j in range(g_c):
+                zb = jnp.zeros((upre[i][j].shape[1],), upre[i][j].dtype)
+                du_, db_ = M.bias_act_bwd(upre[i][j], zb, dv[i][j], "gelu")
+                dupre[i][j] = du_
+                setg(i, j, f"b{l}.bmlp1", db_)
+                setg(i, j, f"b{l}.wmlp1", M.mm_dw(x1n[i][j], du_, backend))
+        # mlp1 (non-transposed): bwd AR over ROW comm
+        dx1n = ar_row(_each(g_r, g_c, lambda i, j: M.mm_dx(
+            dupre[i][j], P(i, j, f"b{l}.wmlp1"), backend)), g_r, g_c)
+        bst2 = ar_col(_each(g_r, g_c, lambda i, j: M.ln_bwd_stats(
+            x1[i][j], st2[i][j], P(i, j, f"b{l}.ln2_g"), dx1n[i][j], total_h=h)), g_r, g_c)
+        dx1 = [[None] * g_c for _ in range(g_r)]
+        for i in range(g_r):
+            for j in range(g_c):
+                d, dg_, db_ = M.ln_bwd_finish(
+                    x1[i][j], st2[i][j], P(i, j, f"b{l}.ln2_g"), dx1n[i][j], bst2[i][j], total_h=h)
+                dx1[i][j] = d + dx[i][j]  # residual
+                setg(i, j, f"b{l}.ln2_g", dg_)
+                setg(i, j, f"b{l}.ln2_b", db_)
+        # out-projection (transposed): bwd AR over COLUMN comm
+        for i in range(g_r):
+            for j in range(g_c):
+                setg(i, j, f"b{l}.bproj", jnp.sum(dx1[i][j], axis=0))
+                setg(i, j, f"b{l}.wproj", M.mm_dw(att[i][j], dx1[i][j], backend))
+        datt = ar_col(_each(g_r, g_c, lambda i, j: M.mm_dx(
+            dx1[i][j], P(i, j, f"b{l}.wproj"), backend)), g_r, g_c)
+        dqkv = _each(g_r, g_c, lambda i, j: M.attn_bwd(
+            qkv[i][j], datt[i][j], mb=mb, seq=s, heads_local=hl, head_dim=cfg.head_dim))
+        for i in range(g_r):
+            for j in range(g_c):
+                setg(i, j, f"b{l}.bqkv", jnp.sum(dqkv[i][j], axis=0))
+                setg(i, j, f"b{l}.wqkv", M.mm_dw(xn[i][j], dqkv[i][j], backend))
+        # qkv (non-transposed): bwd AR over ROW comm
+        dxn = ar_row(_each(g_r, g_c, lambda i, j: M.mm_dx(
+            dqkv[i][j], P(i, j, f"b{l}.wqkv"), backend)), g_r, g_c)
+        bst1 = ar_col(_each(g_r, g_c, lambda i, j: M.ln_bwd_stats(
+            pre[i][j], st1[i][j], P(i, j, f"b{l}.ln1_g"), dxn[i][j], total_h=h)), g_r, g_c)
+        for i in range(g_r):
+            for j in range(g_c):
+                d, dg_, db_ = M.ln_bwd_finish(
+                    pre[i][j], st1[i][j], P(i, j, f"b{l}.ln1_g"), dxn[i][j], bst1[i][j], total_h=h)
+                dx[i][j] = d + dx1[i][j]  # residual into block input
+                setg(i, j, f"b{l}.ln1_g", dg_)
+                setg(i, j, f"b{l}.ln1_b", db_)
+
+    for i in range(g_r):
+        for j in range(g_c):
+            _, dwpos = M.embed_bwd(tokens, dx[i][j])
+            setg(i, j, "wpos", dwpos)
+            setg(i, j, "wemb", M.embed_bwd_table(tokens, dx[i][j], cfg.vocab))
+
+    return loss, g

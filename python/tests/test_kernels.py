@@ -1,0 +1,198 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes; every property asserts allclose against
+``compile.kernels.ref``.  This is the core correctness signal for the
+compute layer — everything the Rust coordinator executes is built from
+these kernels.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import fused_linear as fl
+from compile.kernels import layernorm as ln
+from compile.kernels import softmax_xent as sx
+from compile.kernels import ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 48, 64, 96, 128, 160, 256])
+SMALL_DIMS = st.sampled_from([1, 2, 4, 8, 16, 32, 64])
+F_DTYPES = st.sampled_from([np.float32, jnp.bfloat16])
+
+
+def _rand(rng, shape, dtype=np.float32):
+    x = rng.standard_normal(shape, dtype=np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- matmul
+
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1), dtype=F_DTYPES)
+def test_matmul_matches_ref(m, k, n, seed, dtype):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+    got = mm.matmul(a, b)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_transposed_helpers(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k))
+    dy = _rand(rng, (m, n))
+    w = _rand(rng, (k, n))
+    np.testing.assert_allclose(
+        np.asarray(mm.matmul_bt(dy, w)), np.asarray(dy) @ np.asarray(w).T, rtol=2e-5, atol=2e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(mm.matmul_at(x, dy)), np.asarray(x).T @ np.asarray(dy), rtol=2e-5, atol=2e-5
+    )
+
+
+@given(m=DIMS, k=DIMS, n=DIMS)
+def test_pick_blocks_divide_and_fit(m, k, n):
+    bm, bk, bn = mm.pick_blocks(m, k, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0
+    assert mm.vmem_bytes(m, k, n) <= mm.VMEM_BUDGET
+    assert 0.0 < mm.mxu_utilization_estimate(m, k, n) <= 1.0
+
+
+def test_pick_blocks_prefers_mxu_multiples():
+    bm, bk, bn = mm.pick_blocks(2048, 1024, 2048)
+    assert bm % 128 == 0 and bk % 128 == 0 and bn % 128 == 0
+
+
+def test_matmul_shape_mismatch_raises():
+    a = jnp.zeros((4, 5), jnp.float32)
+    b = jnp.zeros((6, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        mm.matmul(a, b)
+
+
+# ----------------------------------------------------------- fused linear
+
+@given(
+    m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS,
+    act=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, (m, k)), _rand(rng, (k, n))
+    bias = _rand(rng, (n,))
+    got = fl.fused_linear(a, b, bias, act)
+    want = ref.fused_linear(a, b, bias, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_fused_linear_bad_act():
+    z = jnp.zeros((2, 2), jnp.float32)
+    with pytest.raises(ValueError):
+        fl.fused_linear(z, z, jnp.zeros((2,), jnp.float32), "swish")
+
+
+# -------------------------------------------------------------- layernorm
+
+@given(m=SMALL_DIMS, h=st.sampled_from([2, 4, 8, 32, 128, 160]), seed=st.integers(0, 2**31 - 1))
+def test_layernorm_matches_ref(m, h, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, h))
+    g, b = _rand(rng, (h,)), _rand(rng, (h,))
+    got = ln.layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=SMALL_DIMS,
+    h=st.sampled_from([8, 32, 64, 128]),
+    shards=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_sharded_protocol(m, h, shards, seed):
+    """Column-sharded LN: local partials + summed stats == serial LN.
+
+    This is exactly the 2-float-per-row all-reduce protocol the Rust
+    coordinator runs between ln_partials and ln_apply."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, h))
+    g, b = _rand(rng, (h,)), _rand(rng, (h,))
+    cols = h // shards
+    parts = [x[:, i * cols:(i + 1) * cols] for i in range(shards)]
+    stats = sum(np.asarray(ln.ln_partials(p)) for p in parts)
+    stats = jnp.asarray(stats)
+    out = np.concatenate(
+        [
+            np.asarray(
+                ln.ln_apply(p, stats, g[i * cols:(i + 1) * cols], b[i * cols:(i + 1) * cols], total_h=h)
+            )
+            for i, p in enumerate(parts)
+        ],
+        axis=1,
+    )
+    want = np.asarray(ref.layernorm(x, g, b))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ softmax xent
+
+@given(m=SMALL_DIMS, v=st.sampled_from([2, 8, 32, 128]), seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_matches_ref(m, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = _rand(rng, (m, v))
+    labels = jnp.asarray(rng.integers(0, v, m).astype(np.int32))
+    l1, d1 = sx.softmax_xent(logits, labels)
+    l2, d2 = ref.softmax_xent(logits, labels)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-5, atol=1e-6)
+
+
+@given(
+    m=SMALL_DIMS,
+    v_per=st.sampled_from([4, 16, 64]),
+    shards=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_vocab_sharded_protocol(m, v_per, shards, seed):
+    """Vocab-parallel xent: two tiny all-reduces (max, sum-exp) + local
+    loss/grad per shard reassemble to the serial result — the contract the
+    Rust coordinator relies on for the output head."""
+    rng = np.random.default_rng(seed)
+    v = v_per * shards
+    logits = _rand(rng, (m, v))
+    labels = jnp.asarray(rng.integers(0, v, m).astype(np.int32))
+    shard_logits = [logits[:, s * v_per:(s + 1) * v_per] for s in range(shards)]
+    # coordinator protocol
+    gmax = jnp.asarray(np.max([np.asarray(sx.xent_rowmax(s)) for s in shard_logits], axis=0))
+    gsum = jnp.asarray(np.sum([np.asarray(sx.xent_sumexp(s, gmax)) for s in shard_logits], axis=0))
+    loss = 0.0
+    dparts = []
+    for s in range(shards):
+        off = jnp.asarray(np.array([s * v_per], np.int32))
+        lv, dl = sx.xent_loss_grad(shard_logits[s], labels, gmax, gsum, off, m)
+        loss += float(jnp.sum(lv))
+        dparts.append(np.asarray(dl))
+    l2, d2 = ref.softmax_xent(logits, labels)
+    np.testing.assert_allclose(loss, float(l2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.concatenate(dparts, axis=1), np.asarray(d2), rtol=1e-5, atol=1e-6)
+
+
+def test_xent_gradient_sums_to_zero_per_row():
+    rng = np.random.default_rng(7)
+    logits = _rand(rng, (16, 32))
+    labels = jnp.asarray(rng.integers(0, 32, 16).astype(np.int32))
+    _, d = sx.softmax_xent(logits, labels)
+    np.testing.assert_allclose(np.asarray(d).sum(axis=1), 0.0, atol=1e-6)

@@ -1,0 +1,103 @@
+//! `cargo bench` entry: regenerates every paper table/figure from the
+//! simulator (the end-to-end benches of the repro harness) and times the
+//! core hot paths (collectives, simulator engine, layout) with the
+//! in-tree bench harness (criterion is unavailable offline).
+//!
+//! Output mirrors EXPERIMENTS.md §repro; absolute hot-path numbers feed
+//! EXPERIMENTS.md §Perf.
+
+use tensor3d::collectives::{CommGroup, ReduceOp};
+use tensor3d::layout::{Mat, ShardKind};
+use tensor3d::mesh::Mesh;
+use tensor3d::models::gpt;
+use tensor3d::planner::NetKind;
+use tensor3d::repro;
+use tensor3d::sim::{simulate, Machine};
+use tensor3d::strategies::{build_programs, Strategy};
+use tensor3d::util::rng::Rng;
+use tensor3d::util::timer::{bench, bench_header};
+
+fn hot_paths() {
+    println!("== hot paths ==\n{}", bench_header());
+
+    // collectives: 4-way all-reduce of 4 MiB (the per-layer AR size of the
+    // live gpt-mini at batch 8)
+    for n in [1 << 16, 1 << 20] {
+        let r = bench(&format!("collectives: 4-way all-reduce {} f32", n), 20, || {
+            let group = CommGroup::new(4);
+            let handles: Vec<_> = (0..4).map(|m| group.handle(m)).collect();
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|mut h| {
+                    std::thread::spawn(move || {
+                        let mut v = vec![1.0f32; n];
+                        h.all_reduce(&mut v, ReduceOp::Sum);
+                        v[0]
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).sum::<f32>()
+        });
+        println!("{}", r.report());
+        println!(
+            "    -> {:.2} GB/s effective reduce bandwidth",
+            (n * 4 * 4) as f64 / r.median.as_secs_f64() / 1e9
+        );
+    }
+
+    // simulator engine: events/s on the fig-8 GPT-10B/64-GPU program
+    let machine = Machine::polaris();
+    let net = gpt::table3()[1].dims.network();
+    let mesh = Mesh::new(8, 2, 4, 1);
+    let programs = build_programs(
+        Strategy::Tensor3d { depth: 2, transpose_opt: true },
+        &net,
+        &mesh,
+        1024,
+        &machine,
+    );
+    let n_ops: usize = programs.iter().map(|p| p.ops.len()).sum();
+    let r = bench("sim engine: GPT-10B/64gpu iteration", 10, || {
+        simulate(&machine, &programs).makespan
+    });
+    println!("{}", r.report());
+    println!("    -> {:.2} M ops/s ({} ops)", n_ops as f64 / r.median.as_secs_f64() / 1e6, n_ops);
+
+    // layout: 2-D shard + assemble of a 4096x4096 weight
+    let mut rng = Rng::new(1);
+    let mut m = Mat::zeros(4096, 4096);
+    rng.fill_normal(&mut m.data, 1.0);
+    let mesh2 = Mesh::new(1, 4, 8, 1);
+    let r = bench("layout: block-shard 4096x4096 onto 4x8", 20, || {
+        let mut acc = 0.0f32;
+        for i in 0..4 {
+            for j in 0..8 {
+                acc += ShardKind::Block.shard(&m, i, j, &mesh2).data[0];
+            }
+        }
+        acc
+    });
+    println!("{}", r.report());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let only_hot = args.iter().any(|a| a == "--hot-paths");
+
+    hot_paths();
+    if only_hot {
+        return;
+    }
+
+    println!("\n== paper tables & figures (simulator) ==");
+    let t0 = std::time::Instant::now();
+    println!("{}", repro::fig4_trace(None));
+    println!("{}", repro::fig5_sweep());
+    println!("{}", repro::weak_scaling(NetKind::Unet));
+    println!("{}", repro::weak_scaling(NetKind::Transformer));
+    println!("{}", repro::fig9_strong_scaling());
+    println!("{}", repro::tab4_mfu());
+    println!("{}", repro::tab5_colossal());
+    println!("{}", repro::ablation());
+    println!("repro suite total: {:.1}s", t0.elapsed().as_secs_f64());
+}

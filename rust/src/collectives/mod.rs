@@ -1,0 +1,399 @@
+//! Shared-memory collectives for the live runtime.
+//!
+//! Each simulated GPU is a worker thread; communicators are rendezvous
+//! objects shared by a rank group (a row, column or data group of the
+//! [`crate::mesh::Mesh`]).  Semantics follow NCCL: every member must call
+//! the same sequence of collectives on a given communicator; calls on
+//! *different* communicators may be in flight concurrently — this is what
+//! the §4.2 round-robin scheduler exploits to overlap the sub-shard
+//! collectives with compute.
+//!
+//! Implementation: each member copies its contribution into a private
+//! per-member slot (no contention), then joins a generation-numbered
+//! rendezvous; the last arriver reduces all slots into the shared result
+//! (k-way chunked sum, see [`reduce_into`]); everyone copies the result
+//! out concurrently through an `Arc` snapshot.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+}
+
+struct Shared {
+    size: usize,
+    slots: Vec<Mutex<Vec<f32>>>,
+    rendezvous: Mutex<Slot>,
+    cv: Condvar,
+}
+
+struct Slot {
+    gen: u64,
+    arrived: usize,
+    leaving: usize,
+    done: bool,
+    result: Arc<Vec<f32>>,
+}
+
+/// Per-rank handle onto a group communicator.  Cheap to clone-construct via
+/// [`CommGroup::handle`]; each handle tracks its own call sequence number so
+/// mismatched call orders dead-lock loudly rather than corrupting data.
+pub struct Communicator {
+    shared: Arc<Shared>,
+    member: usize,
+    next_gen: u64,
+    /// total f32s moved through this handle (metrics)
+    pub bytes_reduced: u64,
+    pub calls: u64,
+}
+
+/// Factory for the handles of one group.
+pub struct CommGroup {
+    shared: Arc<Shared>,
+}
+
+impl CommGroup {
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        let shared = Arc::new(Shared {
+            size,
+            slots: (0..size).map(|_| Mutex::new(Vec::new())).collect(),
+            rendezvous: Mutex::new(Slot {
+                gen: 0,
+                arrived: 0,
+                leaving: 0,
+                done: false,
+                result: Arc::new(Vec::new()),
+            }),
+            cv: Condvar::new(),
+        });
+        CommGroup { shared }
+    }
+
+    pub fn handle(&self, member: usize) -> Communicator {
+        assert!(member < self.shared.size);
+        Communicator {
+            shared: self.shared.clone(),
+            member,
+            next_gen: 0,
+            bytes_reduced: 0,
+            calls: 0,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+}
+
+/// k-way reduction of `srcs` into `dst` with cache-friendly chunking.
+pub fn reduce_into(dst: &mut Vec<f32>, srcs: &[&[f32]], op: ReduceOp) {
+    let n = srcs[0].len();
+    dst.clear();
+    dst.extend_from_slice(srcs[0]);
+    match op {
+        ReduceOp::Sum => {
+            const CHUNK: usize = 4096;
+            let mut off = 0;
+            while off < n {
+                let end = (off + CHUNK).min(n);
+                for s in &srcs[1..] {
+                    let d = &mut dst[off..end];
+                    let s = &s[off..end];
+                    for (a, b) in d.iter_mut().zip(s) {
+                        *a += *b;
+                    }
+                }
+                off = end;
+            }
+        }
+        ReduceOp::Max => {
+            for s in &srcs[1..] {
+                for (a, b) in dst.iter_mut().zip(s.iter()) {
+                    *a = a.max(*b);
+                }
+            }
+        }
+    }
+}
+
+impl Communicator {
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    pub fn member(&self) -> usize {
+        self.member
+    }
+
+    /// In-place all-reduce over the group.  Blocks until all members of
+    /// this generation arrive; the buffer is replaced by the reduction.
+    pub fn all_reduce(&mut self, data: &mut [f32], op: ReduceOp) {
+        self.calls += 1;
+        self.bytes_reduced += (data.len() * 4) as u64;
+        if self.shared.size == 1 {
+            self.next_gen += 1;
+            return; // single-member group: identity
+        }
+        let my_gen = self.next_gen;
+        self.next_gen += 1;
+
+        // Phase 0: wait for our generation to be current, so a fast rank
+        // cannot clobber slots of a still-draining collective.
+        {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            while r.gen != my_gen {
+                r = self.shared.cv.wait(r).unwrap();
+            }
+        }
+
+        // Phase 1: deposit into the private slot (uncontended).
+        {
+            let mut slot = self.shared.slots[self.member].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+
+        // Phase 2: rendezvous; last arriver reduces.
+        let result: Arc<Vec<f32>> = {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            r.arrived += 1;
+            if r.arrived == self.shared.size {
+                // last arriver: all slots are deposited and idle
+                let guards: Vec<_> = self
+                    .shared
+                    .slots
+                    .iter()
+                    .map(|m| m.lock().unwrap())
+                    .collect();
+                let srcs: Vec<&[f32]> = guards.iter().map(|g| g.as_slice()).collect();
+                let mut out = Vec::with_capacity(data.len());
+                reduce_into(&mut out, &srcs, op);
+                drop(guards);
+                r.result = Arc::new(out);
+                r.done = true;
+                self.shared.cv.notify_all();
+            } else {
+                while !(r.done && r.gen == my_gen) {
+                    r = self.shared.cv.wait(r).unwrap();
+                }
+            }
+            r.result.clone()
+        };
+
+        // Phase 3: copy out without holding the rendezvous lock.
+        data.copy_from_slice(&result);
+
+        // Phase 4: last leaver advances the generation.
+        {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            r.leaving += 1;
+            if r.leaving == self.shared.size {
+                r.arrived = 0;
+                r.leaving = 0;
+                r.done = false;
+                r.gen += 1;
+                r.result = Arc::new(Vec::new());
+                self.shared.cv.notify_all();
+            }
+        }
+    }
+
+    /// All-gather: each member contributes `data`; returns the groups'
+    /// buffers concatenated in member order.
+    pub fn all_gather(&mut self, data: &[f32]) -> Vec<f32> {
+        self.calls += 1;
+        if self.shared.size == 1 {
+            self.next_gen += 1;
+            return data.to_vec();
+        }
+        let n = data.len();
+        let my_gen = self.next_gen;
+        self.next_gen += 1;
+        {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            while r.gen != my_gen {
+                r = self.shared.cv.wait(r).unwrap();
+            }
+        }
+        {
+            let mut slot = self.shared.slots[self.member].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        let result: Arc<Vec<f32>> = {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            r.arrived += 1;
+            if r.arrived == self.shared.size {
+                let mut out = Vec::with_capacity(n * self.shared.size);
+                for m in &self.shared.slots {
+                    out.extend_from_slice(&m.lock().unwrap());
+                }
+                r.result = Arc::new(out);
+                r.done = true;
+                self.shared.cv.notify_all();
+            } else {
+                while !(r.done && r.gen == my_gen) {
+                    r = self.shared.cv.wait(r).unwrap();
+                }
+            }
+            r.result.clone()
+        };
+        let out = result.as_ref().clone();
+        {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            r.leaving += 1;
+            if r.leaving == self.shared.size {
+                r.arrived = 0;
+                r.leaving = 0;
+                r.done = false;
+                r.gen += 1;
+                r.result = Arc::new(Vec::new());
+                self.shared.cv.notify_all();
+            }
+        }
+        out
+    }
+
+    /// Barrier across the group.
+    pub fn barrier(&mut self) {
+        let mut z: [f32; 1] = [0.0];
+        self.all_reduce(&mut z, ReduceOp::Sum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::thread;
+
+    fn run_group<F, T>(size: usize, f: F) -> Vec<T>
+    where
+        F: Fn(usize, Communicator) -> T + Send + Sync + 'static,
+        T: Send + 'static,
+    {
+        let group = CommGroup::new(size);
+        let f = Arc::new(f);
+        let mut handles = Vec::new();
+        for m in 0..size {
+            let h = group.handle(m);
+            let f = f.clone();
+            handles.push(thread::spawn(move || f(m, h)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_reduce_sum_across_threads() {
+        let outs = run_group(4, |m, mut c| {
+            let mut v = vec![m as f32 + 1.0; 1000];
+            c.all_reduce(&mut v, ReduceOp::Sum);
+            v
+        });
+        for v in outs {
+            assert!(v.iter().all(|x| (*x - 10.0).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn all_reduce_max() {
+        let outs = run_group(3, |m, mut c| {
+            let mut v = vec![m as f32, -(m as f32)];
+            c.all_reduce(&mut v, ReduceOp::Max);
+            v
+        });
+        for v in outs {
+            assert_eq!(v, vec![2.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn sequential_collectives_keep_order() {
+        // 50 back-to-back collectives with staggered thread timing: the
+        // generation protocol must keep them separated.
+        let outs = run_group(4, |m, mut c| {
+            let mut sums = Vec::new();
+            for round in 0..50u32 {
+                let mut v = vec![(m as f32) * 10.0 + round as f32; 33];
+                if m == round as usize % 4 {
+                    std::thread::yield_now();
+                }
+                c.all_reduce(&mut v, ReduceOp::Sum);
+                sums.push(v[0]);
+            }
+            sums
+        });
+        for v in &outs {
+            for (round, got) in v.iter().enumerate() {
+                let want = (0.0 + 10.0 + 20.0 + 30.0) + 4.0 * round as f32;
+                assert!((got - want).abs() < 1e-4, "round {round}: {got} != {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_member_order() {
+        let outs = run_group(3, |m, mut c| c.all_gather(&[m as f32, m as f32 + 0.5]));
+        for v in outs {
+            assert_eq!(v, vec![0.0, 0.5, 1.0, 1.5, 2.0, 2.5]);
+        }
+    }
+
+    #[test]
+    fn singleton_group_is_identity() {
+        let g = CommGroup::new(1);
+        let mut c = g.handle(0);
+        let mut v = vec![3.0, 4.0];
+        c.all_reduce(&mut v, ReduceOp::Sum);
+        assert_eq!(v, vec![3.0, 4.0]);
+        assert_eq!(c.all_gather(&v), v);
+    }
+
+    #[test]
+    fn reduce_into_matches_scalar_sum() {
+        prop::check("reduce-into", 50, |g| {
+            let n = g.usize(1, 500);
+            let k = g.usize(1, 6);
+            let srcs: Vec<Vec<f32>> = (0..k).map(|_| g.vec_f32(n, -10.0, 10.0)).collect();
+            let refs: Vec<&[f32]> = srcs.iter().map(|v| v.as_slice()).collect();
+            let mut out = Vec::new();
+            reduce_into(&mut out, &refs, ReduceOp::Sum);
+            for i in 0..n {
+                let want: f32 = srcs.iter().map(|s| s[i]).sum();
+                if (out[i] - want).abs() > 1e-4 {
+                    return Err(format!("idx {i}: {} != {want}", out[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn concurrent_distinct_communicators_overlap_safely() {
+        // two independent groups used from the same threads, interleaved
+        let g1 = CommGroup::new(2);
+        let g2 = CommGroup::new(2);
+        let mut hs = Vec::new();
+        for m in 0..2 {
+            let mut a = g1.handle(m);
+            let mut b = g2.handle(m);
+            hs.push(thread::spawn(move || {
+                let mut total = 0.0;
+                for r in 0..20 {
+                    let mut va = vec![1.0f32; 100 + r];
+                    let mut vb = vec![2.0f32; 50 + r];
+                    a.all_reduce(&mut va, ReduceOp::Sum);
+                    b.all_reduce(&mut vb, ReduceOp::Sum);
+                    total += va[0] + vb[0];
+                }
+                total
+            }));
+        }
+        for h in hs {
+            assert_eq!(h.join().unwrap(), 20.0 * (2.0 + 4.0));
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! The per-worker communication stream: a dedicated thread that executes
+//! collectives FIFO, so the worker (compute) thread can post an all-reduce
+//! for sub-shard X' and immediately continue computing sub-shard X'' —
+//! the live-runtime realization of the paper's dedicated CUDA
+//! communication streams (§4.2).
+
+use crate::collectives::{Communicator, ReduceOp};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommKind {
+    /// Column communicator: All-Reduce_c, GPUs with the same grid column.
+    Col,
+    /// Row communicator: All-Reduce_r.
+    Row,
+    /// Data-parallel communicator.
+    Data,
+}
+
+enum Req {
+    Ar { kind: CommKind, op: ReduceOp, buf: Vec<f32>, reply: Sender<Vec<f32>> },
+    Stop,
+}
+
+/// Handle the worker thread uses to enqueue collectives.
+pub struct CommStream {
+    tx: Sender<Req>,
+    join: Option<JoinHandle<CommStats>>,
+}
+
+/// A posted collective; `wait()` blocks until it completes.
+pub struct Pending {
+    rx: Receiver<Vec<f32>>,
+}
+
+impl Pending {
+    pub fn wait(self) -> Vec<f32> {
+        self.rx.recv().expect("comm stream died")
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CommStats {
+    pub calls: u64,
+    pub bytes: u64,
+}
+
+/// The worker's set of communicator handles, owned by its comm thread.
+pub struct WorkerComms {
+    pub col: Communicator,
+    pub row: Communicator,
+    pub data: Communicator,
+}
+
+impl CommStream {
+    pub fn spawn(mut comms: WorkerComms) -> CommStream {
+        let (tx, rx) = channel::<Req>();
+        let join = std::thread::Builder::new()
+            .name("t3d-comm".into())
+            .spawn(move || {
+                let mut stats = CommStats::default();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Ar { kind, op, mut buf, reply } => {
+                            let comm = match kind {
+                                CommKind::Col => &mut comms.col,
+                                CommKind::Row => &mut comms.row,
+                                CommKind::Data => &mut comms.data,
+                            };
+                            stats.calls += 1;
+                            stats.bytes += (buf.len() * 4) as u64;
+                            comm.all_reduce(&mut buf, op);
+                            // receiver may have been dropped on shutdown
+                            let _ = reply.send(buf);
+                        }
+                        Req::Stop => break,
+                    }
+                }
+                stats
+            })
+            .expect("spawn comm thread");
+        CommStream { tx, join: Some(join) }
+    }
+
+    /// Enqueue an all-reduce; returns immediately.
+    pub fn post(&self, kind: CommKind, op: ReduceOp, buf: Vec<f32>) -> Pending {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Ar { kind, op, buf, reply })
+            .expect("comm stream died");
+        Pending { rx }
+    }
+
+    /// Synchronous convenience (post + wait).
+    pub fn all_reduce(&self, kind: CommKind, op: ReduceOp, buf: Vec<f32>) -> Vec<f32> {
+        self.post(kind, op, buf).wait()
+    }
+
+    pub fn shutdown(mut self) -> CommStats {
+        let _ = self.tx.send(Req::Stop);
+        self.join.take().map(|j| j.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for CommStream {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CommGroup;
+
+    fn streams(n: usize) -> Vec<CommStream> {
+        let col = CommGroup::new(n);
+        let row = CommGroup::new(1);
+        let data = CommGroup::new(1);
+        (0..n)
+            .map(|m| {
+                CommStream::spawn(WorkerComms {
+                    col: col.handle(m),
+                    row: row.handle(0),
+                    data: data.handle(0),
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn overlapped_posts_complete_in_order() {
+        let ss = streams(2);
+        let mut joins = Vec::new();
+        for s in ss {
+            joins.push(std::thread::spawn(move || {
+                // post two ARs back to back (the two sub-shards), then wait
+                let p1 = s.post(CommKind::Col, ReduceOp::Sum, vec![1.0; 64]);
+                let p2 = s.post(CommKind::Col, ReduceOp::Sum, vec![2.0; 64]);
+                let r1 = p1.wait();
+                let r2 = p2.wait();
+                let stats = s.shutdown();
+                assert_eq!(stats.calls, 2);
+                (r1[0], r2[0])
+            }));
+        }
+        for j in joins {
+            let (a, b) = j.join().unwrap();
+            assert_eq!((a, b), (2.0, 4.0));
+        }
+    }
+
+    #[test]
+    fn sync_helper_works() {
+        let ss = streams(2);
+        let mut joins = Vec::new();
+        for s in ss {
+            joins.push(std::thread::spawn(move || {
+                let out = s.all_reduce(CommKind::Col, ReduceOp::Max, vec![-1.0, 3.0]);
+                out
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), vec![-1.0, 3.0]);
+        }
+    }
+}

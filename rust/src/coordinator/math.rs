@@ -1,0 +1,97 @@
+//! Host-side vector math for the coordinator's glue operations (bias
+//! broadcasts, residual adds, bias-gradient column sums).  Everything that
+//! is O(m*n) matmul work runs in XLA; these are the O(m+n)–O(m*n)
+//! elementwise/reduction stitches between entry executions.
+
+/// a += b (elementwise).
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += *y;
+    }
+}
+
+/// a = b + c (elementwise) into a fresh vector.
+pub fn add2(b: &[f32], c: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(b.len(), c.len());
+    b.iter().zip(c).map(|(x, y)| x + y).collect()
+}
+
+/// Row-broadcast bias add: x (rows x cols) += bias (cols).
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let cols = bias.len();
+    debug_assert_eq!(x.len() % cols, 0);
+    for row in x.chunks_exact_mut(cols) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += *b;
+        }
+    }
+}
+
+/// Column sums: x (rows x cols) -> (cols). The bias-gradient reduction.
+pub fn colsum(x: &[f32], cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len() % cols, 0);
+    let mut out = vec![0.0f32; cols];
+    for row in x.chunks_exact(cols) {
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += *v;
+        }
+    }
+    out
+}
+
+/// x *= s.
+pub fn scale(x: &mut [f32], s: f32) {
+    for v in x {
+        *v *= s;
+    }
+}
+
+/// Sum of squares (f64 accumulator) — gradient-norm accounting.
+pub fn sqsum(x: &[f32]) -> f64 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum()
+}
+
+/// Elementwise max into a (for the xent global-max protocol).
+pub fn max_assign(a: &mut [f32], b: &[f32]) {
+    for (x, y) in a.iter_mut().zip(b) {
+        *x = x.max(*y);
+    }
+}
+
+pub fn sum(x: &[f32]) -> f64 {
+    x.iter().map(|v| *v as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_broadcast() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        add_bias(&mut x, &[10.0, 20.0, 30.0]);
+        assert_eq!(x, vec![11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
+    }
+
+    #[test]
+    fn colsum_matches_manual() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        assert_eq!(colsum(&x, 3), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn add_scale_sqsum() {
+        let mut a = vec![1.0, 2.0];
+        add_assign(&mut a, &[3.0, 4.0]);
+        assert_eq!(a, vec![4.0, 6.0]);
+        scale(&mut a, 0.5);
+        assert_eq!(a, vec![2.0, 3.0]);
+        assert_eq!(sqsum(&a), 13.0);
+        assert_eq!(sum(&a), 5.0);
+        assert_eq!(add2(&a, &[1.0, 1.0]), vec![3.0, 4.0]);
+        let mut m = vec![1.0, 5.0];
+        max_assign(&mut m, &[2.0, 3.0]);
+        assert_eq!(m, vec![2.0, 5.0]);
+    }
+}

@@ -1,0 +1,618 @@
+//! The live Tensor3D coordinator: Algorithm 1 + §4.1 + §4.2 over worker
+//! threads executing AOT-compiled JAX/Pallas artifacts via PJRT.
+//!
+//! One [`Worker`] per simulated GPU.  Every collective in
+//! [`Worker::step`] mirrors python/compile/sharded_ref.py (the executable
+//! spec pinned by pytest) collective-for-collective:
+//!
+//! ```text
+//! forward, per block:          backward, per block (reversed):
+//!   ln1 stats        AR_col      mlp2 dX           AR_col
+//!   qkv matmul       AR_col      mlp1 dX           AR_row
+//!   attention        local       ln2 bwd stats     AR_col
+//!   out-proj (§4.1T) AR_row      proj dX  (§4.1T)  AR_col
+//!   ln2 stats        AR_col      attention bwd     local
+//!   mlp1 matmul      AR_col      qkv dX            AR_row
+//!   gelu             local       ln1 bwd stats     AR_col
+//!   mlp2     (§4.1T) AR_row      (all dW matmuls   local)
+//! head: matmul AR_col, then the vocab-parallel softmax-xent protocol
+//! (row-max AR_row[max], sum-exp AR_row) — see kernels/softmax_xent.py.
+//! ```
+//!
+//! §4.2 overdecomposition: the batch shard is split into `depth`
+//! sub-shards; every stage loops over sub-shards, *posting* its all-reduce
+//! on the dedicated comm thread ([`comm_stream::CommStream`]) and
+//! immediately computing the next sub-shard — compute of X'' overlaps the
+//! in-flight collective of X', exactly the paper's round-robin schedule.
+
+pub mod comm_stream;
+pub mod math;
+
+use crate::collectives::{CommGroup, ReduceOp};
+use crate::layout::init::{init_full, param_specs, ParamSpec};
+use crate::layout::Mat;
+use crate::mesh::{Coord, Mesh};
+use crate::models::gpt::GptDims;
+use crate::runtime::{manifest::Manifest, Arg, ArgV, ArtifactStore};
+use crate::trainer::optimizer::{adamw_step, AdamWConfig, MomentState};
+use anyhow::{Context, Result};
+use comm_stream::{CommKind, CommStream, Pending, WorkerComms};
+use std::collections::BTreeMap;
+
+/// Build the communicator handle sets for every rank of a mesh.
+pub fn build_worker_comms(mesh: &Mesh) -> Vec<WorkerComms> {
+    let col_groups: Vec<CommGroup> = (0..mesh.g_data * mesh.g_c)
+        .map(|_| CommGroup::new(mesh.g_r))
+        .collect();
+    let row_groups: Vec<CommGroup> = (0..mesh.g_data * mesh.g_r)
+        .map(|_| CommGroup::new(mesh.g_c))
+        .collect();
+    let data_groups: Vec<CommGroup> = (0..mesh.g_tensor())
+        .map(|_| CommGroup::new(mesh.g_data))
+        .collect();
+    (0..mesh.world())
+        .map(|rank| {
+            let Coord { d, i, j } = mesh.coord_of(rank);
+            WorkerComms {
+                col: col_groups[d * mesh.g_c + j].handle(i),
+                row: row_groups[d * mesh.g_r + i].handle(j),
+                data: data_groups[i * mesh.g_c + j].handle(d),
+            }
+        })
+        .collect()
+}
+
+/// Per-block forward cache for one sub-shard (Algorithm 1 line 7: cache
+/// the local partitions needed by the backward pass).
+#[derive(Default, Clone)]
+struct BlockCache {
+    pre: Vec<f32>,
+    st1: Vec<f32>,
+    xn: Vec<f32>,
+    qkv: Vec<f32>,
+    att: Vec<f32>,
+    x1: Vec<f32>,
+    st2: Vec<f32>,
+    x1n: Vec<f32>,
+    upre: Vec<f32>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub execs: u64,
+    pub comm_calls: u64,
+}
+
+pub struct Worker {
+    pub rank: usize,
+    pub coord: Coord,
+    pub mesh: Mesh,
+    pub dims: GptDims,
+    store: ArtifactStore,
+    comm: CommStream,
+    specs: Vec<ParamSpec>,
+    pub params: BTreeMap<String, Mat>,
+    moments: BTreeMap<String, MomentState>,
+    pub opt: AdamWConfig,
+    step_no: u64,
+    depth: usize,
+    // shard dims
+    mb: usize,   // sequences per exec (sub-shard)
+    m: usize,    // rows per exec
+    hr: usize,
+    vc: usize,
+}
+
+impl Worker {
+    /// Create a worker: compiles all artifacts on this thread's own PJRT
+    /// client and materializes its parameter shards from the shared seed.
+    pub fn new(
+        manifest: &Manifest,
+        mesh: Mesh,
+        rank: usize,
+        comms: WorkerComms,
+        seed: u64,
+        opt: AdamWConfig,
+    ) -> Result<Worker> {
+        let dims = manifest.model;
+        let coord = mesh.coord_of(rank);
+        let store = ArtifactStore::load(manifest)
+            .with_context(|| format!("worker {rank}: loading artifacts"))?;
+        // generate the full parameter set deterministically, keep shards
+        let full = init_full(&dims, seed);
+        let specs = param_specs(&dims);
+        let mut params = BTreeMap::new();
+        let mut moments = BTreeMap::new();
+        for spec in &specs {
+            let shard = spec.kind.shard(&full[&spec.name], coord.i, coord.j, &mesh);
+            moments.insert(spec.name.clone(), MomentState::zeros(shard.len()));
+            params.insert(spec.name.clone(), shard);
+        }
+        Ok(Worker {
+            rank,
+            coord,
+            mesh,
+            dims,
+            store,
+            comm: CommStream::spawn(comms),
+            specs,
+            params,
+            moments,
+            opt,
+            step_no: 0,
+            depth: manifest.depth,
+            mb: manifest.seqs_per_exec,
+            m: manifest.rows_per_exec,
+            hr: dims.hidden / mesh.g_r,
+            vc: dims.vocab / mesh.g_c,
+        })
+    }
+
+    fn p(&self, name: &str) -> &[f32] {
+        &self.params[name].data
+    }
+
+    /// One full training step on this group's batch shard.
+    ///
+    /// `tokens`: (batch_shard x seq) row-major; `labels`: flattened
+    /// next-token ids (batch_shard * seq).  Identical across all ranks of
+    /// the same data group d.
+    pub fn step(&mut self, tokens: &[i32], labels: &[i32]) -> Result<StepStats> {
+        let depth = self.depth;
+        let seq = self.dims.seq;
+        let layers = self.dims.layers;
+        let _h = self.dims.hidden;
+        assert_eq!(tokens.len(), self.mb * depth * seq, "tokens shape");
+        assert_eq!(labels.len(), tokens.len(), "labels shape");
+        self.step_no += 1;
+
+        // per-sub-shard token slices
+        let tok: Vec<&[i32]> = (0..depth)
+            .map(|s| &tokens[s * self.mb * seq..(s + 1) * self.mb * seq])
+            .collect();
+        let lab: Vec<&[i32]> = (0..depth)
+            .map(|s| &labels[s * self.mb * seq..(s + 1) * self.mb * seq])
+            .collect();
+
+        // Per-step device cache of parameter shards: weights are used by
+        // several entries (fwd, dX, dW, per sub-shard) — uploading each
+        // once per step instead of once per exec removes the dominant
+        // host->device copy traffic (see EXPERIMENTS.md §Perf).
+        let mut pbufs: BTreeMap<String, xla::PjRtBuffer> = BTreeMap::new();
+        for sp in &self.specs {
+            let m = &self.params[&sp.name];
+            let shape: Vec<usize> =
+                if m.rows == 1 { vec![m.cols] } else { vec![m.rows, m.cols] };
+            pbufs.insert(sp.name.clone(), self.store.upload_f32(&m.data, &shape)?);
+        }
+
+        let mut grads: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        let acc = |grads: &mut BTreeMap<String, Vec<f32>>, name: &str, g: Vec<f32>| {
+            match grads.get_mut(name) {
+                Some(buf) => math::add_assign(buf, &g),
+                None => {
+                    grads.insert(name.to_string(), g);
+                }
+            }
+        };
+
+        // ==================== FORWARD ====================
+        let mut x: Vec<Vec<f32>> = Vec::with_capacity(depth);
+        for s in 0..depth {
+            x.push(self.store.call1_v(
+                "embed_fwd",
+                &[ArgV::Host(Arg::I32(tok[s])), ArgV::Dev(&pbufs["wemb"]), ArgV::Dev(&pbufs["wpos"])],
+            )?);
+        }
+        let mut caches: Vec<Vec<BlockCache>> =
+            vec![vec![BlockCache::default(); layers]; depth];
+        let mut pend: Vec<Option<Pending>> = (0..depth).map(|_| None).collect();
+
+        for l in 0..layers {
+            let (g1, b1, wqkv, bq, wproj, bp) = (
+                format!("b{l}.ln1_g"),
+                format!("b{l}.ln1_b"),
+                format!("b{l}.wqkv"),
+                format!("b{l}.bqkv"),
+                format!("b{l}.wproj"),
+                format!("b{l}.bproj"),
+            );
+            let (g2, b2, wmlp1, bm1, wmlp2, bm2) = (
+                format!("b{l}.ln2_g"),
+                format!("b{l}.ln2_b"),
+                format!("b{l}.wmlp1"),
+                format!("b{l}.bmlp1"),
+                format!("b{l}.wmlp2"),
+                format!("b{l}.bmlp2"),
+            );
+            // stage A: ln1 stats -> AR_col
+            for s in 0..depth {
+                let st = self.store.call1_v("ln_stats", &[ArgV::Host(Arg::F32(&x[s]))])?;
+                pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, st));
+            }
+            // stage B: ln apply + qkv matmul -> AR_col
+            for s in 0..depth {
+                let st1 = pend[s].take().unwrap().wait();
+                let xn = self.store.call1_v(
+                    "ln_apply",
+                    &[ArgV::Host(Arg::F32(&x[s])), ArgV::Host(Arg::F32(&st1)), ArgV::Dev(&pbufs[&g1]), ArgV::Dev(&pbufs[&b1])],
+                )?;
+                let part = self
+                    .store
+                    .call1_v("mm_qkv_fwd", &[ArgV::Host(Arg::F32(&xn)), ArgV::Dev(&pbufs[&wqkv])])?;
+                caches[s][l].pre = std::mem::take(&mut x[s]);
+                caches[s][l].st1 = st1;
+                caches[s][l].xn = xn;
+                pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, part));
+            }
+            // stage C: +bias, attention, out-proj matmul -> AR_row (§4.1)
+            for s in 0..depth {
+                let mut qkv = pend[s].take().unwrap().wait();
+                math::add_bias(&mut qkv, self.p(&bq));
+                let att = self.store.call1_v("attn_fwd", &[ArgV::Host(Arg::F32(&qkv))])?;
+                let part = self
+                    .store
+                    .call1_v("mm_proj_fwd", &[ArgV::Host(Arg::F32(&att)), ArgV::Dev(&pbufs[&wproj])])?;
+                caches[s][l].qkv = qkv;
+                caches[s][l].att = att;
+                pend[s] = Some(self.comm.post(CommKind::Row, ReduceOp::Sum, part));
+            }
+            // stage D: residual + ln2 stats -> AR_col
+            for s in 0..depth {
+                let mut proj = pend[s].take().unwrap().wait();
+                math::add_bias(&mut proj, self.p(&bp));
+                math::add_assign(&mut proj, &caches[s][l].pre);
+                let st = self.store.call1_v("ln_stats", &[ArgV::Host(Arg::F32(&proj))])?;
+                caches[s][l].x1 = proj;
+                pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, st));
+            }
+            // stage E: ln2 apply + mlp1 matmul -> AR_col
+            for s in 0..depth {
+                let st2 = pend[s].take().unwrap().wait();
+                let x1n = self.store.call1_v(
+                    "ln_apply",
+                    &[
+                        ArgV::Host(Arg::F32(&caches[s][l].x1)),
+                        ArgV::Host(Arg::F32(&st2)),
+                        ArgV::Dev(&pbufs[&g2]),
+                        ArgV::Dev(&pbufs[&b2]),
+                    ],
+                )?;
+                let part = self
+                    .store
+                    .call1_v("mm_mlp1_fwd", &[ArgV::Host(Arg::F32(&x1n)), ArgV::Dev(&pbufs[&wmlp1])])?;
+                caches[s][l].st2 = st2;
+                caches[s][l].x1n = x1n;
+                pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, part));
+            }
+            // stage F: +bias, gelu, mlp2 matmul -> AR_row (§4.1)
+            for s in 0..depth {
+                let mut upre = pend[s].take().unwrap().wait();
+                math::add_bias(&mut upre, self.p(&bm1));
+                let u = self.store.call1_v("gelu_fwd", &[ArgV::Host(Arg::F32(&upre))])?;
+                let part = self
+                    .store
+                    .call1_v("mm_mlp2_fwd", &[ArgV::Host(Arg::F32(&u)), ArgV::Dev(&pbufs[&wmlp2])])?;
+                caches[s][l].upre = upre;
+                pend[s] = Some(self.comm.post(CommKind::Row, ReduceOp::Sum, part));
+            }
+            // stage G: residual -> x for next block
+            for s in 0..depth {
+                let mut mlp = pend[s].take().unwrap().wait();
+                math::add_bias(&mut mlp, self.p(&bm2));
+                math::add_assign(&mut mlp, &caches[s][l].x1);
+                x[s] = mlp;
+            }
+        }
+
+        // final LN + head + vocab-parallel softmax-xent
+        let mut stf: Vec<Vec<f32>> = vec![Vec::new(); depth];
+        let mut xf: Vec<Vec<f32>> = vec![Vec::new(); depth];
+        let mut logits: Vec<Vec<f32>> = vec![Vec::new(); depth];
+        let mut gmax: Vec<Vec<f32>> = vec![Vec::new(); depth];
+        let mut gsum: Vec<Vec<f32>> = vec![Vec::new(); depth];
+        let mut dlogits: Vec<Vec<f32>> = vec![Vec::new(); depth];
+        let mut loss_local = 0.0f64;
+        for s in 0..depth {
+            let st = self.store.call1_v("ln_stats", &[ArgV::Host(Arg::F32(&x[s]))])?;
+            pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, st));
+        }
+        for s in 0..depth {
+            let st = pend[s].take().unwrap().wait();
+            let f = self.store.call1_v(
+                "ln_apply",
+                &[ArgV::Host(Arg::F32(&x[s])), ArgV::Host(Arg::F32(&st)), ArgV::Dev(&pbufs["lnf_g"]), ArgV::Dev(&pbufs["lnf_b"])],
+            )?;
+            let part = self
+                .store
+                .call1_v("mm_head_fwd", &[ArgV::Host(Arg::F32(&f)), ArgV::Dev(&pbufs["head_w"])])?;
+            stf[s] = st;
+            xf[s] = f;
+            pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, part));
+        }
+        for s in 0..depth {
+            let mut lg = pend[s].take().unwrap().wait();
+            math::add_bias(&mut lg, self.p("head_b"));
+            let rm = self.store.call1_v("xent_rowmax", &[ArgV::Host(Arg::F32(&lg))])?;
+            logits[s] = lg;
+            pend[s] = Some(self.comm.post(CommKind::Row, ReduceOp::Max, rm));
+        }
+        for s in 0..depth {
+            let gm = pend[s].take().unwrap().wait();
+            let se = self
+                .store
+                .call1_v("xent_sumexp", &[ArgV::Host(Arg::F32(&logits[s])), ArgV::Host(Arg::F32(&gm))])?;
+            gmax[s] = gm;
+            pend[s] = Some(self.comm.post(CommKind::Row, ReduceOp::Sum, se));
+        }
+        let off = [(self.coord.j * self.vc) as i32];
+        for s in 0..depth {
+            let gs = pend[s].take().unwrap().wait();
+            let out = self.store.call_v(
+                "xent_loss_grad",
+                &[
+                    ArgV::Host(Arg::F32(&logits[s])),
+                    ArgV::Host(Arg::I32(lab[s])),
+                    ArgV::Host(Arg::F32(&gmax[s])),
+                    ArgV::Host(Arg::F32(&gs)),
+                    ArgV::Host(Arg::I32(&off)),
+                ],
+            )?;
+            gsum[s] = gs;
+            loss_local += math::sum(&out[0]);
+            dlogits[s] = out[1].clone();
+        }
+
+        // ==================== BACKWARD ====================
+        let mut dx: Vec<Vec<f32>> = vec![Vec::new(); depth];
+        // head (non-transposed): dX AR over ROW comm
+        for s in 0..depth {
+            acc(&mut grads, "head_b", math::colsum(&dlogits[s], self.vc));
+            let dw = self
+                .store
+                .call1_v("mm_head_dw", &[ArgV::Host(Arg::F32(&xf[s])), ArgV::Host(Arg::F32(&dlogits[s]))])?;
+            acc(&mut grads, "head_w", dw);
+            let part = self
+                .store
+                .call1_v("mm_head_dx", &[ArgV::Host(Arg::F32(&dlogits[s])), ArgV::Dev(&pbufs["head_w"])])?;
+            pend[s] = Some(self.comm.post(CommKind::Row, ReduceOp::Sum, part));
+        }
+        // final LN backward
+        let mut dxf: Vec<Vec<f32>> = vec![Vec::new(); depth];
+        for s in 0..depth {
+            let d = pend[s].take().unwrap().wait();
+            let bst = self.store.call1_v(
+                "ln_bwd_stats",
+                &[ArgV::Host(Arg::F32(&x[s])), ArgV::Host(Arg::F32(&stf[s])), ArgV::Dev(&pbufs["lnf_g"]), ArgV::Host(Arg::F32(&d))],
+            )?;
+            dxf[s] = d;
+            pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, bst));
+        }
+        for s in 0..depth {
+            let bst = pend[s].take().unwrap().wait();
+            let out = self.store.call_v(
+                "ln_bwd_finish",
+                &[
+                    ArgV::Host(Arg::F32(&x[s])),
+                    ArgV::Host(Arg::F32(&stf[s])),
+                    ArgV::Dev(&pbufs["lnf_g"]),
+                    ArgV::Host(Arg::F32(&dxf[s])),
+                    ArgV::Host(Arg::F32(&bst)),
+                ],
+            )?;
+            dx[s] = out[0].clone();
+            acc(&mut grads, "lnf_g", out[1].clone());
+            acc(&mut grads, "lnf_b", out[2].clone());
+        }
+
+        for l in (0..layers).rev() {
+            let (g1, wqkv, wproj) =
+                (format!("b{l}.ln1_g"), format!("b{l}.wqkv"), format!("b{l}.wproj"));
+            let (g2, wmlp1, wmlp2) =
+                (format!("b{l}.ln2_g"), format!("b{l}.wmlp1"), format!("b{l}.wmlp2"));
+
+            // mlp2 (§4.1 transposed): bwd AR over COLUMN comm
+            for s in 0..depth {
+                let c = &caches[s][l];
+                acc(&mut grads, &format!("b{l}.bmlp2"), math::colsum(&dx[s], self.hr));
+                // recompute u = gelu(upre) locally (checkpointing)
+                let u = self.store.call1_v("gelu_fwd", &[ArgV::Host(Arg::F32(&c.upre))])?;
+                let dw = self.store.call1_v("mm_mlp2_dw", &[ArgV::Host(Arg::F32(&u)), ArgV::Host(Arg::F32(&dx[s]))])?;
+                acc(&mut grads, &format!("b{l}.wmlp2"), dw);
+                let part = self
+                    .store
+                    .call1_v("mm_mlp2_dx", &[ArgV::Host(Arg::F32(&dx[s])), ArgV::Dev(&pbufs[&wmlp2])])?;
+                pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, part));
+            }
+            // gelu bwd + mlp1 dW/dX -> AR_row
+            for s in 0..depth {
+                let dv = pend[s].take().unwrap().wait();
+                let c = &caches[s][l];
+                let du = self
+                    .store
+                    .call1_v("gelu_bwd", &[ArgV::Host(Arg::F32(&c.upre)), ArgV::Host(Arg::F32(&dv))])?;
+                acc(&mut grads, &format!("b{l}.bmlp1"), math::colsum(&du, du.len() / self.m));
+                let dw = self
+                    .store
+                    .call1_v("mm_mlp1_dw", &[ArgV::Host(Arg::F32(&c.x1n)), ArgV::Host(Arg::F32(&du))])?;
+                acc(&mut grads, &format!("b{l}.wmlp1"), dw);
+                let part = self
+                    .store
+                    .call1_v("mm_mlp1_dx", &[ArgV::Host(Arg::F32(&du)), ArgV::Dev(&pbufs[&wmlp1])])?;
+                pend[s] = Some(self.comm.post(CommKind::Row, ReduceOp::Sum, part));
+            }
+            // ln2 backward
+            for s in 0..depth {
+                let dx1n = pend[s].take().unwrap().wait();
+                let c = &caches[s][l];
+                let bst = self.store.call1_v(
+                    "ln_bwd_stats",
+                    &[ArgV::Host(Arg::F32(&c.x1)), ArgV::Host(Arg::F32(&c.st2)), ArgV::Dev(&pbufs[&g2]), ArgV::Host(Arg::F32(&dx1n))],
+                )?;
+                caches[s][l].x1n = dx1n; // reuse slot to carry dx1n
+                pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, bst));
+            }
+            // ln2 finish + residual; proj dW/dX -> AR_col (§4.1 transposed)
+            for s in 0..depth {
+                let bst = pend[s].take().unwrap().wait();
+                let c = &caches[s][l];
+                let out = self.store.call_v(
+                    "ln_bwd_finish",
+                    &[
+                        ArgV::Host(Arg::F32(&c.x1)),
+                        ArgV::Host(Arg::F32(&c.st2)),
+                        ArgV::Dev(&pbufs[&g2]),
+                        ArgV::Host(Arg::F32(&c.x1n)), // dx1n carried
+                        ArgV::Host(Arg::F32(&bst)),
+                    ],
+                )?;
+                acc(&mut grads, &format!("b{l}.ln2_g"), out[1].clone());
+                acc(&mut grads, &format!("b{l}.ln2_b"), out[2].clone());
+                let mut dx1 = out[0].clone();
+                math::add_assign(&mut dx1, &dx[s]); // residual
+                acc(&mut grads, &format!("b{l}.bproj"), math::colsum(&dx1, self.hr));
+                let dw = self
+                    .store
+                    .call1_v("mm_proj_dw", &[ArgV::Host(Arg::F32(&caches[s][l].att)), ArgV::Host(Arg::F32(&dx1))])?;
+                acc(&mut grads, &format!("b{l}.wproj"), dw);
+                let part = self
+                    .store
+                    .call1_v("mm_proj_dx", &[ArgV::Host(Arg::F32(&dx1)), ArgV::Dev(&pbufs[&wproj])])?;
+                dx[s] = dx1; // carry dx1 for the residual into the block input
+                pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, part));
+            }
+            // attention bwd + qkv dW/dX -> AR_row
+            for s in 0..depth {
+                let datt = pend[s].take().unwrap().wait();
+                let c = &caches[s][l];
+                let dqkv = self
+                    .store
+                    .call1_v("attn_bwd", &[ArgV::Host(Arg::F32(&c.qkv)), ArgV::Host(Arg::F32(&datt))])?;
+                acc(&mut grads, &format!("b{l}.bqkv"), math::colsum(&dqkv, dqkv.len() / self.m));
+                let dw = self
+                    .store
+                    .call1_v("mm_qkv_dw", &[ArgV::Host(Arg::F32(&c.xn)), ArgV::Host(Arg::F32(&dqkv))])?;
+                acc(&mut grads, &format!("b{l}.wqkv"), dw);
+                let part = self
+                    .store
+                    .call1_v("mm_qkv_dx", &[ArgV::Host(Arg::F32(&dqkv)), ArgV::Dev(&pbufs[&wqkv])])?;
+                pend[s] = Some(self.comm.post(CommKind::Row, ReduceOp::Sum, part));
+            }
+            // ln1 backward
+            for s in 0..depth {
+                let dxn = pend[s].take().unwrap().wait();
+                let c = &caches[s][l];
+                let bst = self.store.call1_v(
+                    "ln_bwd_stats",
+                    &[ArgV::Host(Arg::F32(&c.pre)), ArgV::Host(Arg::F32(&c.st1)), ArgV::Dev(&pbufs[&g1]), ArgV::Host(Arg::F32(&dxn))],
+                )?;
+                caches[s][l].xn = dxn; // carry dxn
+                pend[s] = Some(self.comm.post(CommKind::Col, ReduceOp::Sum, bst));
+            }
+            for s in 0..depth {
+                let bst = pend[s].take().unwrap().wait();
+                let c = &caches[s][l];
+                let out = self.store.call_v(
+                    "ln_bwd_finish",
+                    &[
+                        ArgV::Host(Arg::F32(&c.pre)),
+                        ArgV::Host(Arg::F32(&c.st1)),
+                        ArgV::Dev(&pbufs[&g1]),
+                        ArgV::Host(Arg::F32(&c.xn)), // dxn carried
+                        ArgV::Host(Arg::F32(&bst)),
+                    ],
+                )?;
+                acc(&mut grads, &format!("b{l}.ln1_g"), out[1].clone());
+                acc(&mut grads, &format!("b{l}.ln1_b"), out[2].clone());
+                let mut d = out[0].clone();
+                math::add_assign(&mut d, &dx[s]); // residual into block input
+                dx[s] = d;
+            }
+        }
+
+        // embeddings
+        for s in 0..depth {
+            let dwpos = self.store.call1_v("embed_bwd_pos", &[ArgV::Host(Arg::F32(&dx[s]))])?;
+            acc(&mut grads, "wpos", dwpos);
+            let dwemb = self
+                .store
+                .call1_v("embed_bwd_table", &[ArgV::Host(Arg::I32(tok[s])), ArgV::Host(Arg::F32(&dx[s]))])?;
+            acc(&mut grads, "wemb", dwemb);
+        }
+
+        // ============ data-parallel gradient sync (one fused AR) ========
+        if self.mesh.g_data > 1 {
+            let total: usize = self.specs.iter().map(|sp| grads[&sp.name].len()).sum();
+            let mut flat = Vec::with_capacity(total);
+            for sp in &self.specs {
+                flat.extend_from_slice(&grads[&sp.name]);
+            }
+            let flat = self.comm.all_reduce(CommKind::Data, ReduceOp::Sum, flat);
+            let mut off = 0;
+            for sp in &self.specs {
+                let g = grads.get_mut(&sp.name).unwrap();
+                let n = g.len();
+                g.copy_from_slice(&flat[off..off + n]);
+                off += n;
+            }
+        }
+
+        // ============ gradient norm (owned shards, counted once) ========
+        let mut normsq = 0.0f64;
+        for sp in &self.specs {
+            if sp.kind.owned(self.coord.i, self.coord.j) {
+                normsq += math::sqsum(&grads[&sp.name]);
+            }
+        }
+        let ns = self
+            .comm
+            .all_reduce(CommKind::Col, ReduceOp::Sum, vec![normsq as f32]);
+        let ns = self.comm.all_reduce(CommKind::Row, ReduceOp::Sum, ns);
+        let grad_norm = (ns[0] as f64).sqrt();
+
+        // ============ optimizer ============
+        for sp in &self.specs {
+            let w = self.params.get_mut(&sp.name).unwrap();
+            let st = self.moments.get_mut(&sp.name).unwrap();
+            adamw_step(&self.opt, self.step_no, &mut w.data, &grads[&sp.name], st);
+        }
+
+        // ============ loss reduction ============
+        // local parts hold the owned-logz contributions of this vocab
+        // shard: sum over the row comm gives the full loss; identical
+        // across i (activations replicated); average over data groups is a
+        // sum because each group's xent used the global total_rows.
+        let lv = self
+            .comm
+            .all_reduce(CommKind::Row, ReduceOp::Sum, vec![loss_local as f32]);
+        let lv = self.comm.all_reduce(CommKind::Data, ReduceOp::Sum, lv);
+        Ok(StepStats {
+            loss: lv[0] as f64,
+            grad_norm,
+            execs: self.store.exec_count(),
+            comm_calls: 0,
+        })
+    }
+
+    /// Inference-only forward of one sub-shard-sized batch; returns the
+    /// mean loss (used by eval + tests without touching params).
+    pub fn eval_loss(&mut self, tokens: &[i32], labels: &[i32]) -> Result<f64> {
+        // run a full step on a copy of the state? cheaper: temporarily run
+        // forward only — reuse step() pieces would be invasive; simplest
+        // correct approach: snapshot params+moments, run step, restore.
+        let params = self.params.clone();
+        let moments = self.moments.clone();
+        let step_no = self.step_no;
+        let stats = self.step(tokens, labels)?;
+        self.params = params;
+        self.moments = moments;
+        self.step_no = step_no;
+        Ok(stats.loss)
+    }
+
+    pub fn shutdown(self) -> comm_stream::CommStats {
+        self.comm.shutdown()
+    }
+}

@@ -1,0 +1,356 @@
+//! Tensor layout: host matrices, the paper's shard layouts, and
+//! deterministic parameter initialization.
+//!
+//! The sharding rules mirror python/compile/sharded_ref.py exactly (that
+//! file is the executable spec; its pytest suite pins the protocol):
+//!
+//! * activations are column-sharded over the r-index at block boundaries;
+//! * non-transposed weights `W (k, n)` place block `(i, j)` of shape
+//!   `(k/G_r, n/G_c)` on GPU(i, j);
+//! * §4.1 **transposed** weights place block `(j, i)` of shape
+//!   `(k/G_c, n/G_r)` on GPU(i, j) — done once at init, so no activation
+//!   redistribution is ever needed between layers;
+//! * vectors (LN params, biases) are sliced over whichever index their
+//!   consumer shard uses, replicated over the other, with a canonical
+//!   owner for gradient-norm accounting.
+
+pub mod init;
+
+use crate::mesh::Mesh;
+
+/// Host-side matrix (row-major f32).  1-D tensors are `rows == 1`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn vector(data: Vec<f32>) -> Self {
+        Mat { rows: 1, cols: data.len(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Columns [c0, c1) as a new matrix.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut out = Vec::with_capacity(self.rows * w);
+        for r in 0..self.rows {
+            let base = r * self.cols;
+            out.extend_from_slice(&self.data[base + c0..base + c1]);
+        }
+        Mat::from_vec(self.rows, w, out)
+    }
+
+    /// Rows [r0, r1) as a new matrix (cheap: contiguous).
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
+    }
+
+    /// Block (bi, bj) of a (g_r x g_c) blocking.
+    pub fn block(&self, bi: usize, bj: usize, g_r: usize, g_c: usize) -> Mat {
+        assert_eq!(self.rows % g_r, 0, "rows {} % g_r {}", self.rows, g_r);
+        assert_eq!(self.cols % g_c, 0, "cols {} % g_c {}", self.cols, g_c);
+        let (br, bc) = (self.rows / g_r, self.cols / g_c);
+        self.slice_rows(bi * br, (bi + 1) * br).slice_cols(bj * bc, (bj + 1) * bc)
+    }
+
+    /// Write `block` back at block position (bi, bj).
+    pub fn set_block(&mut self, bi: usize, bj: usize, g_r: usize, g_c: usize, block: &Mat) {
+        let (br, bc) = (self.rows / g_r, self.cols / g_c);
+        assert_eq!((block.rows, block.cols), (br, bc));
+        for r in 0..br {
+            let src = r * bc;
+            let dst = (bi * br + r) * self.cols + bj * bc;
+            self.data[dst..dst + bc].copy_from_slice(&block.data[src..src + bc]);
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.at(r, c));
+            }
+        }
+        out
+    }
+
+    /// Concatenate along columns.
+    pub fn concat_cols(parts: &[&Mat]) -> Mat {
+        let rows = parts[0].rows;
+        assert!(parts.iter().all(|p| p.rows == rows));
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut off = 0;
+        for p in parts {
+            for r in 0..rows {
+                let dst = r * cols + off;
+                out.data[dst..dst + p.cols]
+                    .copy_from_slice(&p.data[r * p.cols..(r + 1) * p.cols]);
+            }
+            off += p.cols;
+        }
+        out
+    }
+
+    /// Concatenate along rows.
+    pub fn concat_rows(parts: &[&Mat]) -> Mat {
+        let cols = parts[0].cols;
+        assert!(parts.iter().all(|p| p.cols == cols));
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Mat::from_vec(rows, cols, data)
+    }
+
+    /// Frobenius-ish max-abs difference (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// How a full parameter maps onto the G_r x G_c grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardKind {
+    /// Slice the last dim over the r-index; replicated over columns
+    /// (owner: j == 0).  LN params, wemb/wpos, row-side biases.
+    SliceR,
+    /// Slice the last dim over the c-index; replicated over rows
+    /// (owner: i == 0).  Column-side biases (bqkv, bmlp1, head_b).
+    SliceC,
+    /// 2-D block (i, j) of (k/G_r, n/G_c).  Always owned.
+    Block,
+    /// §4.1 transposed: block (j, i) of (k/G_c, n/G_r).  Always owned.
+    BlockT,
+}
+
+impl ShardKind {
+    /// Shape of the shard of a (rows x cols) parameter on any GPU.
+    pub fn shard_shape(&self, rows: usize, cols: usize, mesh: &Mesh) -> (usize, usize) {
+        match self {
+            ShardKind::SliceR => (rows, cols / mesh.g_r),
+            ShardKind::SliceC => (rows, cols / mesh.g_c),
+            ShardKind::Block => (rows / mesh.g_r, cols / mesh.g_c),
+            ShardKind::BlockT => (rows / mesh.g_c, cols / mesh.g_r),
+        }
+    }
+
+    /// Extract GPU(i, j)'s shard of the full parameter.
+    pub fn shard(&self, full: &Mat, i: usize, j: usize, mesh: &Mesh) -> Mat {
+        match self {
+            ShardKind::SliceR => {
+                let w = full.cols / mesh.g_r;
+                full.slice_cols(i * w, (i + 1) * w)
+            }
+            ShardKind::SliceC => {
+                let w = full.cols / mesh.g_c;
+                full.slice_cols(j * w, (j + 1) * w)
+            }
+            ShardKind::Block => full.block(i, j, mesh.g_r, mesh.g_c),
+            ShardKind::BlockT => full.block(j, i, mesh.g_c, mesh.g_r),
+        }
+    }
+
+    /// Whether GPU(i, j) is the canonical owner of its shard values.
+    pub fn owned(&self, i: usize, j: usize) -> bool {
+        match self {
+            ShardKind::SliceR => j == 0,
+            ShardKind::SliceC => i == 0,
+            ShardKind::Block | ShardKind::BlockT => true,
+        }
+    }
+
+    /// Reassemble the full parameter from the grid of shards
+    /// `shards[i][j]` (inverse of [`ShardKind::shard`]).
+    pub fn assemble(&self, shards: &[Vec<Mat>], mesh: &Mesh) -> Mat {
+        match self {
+            ShardKind::SliceR => {
+                let parts: Vec<&Mat> = (0..mesh.g_r).map(|i| &shards[i][0]).collect();
+                Mat::concat_cols(&parts)
+            }
+            ShardKind::SliceC => {
+                let parts: Vec<&Mat> = (0..mesh.g_c).map(|j| &shards[0][j]).collect();
+                Mat::concat_cols(&parts)
+            }
+            ShardKind::Block => {
+                let rows: Vec<Mat> = (0..mesh.g_r)
+                    .map(|i| {
+                        let parts: Vec<&Mat> = (0..mesh.g_c).map(|j| &shards[i][j]).collect();
+                        Mat::concat_cols(&parts)
+                    })
+                    .collect();
+                Mat::concat_rows(&rows.iter().collect::<Vec<_>>())
+            }
+            ShardKind::BlockT => {
+                let rows: Vec<Mat> = (0..mesh.g_c)
+                    .map(|j| {
+                        let parts: Vec<&Mat> = (0..mesh.g_r).map(|i| &shards[i][j]).collect();
+                        Mat::concat_cols(&parts)
+                    })
+                    .collect();
+                Mat::concat_rows(&rows.iter().collect::<Vec<_>>())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 1.0);
+        m
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        prop::check("block-roundtrip", 60, |g| {
+            let g_r = g.usize(1, 4);
+            let g_c = g.usize(1, 4);
+            let rows = g_r * g.usize(1, 6);
+            let cols = g_c * g.usize(1, 6);
+            let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+            let full = rand_mat(&mut rng, rows, cols);
+            let mut back = Mat::zeros(rows, cols);
+            for i in 0..g_r {
+                for j in 0..g_c {
+                    back.set_block(i, j, g_r, g_c, &full.block(i, j, g_r, g_c));
+                }
+            }
+            if back == full { Ok(()) } else { Err("block roundtrip failed".into()) }
+        });
+    }
+
+    #[test]
+    fn shard_assemble_roundtrip_all_kinds() {
+        prop::check("shard-roundtrip", 40, |g| {
+            let mesh = Mesh::new(1, g.usize(1, 4), g.usize(1, 4), 1);
+            let lcm = mesh.g_r * mesh.g_c;
+            let rows = lcm * g.usize(1, 3);
+            let cols = lcm * g.usize(1, 3);
+            let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+            for kind in [ShardKind::SliceR, ShardKind::SliceC, ShardKind::Block, ShardKind::BlockT] {
+                let full = rand_mat(&mut rng, rows, cols);
+                let shards: Vec<Vec<Mat>> = (0..mesh.g_r)
+                    .map(|i| (0..mesh.g_c).map(|j| kind.shard(&full, i, j, &mesh)).collect())
+                    .collect();
+                // every shard has the advertised shape
+                let want = kind.shard_shape(rows, cols, &mesh);
+                for row in &shards {
+                    for s in row {
+                        if (s.rows, s.cols) != want {
+                            return Err(format!("{kind:?}: shape {:?} != {want:?}", (s.rows, s.cols)));
+                        }
+                    }
+                }
+                let back = kind.assemble(&shards, &mesh);
+                if back.max_abs_diff(&full) != 0.0 {
+                    return Err(format!("{kind:?} roundtrip failed on {mesh}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ownership_covers_exactly_once() {
+        prop::check("ownership", 40, |g| {
+            let mesh = Mesh::new(1, g.usize(1, 4), g.usize(1, 4), 1);
+            for kind in [ShardKind::SliceR, ShardKind::SliceC, ShardKind::Block, ShardKind::BlockT] {
+                let rows = mesh.g_r * mesh.g_c * 2;
+                let cols = mesh.g_r * mesh.g_c * 2;
+                let (sr, sc) = kind.shard_shape(rows, cols, &mesh);
+                let mut owned = 0usize;
+                for i in 0..mesh.g_r {
+                    for j in 0..mesh.g_c {
+                        if kind.owned(i, j) {
+                            owned += sr * sc;
+                        }
+                    }
+                }
+                if owned != rows * cols {
+                    return Err(format!("{kind:?}: owned {owned} != full {}", rows * cols));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replicated_shards_equal_across_replication_dim() {
+        let mesh = Mesh::new(1, 2, 4, 1);
+        let mut rng = Rng::new(3);
+        let full = rand_mat(&mut rng, 1, 8);
+        for j in 0..4 {
+            for i in 0..2 {
+                let s = ShardKind::SliceC.shard(&full, i, j, &mesh);
+                let s0 = ShardKind::SliceC.shard(&full, 0, j, &mesh);
+                assert_eq!(s, s0);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = rand_mat(&mut rng, 5, 7);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn blockt_equals_block_of_transposed_grid() {
+        // BlockT(i,j) over (g_r,g_c) == Block(j,i) over (g_c,g_r)
+        let mesh = Mesh::new(1, 2, 3, 1);
+        let mut rng = Rng::new(9);
+        let full = rand_mat(&mut rng, 6, 6);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(
+                    ShardKind::BlockT.shard(&full, i, j, &mesh),
+                    full.block(j, i, 3, 2)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! # Tensor3D — communication-minimizing asynchronous tensor parallelism
+//!
+//! A Rust + JAX + Pallas reproduction of *"Communication-minimizing
+//! Asynchronous Tensor Parallelism"* / *"A 4D Hybrid Algorithm to Scale
+//! Parallel Training to Thousands of GPUs"* (Singh, Sating, Bhatele).
+//!
+//! The paper's 4-D hybrid decomposition `G = G_data x G_r x G_c` (+ the
+//! depth-wise overdecomposition of §4.2) is implemented twice, sharing all
+//! model/mesh/communication-model code:
+//!
+//! * a **live runtime** ([`coordinator`], [`runtime`], [`collectives`])
+//!   that trains real transformers: each simulated GPU is a worker thread
+//!   owning a PJRT CPU client that executes AOT-compiled JAX/Pallas
+//!   artifacts, with all collectives performed in Rust — Algorithm 1,
+//!   the §4.1 transposed layout and the §4.2 round-robin sub-shard
+//!   scheduler, end to end;
+//! * a **discrete-event cluster simulator** ([`sim`], [`strategies`])
+//!   that replays the paper's Perlmutter/Polaris experiments (Figures
+//!   4-9, Tables 4-5) at 32-256 GPUs from the same analytic communication
+//!   model the paper derives in §5 ([`comm_model`]).
+//!
+//! Entry points: the `tensor3d` binary (`train`, `plan`, `simulate`,
+//! `sweep`, `trace`, `repro`) and the `examples/` drivers.
+
+pub mod util;
+pub mod mesh;
+pub mod layout;
+pub mod collectives;
+pub mod comm_model;
+pub mod models;
+pub mod sim;
+pub mod strategies;
+pub mod runtime;
+pub mod coordinator;
+pub mod trainer;
+pub mod metrics;
+pub mod planner;
+pub mod repro;
+
+pub use mesh::Mesh;

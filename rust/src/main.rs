@@ -1,0 +1,275 @@
+//! `tensor3d` — CLI for the Tensor3D framework.
+//!
+//! Subcommands:
+//!   train     live training on AOT artifacts (the real three-layer stack)
+//!   plan      §5 planner: recommend (G_data, G_r, G_c) for a model+cluster
+//!   simulate  one iteration of a strategy on the cluster simulator
+//!   sweep     Fig. 5 configuration sweep
+//!   trace     Fig. 4 overlap trace (writes Chrome trace JSON)
+//!   repro     regenerate any paper table/figure (fig4..fig9, tab4, tab5,
+//!             ablation, all)
+
+use anyhow::{anyhow, bail, Result};
+use tensor3d::comm_model;
+use tensor3d::mesh::Mesh;
+use tensor3d::models::{gpt, unet, NetworkDesc};
+use tensor3d::planner::{self, NetKind};
+use tensor3d::repro;
+use tensor3d::sim::Machine;
+use tensor3d::strategies::{self, Strategy};
+use tensor3d::trainer::{self, optimizer::AdamWConfig, TrainConfig};
+use tensor3d::util::cli::{flag, opt, Args};
+use tensor3d::util::table::{fmt_bytes, AsciiChart};
+
+fn model_by_name(name: &str) -> Result<(NetworkDesc, NetKind, usize, usize)> {
+    // returns (network, kind, default batch, paper g_tensor)
+    let t3 = gpt::table3();
+    let t2 = unet::table2();
+    let hit = match name {
+        "gpt5b" => (t3[0].dims.network(), NetKind::Transformer, t3[0].batch, t3[0].g_tensor),
+        "gpt10b" => (t3[1].dims.network(), NetKind::Transformer, t3[1].batch, t3[1].g_tensor),
+        "gpt20b" => (t3[2].dims.network(), NetKind::Transformer, t3[2].batch, t3[2].g_tensor),
+        "gpt40b" => (t3[3].dims.network(), NetKind::Transformer, t3[3].batch, t3[3].g_tensor),
+        "gpt9b" => (gpt::gpt_9b().network(), NetKind::Transformer, 64, 8),
+        "unet3.5b" => (t2[0].dims.network(), NetKind::Unet, t2[0].batch, t2[0].g_tensor),
+        "unet7.5b" => (t2[1].dims.network(), NetKind::Unet, t2[1].batch, t2[1].g_tensor),
+        "unet14b" => (t2[2].dims.network(), NetKind::Unet, t2[2].batch, t2[2].g_tensor),
+        "unet28b" => (t2[3].dims.network(), NetKind::Unet, t2[3].batch, t2[3].g_tensor),
+        "unet280m" => (unet::unet_280m().network(), NetKind::Unet, 256, 4),
+        other => bail!(
+            "unknown model {other:?} (try gpt5b/gpt9b/gpt10b/gpt20b/gpt40b, unet3.5b/7.5b/14b/28b)"
+        ),
+    };
+    Ok(hit)
+}
+
+fn strategy_by_name(name: &str, depth: usize) -> Result<Strategy> {
+    Ok(match name {
+        "tensor3d" => Strategy::Tensor3d { depth, transpose_opt: true },
+        "tensor3d-sync" => Strategy::Tensor3d { depth: 1, transpose_opt: true },
+        "tensor3d-noxpose" => Strategy::Tensor3d { depth, transpose_opt: false },
+        "megatron" => Strategy::Megatron,
+        "colossal3d" => Strategy::Colossal3d,
+        other => bail!("unknown strategy {other:?}"),
+    })
+}
+
+fn machine_by_name(name: &str) -> Result<Machine> {
+    Machine::by_name(name).ok_or_else(|| anyhow!("unknown machine {name:?} (perlmutter|polaris)"))
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = Args::new(
+        "tensor3d train",
+        vec![
+            opt("artifacts", "gpt-nano_r2c2d2b8_jnp", "artifact dir or name under artifacts/"),
+            opt("steps", "100", "training steps"),
+            opt("lr", "1e-3", "AdamW learning rate"),
+            opt("seed", "42", "data + init seed"),
+            opt("log-every", "10", "progress print interval"),
+            opt("checkpoint", "", "checkpoint output dir (empty = none)"),
+            flag("quiet", "suppress progress lines"),
+        ],
+    )
+    .parse(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+    let dir = trainer::resolve_artifacts(&a.str("artifacts")?)?;
+    let ck = a.str("checkpoint")?;
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        steps: a.usize("steps")? as u64,
+        seed: a.usize("seed")? as u64,
+        opt: AdamWConfig { lr: a.f64("lr")? as f32, ..Default::default() },
+        log_every: a.usize("log-every")? as u64,
+        verbose: !a.flag("quiet"),
+        checkpoint_dir: if ck.is_empty() { None } else { Some(ck.into()) },
+    };
+    let report = trainer::train(&cfg)?;
+    let mut chart = AsciiChart::new("training loss");
+    chart.add("loss", tensor3d::metrics::smooth(&report.losses, 0.3));
+    println!("{}", chart.render());
+    println!(
+        "{} steps on {} workers in {:.1}s ({:.2} steps/s, {} PJRT execs); final loss {:.4} (unigram floor {:.3})",
+        report.losses.len(),
+        report.world,
+        report.wall_seconds,
+        report.steps_per_sec,
+        report.total_execs,
+        report.losses.last().map(|x| x.1).unwrap_or(f64::NAN),
+        report.unigram_entropy,
+    );
+    Ok(())
+}
+
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    let a = Args::new(
+        "tensor3d plan",
+        vec![
+            opt("model", "gpt9b", "model preset"),
+            opt("gpus", "16", "GPU count"),
+            opt("machine", "perlmutter", "perlmutter|polaris"),
+            opt("batch", "0", "global batch (0 = model default)"),
+        ],
+    )
+    .parse(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+    let (net, kind, default_batch, _) = model_by_name(&a.str("model")?)?;
+    let machine = machine_by_name(&a.str("machine")?)?;
+    let batch = match a.usize("batch")? {
+        0 => default_batch,
+        b => b,
+    };
+    let gpus = a.usize("gpus")?;
+    let p = planner::plan(&net, kind, batch, gpus, &machine);
+    println!(
+        "model {} ({} params), batch {batch}, {gpus}x {}:",
+        net.name,
+        fmt_bytes(net.params),
+        machine.name
+    );
+    println!(
+        "  recommended: g_data={} g_r={} g_c={}  (G_tensor={})",
+        p.mesh.g_data,
+        p.mesh.g_r,
+        p.mesh.g_c,
+        p.mesh.g_tensor()
+    );
+    println!(
+        "  modelled tensor-parallel volume: {} per GPU/iter",
+        fmt_bytes(p.volume_elems * strategies::BYTES_PER_ELEM)
+    );
+    println!(
+        "  weight+optimizer state: {} per GPU ({:.0}% of {})",
+        fmt_bytes(p.state_bytes),
+        p.mem_fraction * 100.0,
+        fmt_bytes(machine.mem_bytes)
+    );
+    println!("  closed-form optimal G_c: {:.2}", p.gc_closed_form);
+    println!("  top alternatives:");
+    for (m, v) in p.alternatives.iter().take(5) {
+        println!(
+            "    g_data={} g_r={} g_c={}  volume {}",
+            m.g_data,
+            m.g_r,
+            m.g_c,
+            fmt_bytes(v * strategies::BYTES_PER_ELEM)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let a = Args::new(
+        "tensor3d simulate",
+        vec![
+            opt("model", "gpt10b", "model preset"),
+            opt(
+                "strategy",
+                "tensor3d",
+                "tensor3d|tensor3d-sync|tensor3d-noxpose|megatron|colossal3d",
+            ),
+            opt("mesh", "", "g_data,g_rxg_c e.g. 8,2x4 (empty = planner)"),
+            opt("depth", "2", "overdecomposition degree"),
+            opt("gpus", "64", "GPU count (when mesh empty)"),
+            opt("machine", "polaris", "perlmutter|polaris"),
+            opt("batch", "0", "global batch (0 = default)"),
+        ],
+    )
+    .parse(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+    let (net, kind, default_batch, g_tensor) = model_by_name(&a.str("model")?)?;
+    let machine = machine_by_name(&a.str("machine")?)?;
+    let batch = match a.usize("batch")? {
+        0 => default_batch,
+        b => b,
+    };
+    let depth = a.usize("depth")?;
+    let strat = strategy_by_name(&a.str("strategy")?, depth)?;
+    let mesh_spec = a.str("mesh")?;
+    let mesh = if mesh_spec.is_empty() {
+        let gpus = a.usize("gpus")?;
+        let _ = kind;
+        comm_model::optimal_meshes(&net, batch as f64, gpus, g_tensor)
+            .first()
+            .map(|(m, _)| *m)
+            .ok_or_else(|| anyhow!("no valid mesh for {gpus} GPUs"))?
+    } else {
+        let (dpart, grid) = mesh_spec
+            .split_once(',')
+            .ok_or_else(|| anyhow!("--mesh wants g_data,RxC"))?;
+        let (r, c) = grid
+            .split_once('x')
+            .ok_or_else(|| anyhow!("--mesh wants g_data,RxC"))?;
+        Mesh::new(dpart.parse()?, r.parse()?, c.parse()?, depth)
+    };
+    let (time, gb) = strategies::iterate(strat, &net, &mesh, batch, &machine);
+    let u = strategies::mfu(&net, batch, mesh.world(), time, &machine);
+    println!(
+        "{} on {} GPUs ({}): strategy {}  mesh g_data={} g_r={} g_c={}",
+        net.name,
+        mesh.world(),
+        machine.name,
+        strat.label(),
+        mesh.g_data,
+        mesh.g_r,
+        mesh.g_c
+    );
+    println!(
+        "  time/iter: {time:.3}s   comm volume: {} per GPU   MFU {:.1}%",
+        fmt_bytes(gb * 1e9),
+        u * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_repro(argv: &[String]) -> Result<()> {
+    let which = argv.first().map(|s| s.as_str()).unwrap_or("all");
+    let _ = std::fs::create_dir_all("results");
+    let out = match which {
+        "fig4" => repro::fig4_trace(Some(std::path::Path::new("results/fig4_trace.json"))),
+        "fig5" => repro::fig5_sweep(),
+        "fig7" => repro::weak_scaling(NetKind::Unet),
+        "fig8" => repro::weak_scaling(NetKind::Transformer),
+        "fig9" => repro::fig9_strong_scaling(),
+        "tab4" => repro::tab4_mfu(),
+        "tab5" => repro::tab5_colossal(),
+        "ablation" => repro::ablation(),
+        "all" => repro::all(),
+        other => bail!(
+            "unknown repro target {other:?} (fig4/fig5/fig7/fig8/fig9/tab4/tab5/ablation/all)"
+        ),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!(
+            "tensor3d — communication-minimizing asynchronous tensor parallelism\n\
+             usage: tensor3d <train|plan|simulate|sweep|trace|repro> [options]\n\
+             run a subcommand with --help-me to see its options"
+        );
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "plan" => cmd_plan(rest),
+        "simulate" => cmd_simulate(rest),
+        "sweep" => {
+            println!("{}", repro::fig5_sweep());
+            Ok(())
+        }
+        "trace" => {
+            let _ = std::fs::create_dir_all("results");
+            println!(
+                "{}",
+                repro::fig4_trace(Some(std::path::Path::new("results/fig4_trace.json")))
+            );
+            Ok(())
+        }
+        "repro" => cmd_repro(rest),
+        other => bail!("unknown command {other:?}"),
+    }
+}

@@ -1,0 +1,236 @@
+//! The 4-D process mesh: `G = G_data x G_r x G_c`, plus the depth-wise
+//! overdecomposition degree of §4.2 (which subdivides *work*, not ranks).
+//!
+//! Rank layout: ranks are grouped first by data-parallel group, then laid
+//! out **column-major** on the `G_r x G_c` tensor grid:
+//!
+//! ```text
+//! rank = d * (G_r * G_c) + j * G_r + i
+//! ```
+//!
+//! Column-major is a placement optimization: the column communicators
+//! (All-Reduce_c, which carry the forward-pass activations — the largest
+//! buffers of Algorithm 1) get *contiguous* ranks, so with `G_r <= 4`
+//! they are node-local and run over NVLink instead of the NICs.
+//!
+//! Three communicator families partition the ranks (mirroring
+//! python/compile/sharded_ref.py):
+//! * **column** communicators — fixed `(d, j)`, varying `i`
+//!   (`All-Reduce_c`, the forward all-reduce of non-transposed layers);
+//! * **row** communicators — fixed `(d, i)`, varying `j` (`All-Reduce_r`);
+//! * **data** communicators — fixed `(i, j)`, varying `d` (gradient
+//!   synchronization across data-parallel groups).
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Mesh {
+    pub g_data: usize,
+    pub g_r: usize,
+    pub g_c: usize,
+    /// §4.2 overdecomposition degree (sub-shards per batch shard).
+    pub depth: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub d: usize,
+    pub i: usize,
+    pub j: usize,
+}
+
+impl fmt::Display for Mesh {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "G={} (g_data={} x g_r={} x g_c={}, depth={})",
+            self.world(),
+            self.g_data,
+            self.g_r,
+            self.g_c,
+            self.depth
+        )
+    }
+}
+
+impl Mesh {
+    pub fn new(g_data: usize, g_r: usize, g_c: usize, depth: usize) -> Self {
+        assert!(g_data >= 1 && g_r >= 1 && g_c >= 1 && depth >= 1);
+        Mesh { g_data, g_r, g_c, depth }
+    }
+
+    /// Tensor-parallel degree within one group.
+    pub fn g_tensor(&self) -> usize {
+        self.g_r * self.g_c
+    }
+
+    /// Total number of ranks (simulated GPUs).
+    pub fn world(&self) -> usize {
+        self.g_data * self.g_tensor()
+    }
+
+    pub fn rank_of(&self, c: Coord) -> usize {
+        debug_assert!(c.d < self.g_data && c.i < self.g_r && c.j < self.g_c);
+        c.d * self.g_tensor() + c.j * self.g_r + c.i
+    }
+
+    pub fn coord_of(&self, rank: usize) -> Coord {
+        debug_assert!(rank < self.world());
+        let t = self.g_tensor();
+        Coord { d: rank / t, j: (rank % t) / self.g_r, i: rank % self.g_r }
+    }
+
+    /// Ranks of the column communicator containing `rank` (fixed d, j).
+    pub fn col_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coord_of(rank);
+        (0..self.g_r)
+            .map(|i| self.rank_of(Coord { i, ..c }))
+            .collect()
+    }
+
+    /// Ranks of the row communicator containing `rank` (fixed d, i).
+    pub fn row_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coord_of(rank);
+        (0..self.g_c)
+            .map(|j| self.rank_of(Coord { j, ..c }))
+            .collect()
+    }
+
+    /// Ranks of the data-parallel communicator containing `rank`.
+    pub fn data_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coord_of(rank);
+        (0..self.g_data)
+            .map(|d| self.rank_of(Coord { d, ..c }))
+            .collect()
+    }
+
+    /// All column groups (used to build communicators up front).
+    pub fn all_col_groups(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for d in 0..self.g_data {
+            for j in 0..self.g_c {
+                out.push((0..self.g_r).map(|i| self.rank_of(Coord { d, i, j })).collect());
+            }
+        }
+        out
+    }
+
+    pub fn all_row_groups(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for d in 0..self.g_data {
+            for i in 0..self.g_r {
+                out.push((0..self.g_c).map(|j| self.rank_of(Coord { d, i, j })).collect());
+            }
+        }
+        out
+    }
+
+    pub fn all_data_groups(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for i in 0..self.g_r {
+            for j in 0..self.g_c {
+                out.push((0..self.g_data).map(|d| self.rank_of(Coord { d, i, j })).collect());
+            }
+        }
+        out
+    }
+
+    /// Enumerate all (g_data, g_r, g_c) factorizations of `world` — the
+    /// search space of the §5 planner and the Fig. 5 sweep.
+    pub fn factorizations(world: usize) -> Vec<Mesh> {
+        let mut out = Vec::new();
+        for g_data in divisors(world) {
+            let t = world / g_data;
+            for g_r in divisors(t) {
+                out.push(Mesh::new(g_data, g_r, t / g_r, 1));
+            }
+        }
+        out
+    }
+}
+
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        prop::check("mesh-roundtrip", 200, |g| {
+            let m = Mesh::new(g.usize(1, 8), g.usize(1, 8), g.usize(1, 8), g.usize(1, 4));
+            for rank in 0..m.world() {
+                if m.rank_of(m.coord_of(rank)) != rank {
+                    return Err(format!("rank {rank} fails roundtrip on {m}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        prop::check("mesh-partition", 100, |g| {
+            let m = Mesh::new(g.usize(1, 4), g.usize(1, 4), g.usize(1, 4), 1);
+            for groups in [m.all_col_groups(), m.all_row_groups(), m.all_data_groups()] {
+                let mut seen = vec![false; m.world()];
+                for grp in &groups {
+                    for &r in grp {
+                        if seen[r] {
+                            return Err(format!("rank {r} in two groups on {m}"));
+                        }
+                        seen[r] = true;
+                    }
+                }
+                if !seen.iter().all(|x| *x) {
+                    return Err(format!("groups do not cover world on {m}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn group_membership_consistent() {
+        let m = Mesh::new(2, 2, 4, 2);
+        for rank in 0..m.world() {
+            assert!(m.col_group(rank).contains(&rank));
+            assert!(m.row_group(rank).contains(&rank));
+            assert!(m.data_group(rank).contains(&rank));
+            assert_eq!(m.col_group(rank).len(), m.g_r);
+            assert_eq!(m.row_group(rank).len(), m.g_c);
+            assert_eq!(m.data_group(rank).len(), m.g_data);
+        }
+    }
+
+    #[test]
+    fn row_and_col_intersect_in_exactly_one_rank() {
+        let m = Mesh::new(1, 4, 3, 1);
+        for rank in 0..m.world() {
+            let row = m.row_group(rank);
+            let col = m.col_group(rank);
+            let inter: Vec<_> = row.iter().filter(|r| col.contains(r)).collect();
+            assert_eq!(inter, vec![&rank]);
+        }
+    }
+
+    #[test]
+    fn factorizations_cover_all_divisor_triples() {
+        let fs = Mesh::factorizations(16);
+        assert!(fs.iter().all(|m| m.world() == 16));
+        // 16 = 2^4 -> 5 choices of g_data, then divisors of the rest
+        assert_eq!(fs.len(), 5 + 4 + 3 + 2 + 1 + 0); // 15 triples
+        // megatron-degenerate configs must be present
+        assert!(fs.iter().any(|m| m.g_data == 2 && m.g_r == 1 && m.g_c == 8));
+    }
+
+    #[test]
+    fn divisors_sorted_complete() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+}

@@ -1,0 +1,103 @@
+//! Run metrics: EWMA smoothing for loss curves, throughput accounting,
+//! and the utilization calculations the Table-4 repro uses.
+
+/// Exponentially-weighted moving average (loss smoothing in reports).
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Throughput over a training run.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub samples_per_sec: f64,
+    pub tokens_per_sec: f64,
+    pub flops_per_sec: f64,
+}
+
+pub fn throughput(
+    batch: usize,
+    seq: usize,
+    flops_per_sample: f64,
+    steps: u64,
+    wall_seconds: f64,
+) -> Throughput {
+    let samples = batch as f64 * steps as f64;
+    Throughput {
+        samples_per_sec: samples / wall_seconds,
+        tokens_per_sec: samples * seq as f64 / wall_seconds,
+        flops_per_sec: samples * flops_per_sample / wall_seconds,
+    }
+}
+
+/// Percentage-of-peak utilization (Table 4's metric).
+pub fn pct_of_peak(flops_per_sec_per_gpu: f64, peak: f64) -> f64 {
+    100.0 * flops_per_sec_per_gpu / peak
+}
+
+/// Smooth a (step, value) curve with EWMA (for the ascii charts).
+pub fn smooth(curve: &[(u64, f64)], alpha: f64) -> Vec<(f64, f64)> {
+    let mut e = Ewma::new(alpha);
+    curve
+        .iter()
+        .map(|(s, v)| (*s as f64, e.update(*v)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..32 {
+            e.update(3.0);
+        }
+        assert!((e.get().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_first_value_passthrough() {
+        let mut e = Ewma::new(0.1);
+        assert_eq!(e.update(7.0), 7.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = throughput(8, 32, 1e9, 100, 10.0);
+        assert_eq!(t.samples_per_sec, 80.0);
+        assert_eq!(t.tokens_per_sec, 2560.0);
+        assert_eq!(t.flops_per_sec, 8e10);
+        assert_eq!(pct_of_peak(156e12, 312e12), 50.0);
+    }
+
+    #[test]
+    fn smooth_preserves_length_and_order() {
+        let c = vec![(0u64, 5.0), (1, 4.0), (2, 3.0)];
+        let s = smooth(&c, 0.9);
+        assert_eq!(s.len(), 3);
+        assert!(s[0].1 > s[2].1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Neural-network architecture descriptions shared by the planner, the
+//! communication model and the simulator.
+//!
+//! A network is described as the ordered list of its parallelizable FC /
+//! conv layers (the only layers whose computation Algorithm 1 distributes;
+//! everything else — activations, norms — is embarrassingly parallel, §2.1).
+//! Convolutions are modelled as FC layers over channels (`k = C_in`,
+//! `n = C_out`) with the spatial footprint folded into the row count and
+//! the 3x3 stencil into the flop multiplier — the same channel-parallel
+//! view the paper uses when it extends Algorithm 1 to U-Nets (§3.2, §6.1).
+
+pub mod gpt;
+pub mod unet;
+
+/// One tensor-parallelizable layer, in Algorithm-1 terms.
+#[derive(Debug, Clone)]
+pub struct FcLayer {
+    pub name: String,
+    /// Contraction (input-feature) dimension `k` of Figure 1.
+    pub k: usize,
+    /// Output-feature dimension `n` of Figure 1.
+    pub n: usize,
+    /// Rows per *sample*: sequence length for transformers, H*W spatial
+    /// footprint at this level for CNNs.  `m = batch_shard * rows`.
+    pub rows_per_sample: usize,
+    /// §4.1: whether this layer stores the transposed weight layout (its
+    /// forward all-reduce runs on the row communicator).
+    pub transposed: bool,
+    /// Extra flop multiplier (9 for a 3x3 conv, 1 for FC).
+    pub flop_mult: f64,
+}
+
+impl FcLayer {
+    /// Forward flops for `samples` samples (one matmul; backward is 2x).
+    pub fn fwd_flops(&self, samples: f64) -> f64 {
+        2.0 * samples * self.rows_per_sample as f64 * self.k as f64 * self.n as f64
+            * self.flop_mult
+    }
+
+    pub fn weight_params(&self) -> f64 {
+        self.k as f64 * self.n as f64 * self.flop_mult
+    }
+}
+
+/// Compute that is local under Algorithm 1 (no collective) but must be
+/// accounted for in iteration time: the attention core, whose heads are
+/// sharded over the column index (so per-GPU flops divide by `g_c`).
+#[derive(Debug, Clone)]
+pub struct AttachedCompute {
+    /// Index into `layers` after whose forward this compute runs.
+    pub after_layer: usize,
+    pub name: String,
+    /// Forward flops per sample (backward costs 2x + 1x recompute).
+    pub fwd_flops_per_sample: f64,
+}
+
+/// A full architecture: the layer inventory plus bookkeeping the
+/// experiments need (params, flops per sample including non-FC work).
+#[derive(Debug, Clone)]
+pub struct NetworkDesc {
+    pub name: String,
+    pub layers: Vec<FcLayer>,
+    /// Head-sharded local compute (attention cores).
+    pub attached: Vec<AttachedCompute>,
+    /// Total parameter count (including embeddings/norms not in `layers`).
+    pub params: f64,
+    /// Total training flops per sample (fwd+bwd, incl. activation
+    /// recomputation if the training recipe uses it) — used for MFU.
+    pub train_flops_per_sample: f64,
+}
+
+impl NetworkDesc {
+    /// Sum over layers of `n` weighted by rows (the Σ n·m term of Eq. 4's
+    /// per-network expansion).
+    pub fn sum_n_rows(&self) -> f64 {
+        self.layers.iter().map(|l| l.n as f64 * l.rows_per_sample as f64).sum()
+    }
+
+    pub fn sum_k_rows(&self) -> f64 {
+        self.layers.iter().map(|l| l.k as f64 * l.rows_per_sample as f64).sum()
+    }
+
+    /// FC weight params only (what tensor parallelism shards).
+    pub fn fc_params(&self) -> f64 {
+        self.layers.iter().map(|l| l.weight_params()).sum()
+    }
+
+    /// Bytes of one parameter + optimizer-state replica per GPU under a
+    /// `g_tensor`-way shard, mixed-precision AdamW (fp16 weights+grads,
+    /// fp32 master+m+v: 2+2+4+4+4 = 16 bytes/param), used by the planner's
+    /// memory-capacity constraint.
+    pub fn state_bytes_per_gpu(&self, g_tensor: usize) -> f64 {
+        16.0 * self.params / g_tensor as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_layer_flops() {
+        let l = FcLayer {
+            name: "t".into(),
+            k: 4,
+            n: 8,
+            rows_per_sample: 16,
+            transposed: false,
+            flop_mult: 1.0,
+        };
+        assert_eq!(l.fwd_flops(2.0), 2.0 * 2.0 * 16.0 * 4.0 * 8.0);
+        assert_eq!(l.weight_params(), 32.0);
+    }
+
+    #[test]
+    fn state_bytes_shrink_with_sharding() {
+        let net = NetworkDesc {
+            name: "x".into(),
+            layers: vec![],
+            attached: vec![],
+            params: 1e9,
+            train_flops_per_sample: 0.0,
+        };
+        assert_eq!(net.state_bytes_per_gpu(1), 16e9);
+        assert_eq!(net.state_bytes_per_gpu(8), 2e9);
+    }
+}

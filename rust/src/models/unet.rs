@@ -1,0 +1,257 @@
+//! U-Net architecture description (Nichol & Dhariwal improved-diffusion
+//! style), matching the paper's Table 2 weak-scaling models.
+//!
+//! Consistent with §6.1: four resolution levels, three residual blocks per
+//! level, 16 attention heads (attention at the two deepest levels),
+//! 128x128 inputs.  Convolutions are modelled channel-parallel (k = C_in,
+//! n = C_out, 3x3 stencil in the flop multiplier) — the FC-equivalent view
+//! under which Algorithm 1 parallelizes them (§3.2 extension).
+//!
+//! The "Channels" column of Table 2 is the base width; channel multipliers
+//! are (1, 2, 3, 4) over the levels scaled down so that C = 2048 lands at
+//! ~3.5B params like the paper's U-Net 3.5B (the exact improved-diffusion
+//! hyper-parameters are not public for these scaled models; DESIGN.md
+//! records this substitution).
+
+use super::{FcLayer, NetworkDesc};
+
+#[derive(Debug, Clone, Copy)]
+pub struct UnetDims {
+    /// Base channel count ("Channels" in Table 2).
+    pub channels: usize,
+    pub levels: usize,
+    pub blocks_per_level: usize,
+    /// Input resolution (the paper trains at 128x128).
+    pub resolution: usize,
+    pub heads: usize,
+}
+
+impl UnetDims {
+    pub fn table2_shape(channels: usize) -> Self {
+        UnetDims { channels, levels: 4, blocks_per_level: 3, resolution: 128, heads: 16 }
+    }
+
+    /// Channel width at level `l` (0-based).  Multipliers chosen so the
+    /// C=2048 model is ~3.5B params: (3/8, 3/4, 1, 3/2) x C.
+    pub fn width(&self, level: usize) -> usize {
+        let mult_num = [3usize, 6, 8, 12][level.min(3)];
+        let w = self.channels * mult_num / 8;
+        // keep widths divisible by large grids: round to a multiple of 64
+        (w / 64).max(1) * 64
+    }
+
+    fn spatial(&self, level: usize) -> usize {
+        let r = self.resolution >> level;
+        r * r
+    }
+
+    /// Full layer inventory: encoder, middle, decoder with skip concats.
+    /// The §4.1 transposed flag alternates through the conv sequence
+    /// exactly as the framework assigns it (every second parallelized
+    /// layer stores the transposed layout).
+    pub fn network(&self) -> NetworkDesc {
+        let mut layers: Vec<FcLayer> = Vec::new();
+        let mut transposed = false;
+        let push = |name: String, k: usize, n: usize, rows: usize, conv: bool,
+                        layers: &mut Vec<FcLayer>, transposed: &mut bool| {
+            layers.push(FcLayer {
+                name,
+                k,
+                n,
+                rows_per_sample: rows,
+                transposed: *transposed,
+                flop_mult: if conv { 9.0 } else { 1.0 },
+            });
+            *transposed = !*transposed;
+        };
+
+        let c0 = self.width(0);
+        // stem
+        push("stem".into(), 3, c0, self.spatial(0), true, &mut layers, &mut transposed);
+
+        let mut enc_out: Vec<usize> = vec![c0]; // skip-connection widths
+        let mut cin = c0;
+        for level in 0..self.levels {
+            let cout = self.width(level);
+            let sp = self.spatial(level);
+            for b in 0..self.blocks_per_level {
+                push(format!("enc{level}.{b}.conv1"), cin, cout, sp, true, &mut layers, &mut transposed);
+                push(format!("enc{level}.{b}.conv2"), cout, cout, sp, true, &mut layers, &mut transposed);
+                // time-embedding projection (FC)
+                push(format!("enc{level}.{b}.temb"), 4 * c0, cout, 1, false, &mut layers, &mut transposed);
+                if self.attention_at(level) {
+                    push(format!("enc{level}.{b}.attn_qkv"), cout, 3 * cout, sp, false, &mut layers, &mut transposed);
+                    push(format!("enc{level}.{b}.attn_proj"), cout, cout, sp, false, &mut layers, &mut transposed);
+                }
+                cin = cout;
+                enc_out.push(cout);
+            }
+            if level + 1 < self.levels {
+                push(format!("enc{level}.down"), cout, cout, self.spatial(level + 1), true, &mut layers, &mut transposed);
+                enc_out.push(cout);
+            }
+        }
+
+        // middle block
+        let cm = self.width(self.levels - 1);
+        let spm = self.spatial(self.levels - 1);
+        push("mid.conv1".into(), cm, cm, spm, true, &mut layers, &mut transposed);
+        push("mid.attn_qkv".into(), cm, 3 * cm, spm, false, &mut layers, &mut transposed);
+        push("mid.attn_proj".into(), cm, cm, spm, false, &mut layers, &mut transposed);
+        push("mid.conv2".into(), cm, cm, spm, true, &mut layers, &mut transposed);
+
+        // decoder (skip concat doubles the input width: k = c + c_skip)
+        let mut cin = cm;
+        for level in (0..self.levels).rev() {
+            let cout = self.width(level);
+            let sp = self.spatial(level);
+            for b in 0..=self.blocks_per_level {
+                let cskip = enc_out.pop().unwrap_or(cout);
+                push(format!("dec{level}.{b}.conv1"), cin + cskip, cout, sp, true, &mut layers, &mut transposed);
+                push(format!("dec{level}.{b}.conv2"), cout, cout, sp, true, &mut layers, &mut transposed);
+                push(format!("dec{level}.{b}.temb"), 4 * c0, cout, 1, false, &mut layers, &mut transposed);
+                if self.attention_at(level) {
+                    push(format!("dec{level}.{b}.attn_qkv"), cout, 3 * cout, sp, false, &mut layers, &mut transposed);
+                    push(format!("dec{level}.{b}.attn_proj"), cout, cout, sp, false, &mut layers, &mut transposed);
+                }
+                cin = cout;
+            }
+            if level > 0 {
+                push(format!("dec{level}.up"), cout, cout, self.spatial(level - 1), true, &mut layers, &mut transposed);
+            }
+        }
+        // output projection
+        push("out".into(), self.width(0), 3, self.spatial(0), true, &mut layers, &mut transposed);
+
+        let params: f64 = layers.iter().map(|l| l.weight_params()).sum::<f64>()
+            // group norms + biases: small additive term
+            + layers.iter().map(|l| l.n as f64 * 3.0).sum::<f64>();
+        // training flops per sample: fwd (1x) + bwd (2x) + checkpoint
+        // recompute (1x) over all layers
+        let flops: f64 = layers.iter().map(|l| l.fwd_flops(1.0)).sum::<f64>() * 4.0;
+        NetworkDesc {
+            name: format!("unet-c{}", self.channels),
+            layers,
+            attached: vec![], // attention cores are negligible next to convs
+            params,
+            train_flops_per_sample: flops,
+        }
+    }
+
+    /// Attention at the two deepest levels (16x16 and 32x32 at 128px).
+    fn attention_at(&self, level: usize) -> bool {
+        level + 2 >= self.levels
+    }
+}
+
+/// One row of Table 2 (Perlmutter weak scaling).
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub label: &'static str,
+    pub dims: UnetDims,
+    pub g_tensor: usize,
+    pub gpus: usize,
+    pub batch: usize,
+}
+
+/// Table 2: U-Net weak scaling.  Batch 2048 images at 128x128.
+pub fn table2() -> Vec<Table2Row> {
+    let mk = |label, channels, g_tensor, gpus| Table2Row {
+        label,
+        dims: UnetDims::table2_shape(channels),
+        g_tensor,
+        gpus,
+        batch: 2048,
+    };
+    vec![
+        mk("U-Net 3.5B", 2048, 4, 32),
+        mk("U-Net 7.5B", 3072, 8, 64),
+        mk("U-Net 14B", 4096, 16, 128),
+        mk("U-Net 28B", 5760, 32, 256),
+    ]
+}
+
+/// The Fig. 6 validation model: 280M-param U-Net on Oxford-Flowers.
+pub fn unet_280m() -> UnetDims {
+    UnetDims::table2_shape(576)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_params_track_labels() {
+        for row in table2() {
+            let want: f64 = match row.label {
+                "U-Net 3.5B" => 3.5e9,
+                "U-Net 7.5B" => 7.5e9,
+                "U-Net 14B" => 14e9,
+                "U-Net 28B" => 28e9,
+                _ => unreachable!(),
+            };
+            let got = row.dims.network().params;
+            assert!(
+                (got / want - 1.0).abs() < 0.35,
+                "{}: {got:.3e} vs {want:.3e}",
+                row.label
+            );
+        }
+    }
+
+    #[test]
+    fn params_scale_quadratically_with_channels() {
+        let p1 = UnetDims::table2_shape(2048).network().params;
+        let p2 = UnetDims::table2_shape(4096).network().params;
+        let ratio = p2 / p1;
+        assert!(ratio > 3.3 && ratio < 4.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn transposed_alternates() {
+        let net = unet_280m().network();
+        for w in net.layers.windows(2) {
+            assert_ne!(w[0].transposed, w[1].transposed);
+        }
+    }
+
+    #[test]
+    fn decoder_skip_concat_inflates_k() {
+        // the Eq.-8 shape: Σ k·rows exceeds Σ n·rows because of skips
+        let net = UnetDims::table2_shape(2048).network();
+        assert!(net.sum_k_rows() > net.sum_n_rows());
+    }
+
+    #[test]
+    fn eq8_like_coefficient_ratio() {
+        // Paper Eq. 8 fit: G_c coefficient ~2x the G_r coefficient.  Our
+        // inventory should reproduce that 2:1 shape within a loose band.
+        let net = UnetDims::table2_shape(2048).network();
+        let mut coef_r = 0.0;
+        let mut coef_c = 0.0;
+        for l in &net.layers {
+            let (n_term, k_term) = (
+                l.n as f64 * l.rows_per_sample as f64,
+                l.k as f64 * l.rows_per_sample as f64,
+            );
+            if l.transposed {
+                coef_c += n_term;
+                coef_r += k_term;
+            } else {
+                coef_r += n_term;
+                coef_c += k_term;
+            }
+        }
+        let ratio = coef_c / coef_r;
+        assert!(ratio > 0.8 && ratio < 3.0, "coef ratio {ratio}");
+    }
+
+    #[test]
+    fn widths_divisible_for_table_grids() {
+        for row in table2() {
+            for level in 0..row.dims.levels {
+                assert_eq!(row.dims.width(level) % 32, 0);
+            }
+        }
+    }
+}

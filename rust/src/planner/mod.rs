@@ -1,0 +1,150 @@
+//! The §5 planner: given a network, a GPU count and a machine, recommend
+//! the communication-optimal `(G_data, G_r, G_c)` decomposition.
+//!
+//! Procedure (exactly the paper's two rules):
+//!   1. maximize `G_data` — i.e. pick the smallest `G_tensor` whose
+//!      per-GPU parameter+optimizer state fits the machine's memory
+//!      (Eq. 5: volume falls monotonically in `G_data`);
+//!   2. within that `G_tensor`, pick `G_c` nearest the closed-form optimum
+//!      (`sqrt(3 G_t)` for transformers, Eq. 7; `sqrt(G_t/1.98)` for
+//!      U-Nets, Eq. 9) — implemented as an exact argmin over divisors,
+//!      which the closed forms approximate.
+
+use crate::comm_model;
+use crate::mesh::{divisors, Mesh};
+use crate::models::NetworkDesc;
+use crate::sim::Machine;
+
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub mesh: Mesh,
+    /// Modelled tensor-parallel volume per GPU per iteration (elements).
+    pub volume_elems: f64,
+    /// Parameter+optimizer state bytes per GPU at this sharding.
+    pub state_bytes: f64,
+    /// Fraction of GPU memory the state consumes.
+    pub mem_fraction: f64,
+    /// The closed-form (continuous) optimal G_c for reference.
+    pub gc_closed_form: f64,
+    /// All candidates considered, sorted by volume (for reports).
+    pub alternatives: Vec<(Mesh, f64)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetKind {
+    Transformer,
+    Unet,
+}
+
+/// Memory budget fraction reserved for weights+optimizer (the rest is
+/// activations, buffers, NCCL workspace).
+const STATE_BUDGET_FRACTION: f64 = 0.6;
+
+/// Smallest g_tensor whose sharded state fits the machine.
+pub fn min_g_tensor(net: &NetworkDesc, machine: &Machine, world: usize) -> usize {
+    for gt in divisors(world) {
+        if net.state_bytes_per_gpu(gt) <= machine.mem_bytes * STATE_BUDGET_FRACTION {
+            return gt;
+        }
+    }
+    world
+}
+
+/// Produce the recommended plan for `world` GPUs.
+pub fn plan(net: &NetworkDesc, kind: NetKind, batch: usize, world: usize, machine: &Machine) -> Plan {
+    let floor = min_g_tensor(net, machine, world);
+    let candidates = comm_model::optimal_meshes(net, batch as f64, world, floor);
+    // rule 1: restrict to maximal g_data (= minimal g_tensor >= floor)
+    let g_tensor_min = candidates
+        .iter()
+        .map(|(m, _)| m.g_tensor())
+        .min()
+        .unwrap_or(world);
+    let best = candidates
+        .iter()
+        .filter(|(m, _)| m.g_tensor() == g_tensor_min)
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(m, v)| (*m, *v))
+        .unwrap_or((Mesh::new(1, 1, world, 1), f64::INFINITY));
+    let gc_closed = match kind {
+        NetKind::Transformer => comm_model::transformer_optimal_gc(g_tensor_min),
+        NetKind::Unet => comm_model::unet_optimal_gc(g_tensor_min),
+    };
+    let state = net.state_bytes_per_gpu(best.0.g_tensor());
+    Plan {
+        mesh: best.0,
+        volume_elems: best.1,
+        state_bytes: state,
+        mem_fraction: state / machine.mem_bytes,
+        gc_closed_form: gc_closed,
+        alternatives: candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::gpt;
+    use crate::models::unet::UnetDims;
+
+    #[test]
+    fn gpt9b_plan_matches_section5_2() {
+        // §5.2 worked example: GPT 9B on 16 GPUs needs >= 8 GPUs for the
+        // model, so g_data = 2; predicted G_c = 4.89, discrete optimum 4.
+        let net = gpt::gpt_9b().network();
+        let machine = Machine::perlmutter();
+        let p = plan(&net, NetKind::Transformer, 64, 16, &machine);
+        assert_eq!(p.mesh.g_data, 2, "{:?}", p.mesh);
+        assert_eq!(p.mesh.g_c, 4);
+        assert_eq!(p.mesh.g_r, 2);
+        assert!((p.gc_closed_form - 4.899).abs() < 0.01);
+        assert!(p.mem_fraction <= 1.0);
+    }
+
+    #[test]
+    fn min_g_tensor_respects_memory() {
+        let net = gpt::table3()[3].dims.network(); // GPT 40B: 640 GB state
+        let machine = Machine::polaris(); // 40 GB/GPU, 24 GB budget
+        let gt = min_g_tensor(&net, &machine, 256);
+        assert!(net.state_bytes_per_gpu(gt) <= 24e9 * 1.0001);
+        assert!(gt >= 32, "40B model needs >= 32-way sharding, got {gt}");
+    }
+
+    #[test]
+    fn unet_plan_uses_eq9_band() {
+        let dims = UnetDims::table2_shape(3072); // U-Net 7.5B
+        let net = dims.network();
+        let machine = Machine::perlmutter();
+        let p = plan(&net, NetKind::Unet, 2048, 64, &machine);
+        // Eq. 9 optimum for g_tensor = 8 is ~2.01; discrete g_c should be
+        // 2 (or adjacent divisor) when g_tensor lands at 8
+        if p.mesh.g_tensor() == 8 {
+            assert!((1..=4).contains(&p.mesh.g_c), "{:?}", p.mesh);
+        }
+        assert!(p.volume_elems > 0.0);
+    }
+
+    #[test]
+    fn alternatives_sorted_ascending() {
+        let net = gpt::table3()[0].dims.network();
+        let p = plan(&net, NetKind::Transformer, 1024, 32, &Machine::polaris());
+        for w in p.alternatives.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn plan_never_exceeds_memory_budget() {
+        for row in gpt::table3() {
+            let net = row.dims.network();
+            let machine = Machine::polaris();
+            let p = plan(&net, NetKind::Transformer, row.batch, row.gpus, &machine);
+            assert!(
+                p.state_bytes <= machine.mem_bytes * STATE_BUDGET_FRACTION * 1.0001,
+                "{}: {} bytes",
+                row.label,
+                p.state_bytes
+            );
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! AOT manifest parsing: the contract between python/compile/aot.py and
+//! the Rust runtime.  A manifest directory contains `manifest.json` plus
+//! one `<entry>.hlo.txt` per L2 entry point.
+
+use crate::models::gpt::GptDims;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: GptDims,
+    pub model_name: String,
+    pub params: usize,
+    pub g_data: usize,
+    pub g_r: usize,
+    pub g_c: usize,
+    pub depth: usize,
+    pub batch: usize,
+    pub backend: String,
+    pub rows_per_exec: usize,
+    pub seqs_per_exec: usize,
+    pub total_rows: usize,
+    pub entries: Vec<EntrySpec>,
+    pub dir: PathBuf,
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest key {key:?} is not a number"))
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .req("shape")
+        .map_err(|e| anyhow!("{e}"))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(
+        j.req("dtype")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .ok_or_else(|| anyhow!("dtype not a string"))?,
+    )?;
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let m = j.req("model").map_err(|e| anyhow!("{e}"))?;
+        let model = GptDims {
+            vocab: usize_of(m, "vocab")?,
+            hidden: usize_of(m, "hidden")?,
+            layers: usize_of(m, "layers")?,
+            heads: usize_of(m, "heads")?,
+            seq: usize_of(m, "seq")?,
+        };
+        let g = j.req("grid").map_err(|e| anyhow!("{e}"))?;
+        let entries = j
+            .req("entries")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("entries not an array"))?
+            .iter()
+            .map(|e| {
+                Ok(EntrySpec {
+                    name: e
+                        .req("name")
+                        .map_err(|x| anyhow!("{x}"))?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("entry name"))?
+                        .to_string(),
+                    file: dir.join(
+                        e.req("file")
+                            .map_err(|x| anyhow!("{x}"))?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("entry file"))?,
+                    ),
+                    inputs: e
+                        .req("inputs")
+                        .map_err(|x| anyhow!("{x}"))?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("inputs"))?
+                        .iter()
+                        .map(tensor_spec)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: e
+                        .req("outputs")
+                        .map_err(|x| anyhow!("{x}"))?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("outputs"))?
+                        .iter()
+                        .map(tensor_spec)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            model,
+            model_name: m
+                .req("name")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .unwrap_or("?")
+                .to_string(),
+            params: usize_of(m, "params")?,
+            g_data: usize_of(g, "g_data")?,
+            g_r: usize_of(g, "g_r")?,
+            g_c: usize_of(g, "g_c")?,
+            depth: usize_of(g, "depth")?,
+            batch: usize_of(&j, "batch")?,
+            backend: j
+                .req("backend")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .unwrap_or("jnp")
+                .to_string(),
+            rows_per_exec: usize_of(&j, "rows_per_exec")?,
+            seqs_per_exec: usize_of(&j, "seqs_per_exec")?,
+            total_rows: usize_of(&j, "total_rows")?,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("entry {name:?} not in manifest {}", self.dir.display()))
+    }
+
+    /// Standard artifact directory name produced by aot.py.
+    pub fn dirname(model: &str, g_r: usize, g_c: usize, depth: usize, batch: usize, backend: &str) -> String {
+        format!("{model}_r{g_r}c{g_c}d{depth}b{batch}_{backend}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model": {"name": "gpt-nano", "vocab": 256, "hidden": 64,
+                          "layers": 2, "heads": 4, "seq": 32, "head_dim": 16,
+                          "ffn": 256, "params": 135168},
+                "grid": {"g_data": 1, "g_r": 2, "g_c": 2, "depth": 2},
+                "batch": 8, "backend": "jnp",
+                "rows_per_exec": 128, "seqs_per_exec": 4, "total_rows": 256,
+                "entries": [
+                  {"name": "mm_qkv_fwd", "file": "mm_qkv_fwd.hlo.txt",
+                   "inputs": [{"shape": [128, 32], "dtype": "f32"},
+                              {"shape": [32, 96], "dtype": "f32"}],
+                   "outputs": [{"shape": [128, 96], "dtype": "f32"}]},
+                  {"name": "embed_fwd", "file": "embed_fwd.hlo.txt",
+                   "inputs": [{"shape": [4, 32], "dtype": "i32"},
+                              {"shape": [256, 32], "dtype": "f32"},
+                              {"shape": [32, 32], "dtype": "f32"}],
+                   "outputs": [{"shape": [128, 32], "dtype": "f32"}]}
+                ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let dir = std::env::temp_dir().join("t3d_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 256);
+        assert_eq!((m.g_r, m.g_c, m.depth), (2, 2, 2));
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("embed_fwd").unwrap();
+        assert_eq!(e.inputs[0].dtype, DType::I32);
+        assert_eq!(e.inputs[0].shape, vec![4, 32]);
+        assert!(m.entry("nope").is_err());
+        assert_eq!(m.params, 135168);
+    }
+
+    #[test]
+    fn dirname_format() {
+        assert_eq!(
+            Manifest::dirname("gpt-nano", 2, 2, 2, 8, "jnp"),
+            "gpt-nano_r2c2d2b8_jnp"
+        );
+    }
+}

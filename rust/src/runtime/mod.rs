@@ -1,0 +1,224 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them once per worker
+//! thread, execute them from the coordinator's hot path.
+//!
+//! Each worker thread owns its own [`ArtifactStore`] (a `PjRtClient` is
+//! `Rc`-backed and not `Send`); compilation happens once at startup and
+//! the coordinator then only calls [`ArtifactStore::call`].  Interchange
+//! is HLO *text* — see python/compile/aot.py for why serialized protos are
+//! rejected by xla_extension 0.5.1.
+
+pub mod manifest;
+
+use anyhow::{anyhow, bail, Result};
+use manifest::{DType, EntrySpec, Manifest};
+use std::collections::HashMap;
+
+/// A borrowed argument for an entry execution.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> Arg<'a> {
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(s) => s.len(),
+            Arg::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(_) => DType::F32,
+            Arg::I32(_) => DType::I32,
+        }
+    }
+
+    #[allow(dead_code)]
+    fn bytes(&self) -> &'a [u8] {
+        match self {
+            Arg::F32(s) => unsafe {
+                std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+            },
+            Arg::I32(s) => unsafe {
+                std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+            },
+        }
+    }
+}
+
+/// Argument that may already live on the device (weights cached per step
+/// by the coordinator) or still on the host (activations).
+pub enum ArgV<'a> {
+    Host(Arg<'a>),
+    Dev(&'a xla::PjRtBuffer),
+}
+
+/// Per-worker executable cache.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// total entry executions (metrics)
+    exec_count: std::cell::Cell<u64>,
+}
+
+impl ArtifactStore {
+    /// Create a CPU PJRT client and compile every manifest entry.
+    pub fn load(manifest: &Manifest) -> Result<ArtifactStore> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for entry in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry
+                    .file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", entry.file))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            exes.insert(entry.name.clone(), exe);
+        }
+        Ok(ArtifactStore { client, manifest: manifest.clone(), exes, exec_count: std::cell::Cell::new(0) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn exec_count(&self) -> u64 {
+        self.exec_count.get()
+    }
+
+    /// Upload one argument as a device buffer.
+    ///
+    /// NOTE: we deliberately go through `buffer_from_host_raw_bytes` +
+    /// `execute_b` instead of `PjRtLoadedExecutable::execute`: the 0.1.6
+    /// crate's C wrapper for `execute` *leaks every input device buffer*
+    /// (`buffer.release()` with no later free — xla_rs.cc line ~900),
+    /// which at our call rates OOMs a training run in minutes.  Buffers
+    /// created here are owned by Rust and freed on drop.
+    fn buffer(&self, spec: &manifest::TensorSpec, arg: &Arg) -> Result<xla::PjRtBuffer> {
+        if arg.dtype() != spec.dtype {
+            bail!("dtype mismatch: arg {:?} vs spec {:?}", arg.dtype(), spec.dtype);
+        }
+        if arg.len() != spec.numel() {
+            bail!("size mismatch: arg {} vs spec {:?}", arg.len(), spec.shape);
+        }
+        // typed upload: buffer_from_host_raw_bytes mispasses ElementType
+        // where the C side expects PrimitiveType (second 0.1.6 bug), so we
+        // use the typed variant which converts correctly.
+        match arg {
+            Arg::F32(s) => self.client.buffer_from_host_buffer(s, &spec.shape, None),
+            Arg::I32(s) => self.client.buffer_from_host_buffer(s, &spec.shape, None),
+        }
+        .map_err(|e| anyhow!("buffer upload: {e:?}"))
+    }
+
+    /// Upload a host f32 tensor as a reusable device buffer (the
+    /// coordinator caches parameter shards this way once per step).
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute an entry; returns one `Vec<f32>` per output (i32 outputs are
+    /// not produced by any current entry).
+    pub fn call(&self, name: &str, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        let argv: Vec<ArgV> = args.iter().map(|a| ArgV::Host(*a)).collect();
+        self.call_v(name, &argv)
+    }
+
+    /// Like [`ArtifactStore::call`] but accepts pre-uploaded device
+    /// buffers for any argument (the per-step weight cache).
+    pub fn call_v(&self, name: &str, args: &[ArgV]) -> Result<Vec<Vec<f32>>> {
+        let entry: &EntrySpec = self.manifest.entry(name)?;
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "{name}: got {} args, entry expects {}",
+                args.len(),
+                entry.inputs.len()
+            );
+        }
+        // upload host args first, then assemble the reference list
+        let owned: Vec<Option<xla::PjRtBuffer>> = entry
+            .inputs
+            .iter()
+            .zip(args)
+            .map(|(spec, arg)| match arg {
+                ArgV::Host(h) => self.buffer(spec, h).map(Some),
+                ArgV::Dev(_) => Ok(None),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let buffers: Vec<&xla::PjRtBuffer> = owned
+            .iter()
+            .zip(args)
+            .map(|(o, arg)| match arg {
+                ArgV::Host(_) => o.as_ref().unwrap(),
+                ArgV::Dev(b) => *b,
+            })
+            .collect();
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name}"))?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let mut parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        parts
+            .drain(..)
+            .zip(&entry.outputs)
+            .map(|(p, spec)| {
+                if spec.dtype != DType::F32 {
+                    bail!("{name}: non-f32 output unsupported");
+                }
+                p.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Single-output convenience.
+    pub fn call1(&self, name: &str, args: &[Arg]) -> Result<Vec<f32>> {
+        let mut out = self.call(name, args)?;
+        if out.len() != 1 {
+            bail!("{name}: expected 1 output, got {}", out.len());
+        }
+        Ok(out.pop().unwrap())
+    }
+
+    /// Single-output convenience over [`ArtifactStore::call_v`].
+    pub fn call1_v(&self, name: &str, args: &[ArgV]) -> Result<Vec<f32>> {
+        let mut out = self.call_v(name, args)?;
+        if out.len() != 1 {
+            bail!("{name}: expected 1 output, got {}", out.len());
+        }
+        Ok(out.pop().unwrap())
+    }
+}
+
+// Integration tests live in rust/tests/runtime_live.rs (they need real
+// artifacts produced by `make artifacts`).

@@ -1,0 +1,180 @@
+//! Machine descriptions: GPUs, nodes, interconnects, and the cost models
+//! (GEMM efficiency, ring-collective timing) the engine evaluates.
+//!
+//! Parameters follow §6: Perlmutter nodes have 4x A100-40GB and 4x
+//! Slingshot-11 NICs (200 Gb/s each); Polaris nodes have 4x A100-40GB and
+//! 2x Slingshot-10 NICs (100 Gb/s each).  A100 peak half-precision
+//! throughput is 312 Tflop/s.
+
+/// A homogeneous GPU cluster.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub name: String,
+    pub gpus_per_node: usize,
+    /// Peak half-precision flops per GPU.
+    pub peak_flops: f64,
+    /// GPU memory (bytes) — the planner's capacity constraint.
+    pub mem_bytes: f64,
+    /// Intra-node per-GPU link bandwidth (NVLink), bytes/s.
+    pub intra_bw: f64,
+    pub intra_lat_s: f64,
+    /// Aggregate injection bandwidth per node (all NICs), bytes/s.
+    pub inter_bw_per_node: f64,
+    /// Bandwidth of a single NIC, bytes/s — one ring's cross-node stream
+    /// cannot aggregate NICs, so this caps any single collective.
+    pub nic_bw: f64,
+    pub inter_lat_s: f64,
+    /// Peak GEMM efficiency achievable on well-shaped large matmuls.
+    pub gemm_eff_max: f64,
+    /// Dim at which GEMM efficiency reaches half of max (smaller local
+    /// dims, as produced by extreme 1-D sharding, run less efficiently —
+    /// the effect that degrades Megatron-LM's MFU at scale, Table 4).
+    pub gemm_eff_halfdim: f64,
+}
+
+impl Machine {
+    pub fn perlmutter() -> Machine {
+        Machine {
+            name: "perlmutter".into(),
+            gpus_per_node: 4,
+            peak_flops: 312e12,
+            mem_bytes: 40e9,
+            intra_bw: 200e9, // NVLink3 per-direction effective
+            intra_lat_s: 2e-6,
+            inter_bw_per_node: 4.0 * 25e9, // 4x Slingshot-11 @ 200 Gb/s
+            nic_bw: 25e9,
+            inter_lat_s: 4e-6,
+            gemm_eff_max: 0.62,
+            gemm_eff_halfdim: 96.0,
+        }
+    }
+
+    pub fn polaris() -> Machine {
+        Machine {
+            name: "polaris".into(),
+            gpus_per_node: 4,
+            peak_flops: 312e12,
+            mem_bytes: 40e9,
+            intra_bw: 200e9,
+            intra_lat_s: 2e-6,
+            inter_bw_per_node: 2.0 * 12.5e9, // 2x Slingshot-10 @ 100 Gb/s
+            nic_bw: 12.5e9,
+            inter_lat_s: 4e-6,
+            gemm_eff_max: 0.62,
+            gemm_eff_halfdim: 96.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Machine> {
+        match name {
+            "perlmutter" => Some(Machine::perlmutter()),
+            "polaris" => Some(Machine::polaris()),
+            _ => None,
+        }
+    }
+
+    /// GEMM efficiency for a kernel whose smallest local matrix dimension
+    /// is `min_dim` (saturating rational curve).
+    pub fn gemm_eff(&self, min_dim: f64) -> f64 {
+        self.gemm_eff_max * min_dim / (min_dim + self.gemm_eff_halfdim)
+    }
+
+    /// Time to execute `flops` of matmul work whose smallest local dim is
+    /// `min_dim`.
+    pub fn compute_time(&self, flops: f64, min_dim: f64) -> f64 {
+        if flops <= 0.0 {
+            return 0.0;
+        }
+        flops / (self.peak_flops * self.gemm_eff(min_dim).max(1e-3))
+    }
+
+    /// Ring all-reduce time for `bytes` per GPU over a group of `p` GPUs,
+    /// with `per_node` group members co-resident per node.
+    ///
+    /// Bandwidth term: `2(p-1)/p * bytes / bw_bottleneck`.  For a
+    /// node-local group the bottleneck is NVLink.  For a cross-node group,
+    /// the ring is ordered so only node-boundary links use the NIC; a node
+    /// hosting `per_node` members of this group hosts
+    /// `gpus_per_node / per_node` *distinct* groups of the same kind, all
+    /// communicating concurrently (the SPMD schedule is identical across
+    /// ranks), so each ring's boundary stream gets
+    /// `inter_bw_per_node * per_node / gpus_per_node`.
+    /// Latency term: `2(p-1)` hops.
+    pub fn allreduce_time(&self, bytes: f64, p: usize, per_node: usize) -> f64 {
+        if p <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let pf = p as f64;
+        let ring_bytes = 2.0 * (pf - 1.0) / pf * bytes;
+        let node_local = per_node >= p;
+        let (bw, lat) = if node_local {
+            (self.intra_bw, self.intra_lat_s)
+        } else {
+            let concurrent_groups = (self.gpus_per_node / per_node.max(1)).max(1) as f64;
+            let share = (self.inter_bw_per_node / concurrent_groups).min(self.nic_bw);
+            (share.min(self.intra_bw), self.inter_lat_s)
+        };
+        ring_bytes / bw + 2.0 * (pf - 1.0) * lat
+    }
+
+    /// How many members of a `group` (global ranks, `gpus_per_node` packed
+    /// per node) co-reside on the most-loaded node.
+    pub fn members_per_node(&self, group: &[usize]) -> usize {
+        use std::collections::BTreeMap;
+        let mut per: BTreeMap<usize, usize> = BTreeMap::new();
+        for &r in group {
+            *per.entry(r / self.gpus_per_node).or_insert(0) += 1;
+        }
+        per.values().copied().max().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_section6() {
+        let p = Machine::perlmutter();
+        assert_eq!(p.gpus_per_node, 4);
+        assert_eq!(p.peak_flops, 312e12);
+        assert_eq!(p.inter_bw_per_node, 100e9);
+        let q = Machine::polaris();
+        assert_eq!(q.inter_bw_per_node, 25e9);
+        assert!(Machine::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn gemm_eff_monotone_saturating() {
+        let m = Machine::perlmutter();
+        assert!(m.gemm_eff(32.0) < m.gemm_eff(256.0));
+        assert!(m.gemm_eff(100000.0) <= m.gemm_eff_max);
+        assert!(m.gemm_eff(96.0) > 0.3 * m.gemm_eff_max);
+    }
+
+    #[test]
+    fn allreduce_time_scales_with_size_and_group() {
+        let m = Machine::polaris();
+        let t1 = m.allreduce_time(1e9, 4, 4); // node-local
+        let t2 = m.allreduce_time(1e9, 8, 4); // spans 2 nodes
+        assert!(t2 > t1, "cross-node must be slower: {t2} vs {t1}");
+        assert!(m.allreduce_time(2e9, 4, 4) > t1);
+        assert_eq!(m.allreduce_time(1e9, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn members_per_node_counts() {
+        let m = Machine::perlmutter();
+        assert_eq!(m.members_per_node(&[0, 1, 2, 3]), 4);
+        assert_eq!(m.members_per_node(&[0, 4, 8, 12]), 1);
+        assert_eq!(m.members_per_node(&[0, 1, 4, 5]), 2);
+    }
+
+    #[test]
+    fn compute_time_inverse_to_eff() {
+        let m = Machine::perlmutter();
+        let fast = m.compute_time(1e12, 4096.0);
+        let slow = m.compute_time(1e12, 16.0);
+        assert!(slow > fast * 2.0);
+    }
+}

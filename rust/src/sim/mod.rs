@@ -1,0 +1,16 @@
+//! Discrete-event cluster simulator.
+//!
+//! Replays the paper's 32–256-GPU Perlmutter/Polaris experiments on a
+//! laptop: [`machine`] models the hardware (A100 flops, NVLink/Slingshot
+//! bandwidths, GEMM-efficiency curve), [`engine`] executes per-GPU op
+//! programs with CUDA-stream semantics and rendezvous collectives, and
+//! [`trace`] renders Chrome-trace JSON + the Fig.-4 ASCII timeline.
+//! Strategies (rust/src/strategies/) compile a (network, mesh, machine)
+//! triple into the per-GPU programs this module runs.
+
+pub mod engine;
+pub mod machine;
+pub mod trace;
+
+pub use engine::{simulate, simulate_with_trace, GpuProgram, Op, OpKind, SimResult, Stream};
+pub use machine::Machine;

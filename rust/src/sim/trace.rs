@@ -1,0 +1,152 @@
+//! Trace output: Chrome trace-event JSON (load in chrome://tracing or
+//! Perfetto) and the Fig.-4-style ASCII timeline showing compute (solid)
+//! vs communication (striped) kernels of the two sub-shards.
+
+use super::engine::{Span, Stream};
+use crate::util::json::Json;
+
+/// Chrome trace-event JSON for a set of spans.
+pub fn chrome_trace(spans: &[Span]) -> String {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::str(&s.name)),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(s.start * 1e6)),
+                ("dur", Json::num((s.end - s.start) * 1e6)),
+                ("pid", Json::num(s.gpu as f64)),
+                (
+                    "tid",
+                    Json::num(match s.stream {
+                        Stream::Compute => 0.0,
+                        Stream::Comm => 1.0,
+                    }),
+                ),
+                (
+                    "cat",
+                    Json::str(if s.is_comm { "comm" } else { "compute" }),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(events))]).to_string()
+}
+
+/// ASCII timeline for one GPU (the paper's Fig. 4, in text): one row per
+/// stream, `#` for sub-shard A compute, `=` for sub-shard B compute,
+/// `a`/`b` for their collectives.  Sub-shard is inferred from the op-name
+/// prefix ("s0." / "s1.").
+pub fn ascii_timeline(spans: &[Span], gpu: usize, width: usize) -> String {
+    let gspans: Vec<&Span> = spans.iter().filter(|s| s.gpu == gpu).collect();
+    if gspans.is_empty() {
+        return format!("gpu {gpu}: no spans\n");
+    }
+    let t_end = gspans.iter().map(|s| s.end).fold(0.0, f64::max);
+    let t0 = 0.0;
+    let scale = width as f64 / (t_end - t0).max(1e-12);
+    let mut rows = vec![vec![' '; width]; 2];
+    for s in &gspans {
+        let row = match s.stream {
+            Stream::Compute => 0,
+            Stream::Comm => 1,
+        };
+        let shard_b = s.name.starts_with("s1.");
+        let ch = match (s.is_comm, shard_b) {
+            (false, false) => '#',
+            (false, true) => '=',
+            (true, false) => 'a',
+            (true, true) => 'b',
+        };
+        let c0 = ((s.start - t0) * scale) as usize;
+        let c1 = (((s.end - t0) * scale) as usize).min(width - 1).max(c0);
+        for c in c0..=c1 {
+            rows[row][c] = ch;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "GPU {gpu} timeline, 0..{:.1} ms  (compute: '#'=shard0 '='=shard1; comm: 'a'=shard0 'b'=shard1)\n",
+        t_end * 1e3
+    ));
+    out.push_str("  compute |");
+    out.extend(rows[0].iter());
+    out.push_str("|\n  comm    |");
+    out.extend(rows[1].iter());
+    out.push_str("|\n");
+    out
+}
+
+/// Fraction of wall-clock where a compute span and a comm span of the same
+/// GPU overlap (trace-level overlap check used by the fig4 repro).
+pub fn measured_overlap(spans: &[Span], gpu: usize) -> f64 {
+    let comp: Vec<&Span> = spans
+        .iter()
+        .filter(|s| s.gpu == gpu && !s.is_comm)
+        .collect();
+    let comm: Vec<&Span> = spans.iter().filter(|s| s.gpu == gpu && s.is_comm).collect();
+    let mut total_comm = 0.0;
+    let mut overlapped = 0.0;
+    for cm in &comm {
+        total_comm += cm.end - cm.start;
+        for cp in &comp {
+            let lo = cm.start.max(cp.start);
+            let hi = cm.end.min(cp.end);
+            if hi > lo {
+                overlapped += hi - lo;
+            }
+        }
+    }
+    if total_comm == 0.0 {
+        1.0
+    } else {
+        (overlapped / total_comm).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(gpu: usize, stream: Stream, name: &str, start: f64, end: f64, is_comm: bool) -> Span {
+        Span { gpu, stream, name: name.into(), start, end, is_comm }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let spans = vec![
+            span(0, Stream::Compute, "s0.mm", 0.0, 1.0, false),
+            span(0, Stream::Comm, "s0.ar", 1.0, 1.5, true),
+        ];
+        let j = chrome_trace(&spans);
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn ascii_timeline_marks_shards() {
+        let spans = vec![
+            span(0, Stream::Compute, "s0.mm", 0.0, 0.5, false),
+            span(0, Stream::Compute, "s1.mm", 0.5, 1.0, false),
+            span(0, Stream::Comm, "s0.ar", 0.5, 0.9, true),
+        ];
+        let t = ascii_timeline(&spans, 0, 40);
+        assert!(t.contains('#'));
+        assert!(t.contains('='));
+        assert!(t.contains('a'));
+    }
+
+    #[test]
+    fn overlap_measurement() {
+        let spans = vec![
+            span(0, Stream::Compute, "s1.mm", 0.0, 1.0, false),
+            span(0, Stream::Comm, "s0.ar", 0.0, 0.5, true), // fully hidden
+        ];
+        assert!((measured_overlap(&spans, 0) - 1.0).abs() < 1e-9);
+        let spans2 = vec![
+            span(0, Stream::Compute, "s1.mm", 0.0, 1.0, false),
+            span(0, Stream::Comm, "s0.ar", 1.0, 2.0, true), // fully exposed
+        ];
+        assert!(measured_overlap(&spans2, 0) < 1e-9);
+    }
+}

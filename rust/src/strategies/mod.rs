@@ -1,0 +1,599 @@
+//! Parallelization strategies: compile a (network, mesh, machine, batch)
+//! into per-GPU op programs for the simulator.
+//!
+//! * [`Strategy::Tensor3d`] — the paper's system: Algorithm-1 2-D tensor
+//!   parallelism inside each group, §4.1 transposed alternate layers
+//!   (toggleable for the ablation), §4.2 depth-way overdecomposition with
+//!   the round-robin enqueue order of Fig. 4.
+//! * [`Strategy::Megatron`] — the baseline: 1-D tensor parallelism
+//!   (`G_r = 1, G_c = G_tensor`), synchronous collectives, no
+//!   overdecomposition.  Identical to the degenerate Tensor3D case, as
+//!   §7.2 notes.
+//! * [`Strategy::Colossal3d`] — Agarwal 3-D matmul tensor parallelism on a
+//!   `q^3` cube, synchronous.
+//!
+//! Op tags encode (phase, layer, shard, communicator) so independently
+//! built per-rank programs rendezvous correctly.
+
+use crate::mesh::{Coord, Mesh};
+use crate::models::NetworkDesc;
+use crate::sim::engine::{GpuProgram, Op, OpKind, Stream};
+use crate::sim::Machine;
+
+pub const BYTES_PER_ELEM: f64 = 2.0; // fp16 activations/gradients (§6.1)
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Tensor3d {
+        /// §4.2 overdecomposition degree (1 = synchronous, 2 = paper).
+        depth: usize,
+        /// §4.1 transposed alternate layers (false = ablation: pay a
+        /// redistribution at every layer boundary).
+        transpose_opt: bool,
+    },
+    Megatron,
+    Colossal3d,
+}
+
+impl Strategy {
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::Tensor3d { depth, transpose_opt } => {
+                format!("tensor3d(d={depth},{})", if *transpose_opt { "4.1 on" } else { "4.1 off" })
+            }
+            Strategy::Megatron => "megatron-lm".into(),
+            Strategy::Colossal3d => "colossal-ai-3d".into(),
+        }
+    }
+
+    /// The effective mesh the strategy runs on (Megatron flattens the
+    /// tensor grid to 1 x G_tensor; Colossal needs a cube).
+    pub fn effective_mesh(&self, mesh: &Mesh) -> Mesh {
+        match self {
+            Strategy::Tensor3d { depth, .. } => Mesh::new(mesh.g_data, mesh.g_r, mesh.g_c, *depth),
+            Strategy::Megatron => Mesh::new(mesh.g_data, 1, mesh.g_tensor(), 1),
+            Strategy::Colossal3d => *mesh,
+        }
+    }
+}
+
+/// Deterministic collective tags: every member of a communicator derives
+/// the same tag for the same logical collective.
+fn tag(phase: u64, layer: usize, shard: usize, group_kind: u64, group_id: usize) -> u64 {
+    (phase << 58)
+        | ((layer as u64) << 38)
+        | ((shard as u64) << 30)
+        | (group_kind << 27)
+        | group_id as u64
+}
+
+const GK_COL: u64 = 0;
+const GK_ROW: u64 = 1;
+const GK_DATA: u64 = 2;
+
+const PH_FWD: u64 = 1;
+const PH_BWD: u64 = 2;
+const PH_XPOSE: u64 = 3;
+const PH_DP: u64 = 4;
+
+/// Build the per-GPU programs for one training iteration.
+pub fn build_programs(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh_in: &Mesh,
+    batch: usize,
+    machine: &Machine,
+) -> Vec<GpuProgram> {
+    let mesh = strategy.effective_mesh(mesh_in);
+    match strategy {
+        Strategy::Tensor3d { depth, transpose_opt } => {
+            build_tensor3d(net, &mesh, batch, depth, transpose_opt)
+        }
+        Strategy::Megatron => build_tensor3d(net, &mesh, batch, 1, true),
+        Strategy::Colossal3d => build_colossal(net, &mesh, batch, machine),
+    }
+}
+
+/// Algorithm-1 iteration with depth-way overdecomposition.
+///
+/// Enqueue order per GPU follows §4.2 verbatim: for each layer, enqueue
+/// shard-0 compute, its all-reduce on the comm stream, then *switch to
+/// shard 1* and enqueue its compute/comm — so the comm of one shard
+/// overlaps the compute of the other whenever durations allow.
+fn build_tensor3d(
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    depth: usize,
+    transpose_opt: bool,
+) -> Vec<GpuProgram> {
+    let world = mesh.world();
+    let samples_per_exec = batch as f64 / (mesh.g_data * depth) as f64;
+    let mut programs: Vec<GpuProgram> = vec![GpuProgram::default(); world];
+
+    for rank in 0..world {
+        let Coord { d, i, j } = mesh.coord_of(rank);
+        let p = &mut programs[rank];
+        // last op of each (shard, kind) for dependency chaining
+        let mut last_fwd: Vec<Option<usize>> = vec![None; depth];
+
+        // ---------------- forward ----------------
+        for (li, layer) in net.layers.iter().enumerate() {
+            // effective grid roles (§4.1 swap for transposed layers)
+            let (fwd_gk, fwd_gid, g_r_eff, g_c_eff) = if layer.transposed && transpose_opt {
+                (GK_ROW, d * mesh.g_r + i, mesh.g_c, mesh.g_r)
+            } else {
+                (GK_COL, d * mesh.g_c + j, mesh.g_r, mesh.g_c)
+            };
+            let m_local = samples_per_exec * layer.rows_per_sample as f64;
+            let flops = layer.fwd_flops(samples_per_exec) / mesh.g_tensor() as f64;
+            let min_dim = m_local
+                .min(layer.k as f64 / g_r_eff as f64)
+                .min(layer.n as f64 / g_c_eff as f64);
+            // forward AR buffer: (m x n/g_c_eff) elements (Eq. 2)
+            let ar_bytes = m_local * layer.n as f64 / g_c_eff as f64 * BYTES_PER_ELEM;
+            let fwd_group = if fwd_gk == GK_COL {
+                mesh.col_group(rank)
+            } else {
+                mesh.row_group(rank)
+            };
+
+            for s in 0..depth {
+                let mut deps = Vec::new();
+                if let Some(prev) = last_fwd[s] {
+                    deps.push((rank, prev));
+                }
+                let mm = p.push(Op {
+                    name: format!("s{s}.fwd.{}", layer.name),
+                    kind: OpKind::Compute { flops, min_dim },
+                    stream: Stream::Compute,
+                    deps,
+                });
+                let ar = p.push(Op {
+                    name: format!("s{s}.fwd-ar.{}", layer.name),
+                    kind: OpKind::AllReduce {
+                        tag: tag(PH_FWD, li, s, fwd_gk, fwd_gid),
+                        bytes: ar_bytes,
+                        group: fwd_group.clone(),
+                    },
+                    stream: Stream::Comm,
+                    deps: vec![(rank, mm)],
+                });
+                let mut tail = ar;
+                // head-sharded local compute attached after this layer
+                // (attention core: replicated over rows, sharded over g_c)
+                for att in net.attached.iter().filter(|a| a.after_layer == li) {
+                    let aflops =
+                        att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
+                    tail = p.push(Op {
+                        name: format!("s{s}.fwd.{}", att.name),
+                        kind: OpKind::Compute { flops: aflops, min_dim: m_local },
+                        stream: Stream::Compute,
+                        deps: vec![(rank, tail)],
+                    });
+                }
+                if layer.transposed && !transpose_opt && mesh.g_tensor() > 1 {
+                    // ablation: §4.1 disabled — activations must be
+                    // redistributed ("transpose") at the layer boundary.
+                    let xp_bytes =
+                        m_local * layer.n as f64 / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                    tail = p.push(Op {
+                        name: format!("s{s}.xpose.{}", layer.name),
+                        kind: OpKind::AllReduce {
+                            tag: tag(PH_XPOSE, li, s, GK_COL, d),
+                            bytes: xp_bytes * mesh.g_tensor() as f64 / 2.0,
+                            group: (0..mesh.g_tensor())
+                                .map(|t| d * mesh.g_tensor() + t)
+                                .collect(),
+                        },
+                        stream: Stream::Comm,
+                        deps: vec![(rank, ar)],
+                    });
+                }
+                last_fwd[s] = Some(tail);
+            }
+        }
+
+        // ---------------- backward ----------------
+        let mut last_bwd: Vec<Option<usize>> = last_fwd.clone();
+        let mut last_dw: Vec<Option<usize>> = vec![None; depth];
+        for (li, layer) in net.layers.iter().enumerate().rev() {
+            let (bwd_gk, bwd_gid, g_r_eff, g_c_eff) = if layer.transposed && transpose_opt {
+                // transposed layer: backward AR over the COLUMN comm
+                (GK_COL, d * mesh.g_c + j, mesh.g_c, mesh.g_r)
+            } else {
+                (GK_ROW, d * mesh.g_r + i, mesh.g_r, mesh.g_c)
+            };
+            let m_local = samples_per_exec * layer.rows_per_sample as f64;
+            // dX matmul + dW matmul each cost one forward's flops
+            let flops = layer.fwd_flops(samples_per_exec) / mesh.g_tensor() as f64;
+            let min_dim = m_local
+                .min(layer.k as f64 / g_r_eff as f64)
+                .min(layer.n as f64 / g_c_eff as f64);
+            let ar_bytes = m_local * layer.k as f64 / g_r_eff as f64 * BYTES_PER_ELEM;
+            let bwd_group = if bwd_gk == GK_COL {
+                mesh.col_group(rank)
+            } else {
+                mesh.row_group(rank)
+            };
+            for s in 0..depth {
+                let mut deps = Vec::new();
+                if let Some(prev) = last_bwd[s] {
+                    deps.push((rank, prev));
+                }
+                // activation checkpointing (§6.1): recompute this layer's
+                // forward before its backward
+                let rc = p.push(Op {
+                    name: format!("s{s}.recompute.{}", layer.name),
+                    kind: OpKind::Compute { flops, min_dim },
+                    stream: Stream::Compute,
+                    deps: deps.clone(),
+                });
+                let mut deps = vec![(rank, rc)];
+                // attached compute backward (2x fwd) + recompute (1x fwd)
+                for att in net.attached.iter().filter(|a| a.after_layer == li) {
+                    let aflops =
+                        3.0 * att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
+                    let ab = p.push(Op {
+                        name: format!("s{s}.bwd.{}", att.name),
+                        kind: OpKind::Compute { flops: aflops, min_dim: m_local },
+                        stream: Stream::Compute,
+                        deps: deps.clone(),
+                    });
+                    deps = vec![(rank, ab)];
+                }
+                let dx = p.push(Op {
+                    name: format!("s{s}.bwd-dx.{}", layer.name),
+                    kind: OpKind::Compute { flops, min_dim },
+                    stream: Stream::Compute,
+                    deps: deps.clone(),
+                });
+                let ar = p.push(Op {
+                    name: format!("s{s}.bwd-ar.{}", layer.name),
+                    kind: OpKind::AllReduce {
+                        tag: tag(PH_BWD, li, s, bwd_gk, bwd_gid),
+                        bytes: ar_bytes,
+                        group: bwd_group.clone(),
+                    },
+                    stream: Stream::Comm,
+                    deps: vec![(rank, dx)],
+                });
+                // dW is local and independent of the dX all-reduce — it
+                // naturally fills the bubble while the AR is in flight.
+                let dw = p.push(Op {
+                    name: format!("s{s}.bwd-dw.{}", layer.name),
+                    kind: OpKind::Compute { flops, min_dim },
+                    stream: Stream::Compute,
+                    deps,
+                });
+                last_bwd[s] = Some(ar);
+                last_dw[s] = Some(dw);
+            }
+        }
+
+        // ---------------- data-parallel gradient AR + optimizer --------
+        if mesh.g_data > 1 {
+            let grad_bytes = net.fc_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+            let mut deps: Vec<(usize, usize)> = Vec::new();
+            for s in 0..depth {
+                if let Some(x) = last_dw[s] {
+                    deps.push((rank, x));
+                }
+                if let Some(x) = last_bwd[s] {
+                    deps.push((rank, x));
+                }
+            }
+            let dp = p.push(Op {
+                name: "dp-grad-ar".into(),
+                kind: OpKind::AllReduce {
+                    tag: tag(PH_DP, 0, 0, GK_DATA, i * mesh.g_c + j),
+                    bytes: grad_bytes,
+                    group: mesh.data_group(rank),
+                },
+                stream: Stream::Comm,
+                deps,
+            });
+            p.push(Op {
+                name: "adamw".into(),
+                // elementwise: ~12 flops per param shard element
+                kind: OpKind::Compute {
+                    flops: 12.0 * net.fc_params() / mesh.g_tensor() as f64,
+                    min_dim: 1e9,
+                },
+                stream: Stream::Compute,
+                deps: vec![(rank, dp)],
+            });
+        }
+    }
+    programs
+}
+
+/// Colossal-AI-3D (Agarwal): synchronous; per layer, one fused compute op
+/// and three face-movement collectives over q-sized groups.
+fn build_colossal(
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    _machine: &Machine,
+) -> Vec<GpuProgram> {
+    let world = mesh.world();
+    let gt = mesh.g_tensor();
+    let q = (gt as f64).cbrt().round() as usize;
+    assert_eq!(q * q * q, gt, "Colossal-AI-3D needs a perfect-cube G_tensor");
+    let samples = batch as f64 / mesh.g_data as f64;
+    let mut programs: Vec<GpuProgram> = vec![GpuProgram::default(); world];
+
+    for rank in 0..world {
+        let d = rank / gt;
+        let t = rank % gt; // position in the cube, flattened
+        let p = &mut programs[rank];
+        let mut last: Option<usize> = None;
+        // fwd + bwd passes: 1 GEMM fwd, 2 bwd
+        for (pass, gemms) in [(PH_FWD, 1usize), (PH_BWD, 2usize)] {
+            let layer_iter: Vec<usize> = if pass == PH_FWD {
+                (0..net.layers.len()).collect()
+            } else {
+                (0..net.layers.len()).rev().collect()
+            };
+            for li in layer_iter {
+                let layer = &net.layers[li];
+                let m = samples * layer.rows_per_sample as f64;
+                let (k, n) = (layer.k as f64, layer.n as f64);
+                for gemm in 0..gemms {
+                    let flops = layer.fwd_flops(samples) / gt as f64;
+                    // local dims under the cube: each of m, k, n is /q
+                    let min_dim = (m / q as f64).min(k / q as f64).min(n / q as f64);
+                    let mut deps = Vec::new();
+                    if let Some(prev) = last {
+                        deps.push((rank, prev));
+                    }
+                    let mm = p.push(Op {
+                        name: format!(
+                            "cai.{}.{}.g{gemm}",
+                            if pass == PH_FWD { "f" } else { "b" },
+                            layer.name
+                        ),
+                        kind: OpKind::Compute { flops, min_dim },
+                        stream: Stream::Compute,
+                        deps,
+                    });
+                    // Agarwal 3-D matmul: each GEMM moves the A, B and C
+                    // faces along the three cube axes — the axis-0 groups
+                    // are rank-consecutive (node-local with 4 GPUs/node),
+                    // the axis-1/axis-2 groups are strided (cross-node),
+                    // which is where Colossal-AI-3D's synchronous traffic
+                    // hurts (Table 5).
+                    let faces = [m * k, k * n, m * n];
+                    // cube coords of t: (a, b, c) with t = a + q*b + q^2*c
+                    let (a, b, c) = (t % q, (t / q) % q, t / (q * q));
+                    let mut prev = mm;
+                    for (axis, face) in faces.iter().enumerate() {
+                        let vol = face / (q * q) as f64 * BYTES_PER_ELEM;
+                        let buf = vol / 2.0; // AllReduce applies 2(p-1)/p
+                        let stride = q.pow(axis as u32);
+                        let base = match axis {
+                            0 => b * q + c * q * q,
+                            1 => a + c * q * q,
+                            _ => a + b * q,
+                        };
+                        let group: Vec<usize> =
+                            (0..q).map(|x| d * gt + base + x * stride).collect();
+                        let gid = (d * gt + base) * 4 + axis;
+                        let ar = p.push(Op {
+                            name: format!(
+                                "cai.ar{axis}.{}.{li}.g{gemm}",
+                                if pass == PH_FWD { "f" } else { "b" }
+                            ),
+                            kind: OpKind::AllReduce {
+                                tag: tag(pass, li * 16 + gemm * 4 + axis, 0, GK_COL, gid),
+                                bytes: buf,
+                                group,
+                            },
+                            stream: Stream::Comm,
+                            deps: vec![(rank, prev)],
+                        });
+                        prev = ar;
+                    }
+                    last = Some(prev);
+                }
+            }
+        }
+        if mesh.g_data > 1 {
+            let grad_bytes = net.fc_params() / gt as f64 * BYTES_PER_ELEM;
+            let deps = last.map(|x| vec![(rank, x)]).unwrap_or_default();
+            p.push(Op {
+                name: "dp-grad-ar".into(),
+                kind: OpKind::AllReduce {
+                    tag: tag(PH_DP, 0, 0, GK_DATA, t),
+                    bytes: grad_bytes,
+                    group: (0..mesh.g_data).map(|dd| dd * gt + t).collect(),
+                },
+                stream: Stream::Comm,
+                deps,
+            });
+        }
+    }
+    programs
+}
+
+/// Convenience: simulate one iteration and return (time_s, comm GB/gpu).
+pub fn iterate(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    machine: &Machine,
+) -> (f64, f64) {
+    let programs = build_programs(strategy, net, mesh, batch, machine);
+    let r = crate::sim::simulate(machine, &programs);
+    let gb = r.comm_bytes.iter().sum::<f64>() / r.comm_bytes.len() as f64 / 1e9;
+    (r.makespan, gb)
+}
+
+/// Model-flops utilization (Table 4 metric): achieved flops per GPU over
+/// peak, using the network's analytic train flops.
+pub fn mfu(net: &NetworkDesc, batch: usize, world: usize, time_s: f64, machine: &Machine) -> f64 {
+    net.train_flops_per_sample * batch as f64 / (time_s * world as f64 * machine.peak_flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::gpt::GptDims;
+
+    fn small_net() -> NetworkDesc {
+        GptDims { vocab: 8192, hidden: 1024, layers: 4, heads: 8, seq: 512 }.network()
+    }
+
+    #[test]
+    fn tensor3d_async_not_slower_than_sync() {
+        // §4.2: depth-2 overdecomposition must not be slower than sync.
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(2, 2, 4, 1);
+        let (t_async, _) =
+            iterate(Strategy::Tensor3d { depth: 2, transpose_opt: true }, &net, &mesh, 64, &machine);
+        let (t_sync, _) =
+            iterate(Strategy::Tensor3d { depth: 1, transpose_opt: true }, &net, &mesh, 64, &machine);
+        assert!(t_async <= t_sync * 1.001, "async {t_async} vs sync {t_sync}");
+    }
+
+    #[test]
+    fn transpose_opt_reduces_volume() {
+        // §4.1 ablation: disabling the transposed layout adds volume.
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(1, 2, 4, 1);
+        let (_, v_on) =
+            iterate(Strategy::Tensor3d { depth: 1, transpose_opt: true }, &net, &mesh, 64, &machine);
+        let (_, v_off) =
+            iterate(Strategy::Tensor3d { depth: 1, transpose_opt: false }, &net, &mesh, 64, &machine);
+        assert!(v_off > v_on, "off {v_off} on {v_on}");
+    }
+
+    #[test]
+    fn megatron_matches_comm_model_volume() {
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(2, 2, 4, 1);
+        let (_, gb) = iterate(Strategy::Megatron, &net, &mesh, 64, &machine);
+        let want_elems = crate::comm_model::megatron_network_volume(&net, 64.0, &mesh);
+        // sim includes the DP gradient AR; comm_model reports it separately
+        let dp = crate::comm_model::data_parallel_volume(&net, &mesh);
+        let want_gb = (want_elems + dp) * BYTES_PER_ELEM / 1e9;
+        assert!((gb / want_gb - 1.0).abs() < 0.02, "sim {gb} vs model {want_gb}");
+    }
+
+    #[test]
+    fn tensor3d_sim_volume_matches_comm_model() {
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(2, 2, 4, 1);
+        for depth in [1usize, 2, 4] {
+            let (_, gb) = iterate(
+                Strategy::Tensor3d { depth, transpose_opt: true },
+                &net,
+                &mesh,
+                64,
+                &machine,
+            );
+            let want_elems = crate::comm_model::tensor3d_network_volume(&net, 64.0, &mesh);
+            let dp = crate::comm_model::data_parallel_volume(&net, &mesh);
+            let want_gb = (want_elems + dp) * BYTES_PER_ELEM / 1e9;
+            // volume is invariant to overdecomposition depth
+            assert!(
+                (gb / want_gb - 1.0).abs() < 0.02,
+                "depth {depth}: sim {gb} vs model {want_gb}"
+            );
+        }
+    }
+
+    #[test]
+    fn tensor3d_faster_than_megatron_at_scale() {
+        // The headline: on a Table-3-like model, Tensor3D (optimal grid,
+        // depth 2) beats Megatron-LM.
+        let row = &crate::models::gpt::table3()[1]; // GPT 10B on 64 GPUs
+        let net = row.dims.network();
+        let machine = Machine::polaris();
+        let g_data = row.gpus / row.g_tensor;
+        let best = crate::comm_model::optimal_meshes(&net, row.batch as f64, row.gpus, row.g_tensor)
+            .into_iter()
+            .find(|(m, _)| m.g_data == g_data)
+            .unwrap()
+            .0;
+        let (t3d, v3d) = iterate(
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            &net,
+            &best,
+            row.batch,
+            &machine,
+        );
+        let (meg, vmeg) = iterate(Strategy::Megatron, &net, &best, row.batch, &machine);
+        assert!(t3d < meg, "t3d {t3d} vs megatron {meg}");
+        assert!(v3d < vmeg, "volume t3d {v3d} vs megatron {vmeg}");
+    }
+
+    #[test]
+    fn colossal_runs_on_cube() {
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(1, 2, 4, 1); // g_tensor = 8 = 2^3 OK
+        let (t, v) = iterate(Strategy::Colossal3d, &net, &mesh, 64, &machine);
+        assert!(t > 0.0 && v > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "perfect-cube")]
+    fn colossal_rejects_non_cube() {
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(1, 2, 2, 1); // g_tensor = 4: not a cube
+        let _ = iterate(Strategy::Colossal3d, &net, &mesh, 64, &machine);
+    }
+
+    #[test]
+    fn overlap_fraction_higher_for_depth2() {
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(1, 2, 4, 1);
+        let progs = build_programs(
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            &net,
+            &mesh,
+            64,
+            &machine,
+        );
+        let r = crate::sim::simulate(&machine, &progs);
+        let progs_sync = build_programs(
+            Strategy::Tensor3d { depth: 1, transpose_opt: true },
+            &net,
+            &mesh,
+            64,
+            &machine,
+        );
+        let r_sync = crate::sim::simulate(&machine, &progs_sync);
+        assert!(
+            r.overlap_fraction() > r_sync.overlap_fraction(),
+            "depth2 {} vs sync {}",
+            r.overlap_fraction(),
+            r_sync.overlap_fraction()
+        );
+    }
+
+    #[test]
+    fn mfu_in_sane_band() {
+        let row = &crate::models::gpt::table3()[0];
+        let net = row.dims.network();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(row.gpus / row.g_tensor, 2, 2, 1);
+        let (t, _) = iterate(
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            &net,
+            &mesh,
+            row.batch,
+            &machine,
+        );
+        let u = mfu(&net, row.batch, row.gpus, t, &machine);
+        assert!(u > 0.05 && u < 0.62, "mfu {u}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Checkpointing: each rank writes its parameter shards to a binary file
+//! (`rank<k>.bin`) plus a JSON index; `load_full` reassembles the full
+//! (unsharded) parameters from a checkpoint directory for export or
+//! cross-configuration comparison.
+//!
+//! Format, little-endian:
+//!   [u32 magic 0x54334443 "T3DC"] [u32 n_params]
+//!   per param: [u32 name_len][name bytes][u32 rows][u32 cols][rows*cols f32]
+
+use crate::layout::init::param_specs;
+use crate::layout::Mat;
+use crate::mesh::Mesh;
+use crate::runtime::manifest::Manifest;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: u32 = 0x5433_4443;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn save_shards(path: &Path, params: &BTreeMap<String, Mat>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    write_u32(&mut f, MAGIC)?;
+    write_u32(&mut f, params.len() as u32)?;
+    for (name, mat) in params {
+        write_u32(&mut f, name.len() as u32)?;
+        f.write_all(name.as_bytes())?;
+        write_u32(&mut f, mat.rows as u32)?;
+        write_u32(&mut f, mat.cols as u32)?;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(mat.data.as_ptr() as *const u8, mat.data.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load_shards(path: &Path) -> Result<BTreeMap<String, Mat>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    if read_u32(&mut f)? != MAGIC {
+        bail!("{}: not a tensor3d checkpoint", path.display());
+    }
+    let n = read_u32(&mut f)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let rows = read_u32(&mut f)? as usize;
+        let cols = read_u32(&mut f)? as usize;
+        let mut data = vec![0f32; rows * cols];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, data.len() * 4)
+        };
+        f.read_exact(bytes)?;
+        out.insert(String::from_utf8(name)?, Mat::from_vec(rows, cols, data));
+    }
+    Ok(out)
+}
+
+/// Write the checkpoint index (shard files are written per-rank by the
+/// worker threads themselves, since Worker is not Send).
+pub fn write_index(dir: &Path, manifest: &Manifest, ranks: usize) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let index = Json::obj(vec![
+        ("model", Json::str(&manifest.model_name)),
+        ("g_data", Json::num(manifest.g_data as f64)),
+        ("g_r", Json::num(manifest.g_r as f64)),
+        ("g_c", Json::num(manifest.g_c as f64)),
+        ("depth", Json::num(manifest.depth as f64)),
+        ("ranks", Json::num(ranks as f64)),
+    ]);
+    std::fs::write(dir.join("index.json"), index.to_string())?;
+    Ok(())
+}
+
+/// Reassemble the full parameters of data-group 0 from a checkpoint.
+pub fn load_full(dir: &Path, manifest: &Manifest) -> Result<BTreeMap<String, Mat>> {
+    let mesh = Mesh::new(manifest.g_data, manifest.g_r, manifest.g_c, manifest.depth);
+    let mut per_rank: Vec<BTreeMap<String, Mat>> = Vec::new();
+    for rank in 0..mesh.g_tensor() {
+        per_rank.push(load_shards(&dir.join(format!("rank{rank}.bin")))?);
+    }
+    let mut out = BTreeMap::new();
+    for spec in param_specs(&manifest.model) {
+        let shards: Vec<Vec<Mat>> = (0..mesh.g_r)
+            .map(|i| {
+                (0..mesh.g_c)
+                    .map(|j| {
+                        per_rank[i * mesh.g_c + j]
+                            .get(&spec.name)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("missing {} in rank {}", spec.name, i * mesh.g_c + j))
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        out.insert(spec.name.clone(), spec.kind.assemble(&shards, &mesh));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_file_roundtrip() {
+        let mut params = BTreeMap::new();
+        params.insert("a".to_string(), Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        params.insert("b.w".to_string(), Mat::vector(vec![-0.5, 0.25]));
+        let path = std::env::temp_dir().join("t3d_ckpt_test.bin");
+        save_shards(&path, &params).unwrap();
+        let back = load_shards(&path).unwrap();
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("t3d_ckpt_bad.bin");
+        std::fs::write(&path, [0u8; 16]).unwrap();
+        assert!(load_shards(&path).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Training-loop driver: spawns one worker thread per simulated GPU,
+//! feeds them the synthetic corpus, collects the loss curve, writes
+//! checkpoints.  The leader thread only orchestrates — all compute runs in
+//! the workers (PJRT) and all communication in their comm threads.
+
+pub mod checkpoint;
+pub mod data;
+pub mod optimizer;
+
+use crate::coordinator::{build_worker_comms, Worker};
+use crate::mesh::Mesh;
+use crate::runtime::manifest::Manifest;
+use anyhow::{anyhow, Context, Result};
+use data::{Corpus, CorpusConfig};
+use optimizer::AdamWConfig;
+use std::path::Path;
+use std::sync::mpsc::channel;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub steps: u64,
+    pub seed: u64,
+    pub opt: AdamWConfig,
+    pub log_every: u64,
+    /// Print progress lines to stderr.
+    pub verbose: bool,
+    /// Optional checkpoint directory (written at the end of training).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, loss) for every step (loss is the global mean NLL).
+    pub losses: Vec<(u64, f64)>,
+    /// (step, grad_norm)
+    pub grad_norms: Vec<(u64, f64)>,
+    pub wall_seconds: f64,
+    pub steps_per_sec: f64,
+    pub world: usize,
+    pub total_execs: u64,
+    pub unigram_entropy: f64,
+}
+
+/// Train for `cfg.steps` steps on the artifacts at `cfg.artifact_dir`.
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    let manifest = Manifest::load(&cfg.artifact_dir)
+        .with_context(|| format!("loading manifest from {}", cfg.artifact_dir.display()))?;
+    let mesh = Mesh::new(manifest.g_data, manifest.g_r, manifest.g_c, manifest.depth);
+    let world = mesh.world();
+    let corpus_cfg = CorpusConfig::new(manifest.model.vocab, manifest.model.seq, cfg.seed);
+    let unigram = Corpus::new(corpus_cfg.clone()).unigram_entropy_estimate(50_000);
+
+    let comms = build_worker_comms(&mesh);
+    let (stat_tx, stat_rx) = channel::<(u64, f64, f64, u64)>();
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for (rank, wc) in comms.into_iter().enumerate() {
+        let manifest = manifest.clone();
+        let cfg = cfg.clone();
+        let corpus_cfg = corpus_cfg.clone();
+        let stat_tx = stat_tx.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("t3d-worker-{rank}"))
+                .spawn(move || -> Result<()> {
+                    let mut worker =
+                        Worker::new(&manifest, mesh, rank, wc, cfg.seed, cfg.opt)?;
+                    let corpus = Corpus::new(corpus_cfg);
+                    let batch_shard = manifest.batch / manifest.g_data;
+                    let d = worker.coord.d;
+                    for step in 0..cfg.steps {
+                        let (tokens, labels) = corpus.batch_for(step, d, batch_shard);
+                        let stats = worker
+                            .step(&tokens, &labels)
+                            .with_context(|| format!("rank {rank} step {step}"))?;
+                        if rank == 0 {
+                            stat_tx
+                                .send((step, stats.loss, stats.grad_norm, stats.execs))
+                                .ok();
+                        }
+                    }
+                    // Worker is not Send (PJRT client is Rc-backed), so
+                    // each rank writes its own checkpoint shards in-thread.
+                    if let Some(dir) = &cfg.checkpoint_dir {
+                        std::fs::create_dir_all(dir)?;
+                        checkpoint::save_shards(
+                            &dir.join(format!("rank{rank}.bin")),
+                            &worker.params,
+                        )?;
+                    }
+                    worker.shutdown();
+                    Ok(())
+                })
+                .expect("spawn worker"),
+        );
+    }
+    drop(stat_tx);
+
+    let mut losses = Vec::new();
+    let mut grad_norms = Vec::new();
+    let mut total_execs = 0;
+    while let Ok((step, loss, gnorm, execs)) = stat_rx.recv() {
+        total_execs = execs;
+        losses.push((step, loss));
+        grad_norms.push((step, gnorm));
+        if cfg.verbose && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            eprintln!(
+                "step {step:>5}  loss {loss:.4}  |g| {gnorm:.3}  ({:.1}s)",
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+
+    for j in joins {
+        match j.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(p) => return Err(anyhow!("worker panicked: {p:?}")),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    if let Some(dir) = &cfg.checkpoint_dir {
+        checkpoint::write_index(dir, &manifest, world)?;
+    }
+
+    Ok(TrainReport {
+        losses,
+        grad_norms,
+        wall_seconds: wall,
+        steps_per_sec: cfg.steps as f64 / wall,
+        world,
+        total_execs,
+        unigram_entropy: unigram,
+    })
+}
+
+/// Resolve an artifact directory: accept either a full path or a name
+/// under `artifacts/`.
+pub fn resolve_artifacts(spec: &str) -> Result<std::path::PathBuf> {
+    let p = Path::new(spec);
+    if p.join("manifest.json").exists() {
+        return Ok(p.to_path_buf());
+    }
+    let under = Path::new("artifacts").join(spec);
+    if under.join("manifest.json").exists() {
+        return Ok(under);
+    }
+    Err(anyhow!(
+        "no manifest.json at {spec:?} or artifacts/{spec} — run `make artifacts` \
+         (see python/compile/aot.py for the generator)"
+    ))
+}

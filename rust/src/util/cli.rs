@@ -1,0 +1,191 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters, defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    specs: Vec<ArgSpec>,
+    prog: String,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn new(prog: &str, specs: Vec<ArgSpec>) -> Self {
+        Args { specs, prog: prog.to_string(), ..Default::default() }
+    }
+
+    pub fn parse(mut self, argv: &[String]) -> Result<Self, CliError> {
+        let known: BTreeMap<&str, &ArgSpec> =
+            self.specs.iter().map(|s| (s.name, s)).collect();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = known
+                    .get(key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n{}", self.usage())))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{key} takes no value")));
+                    }
+                    self.flags.push(key.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                            .clone(),
+                    };
+                    self.values.insert(key.to_string(), v);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default)
+            .map(|s| s.to_string())
+    }
+
+    pub fn str(&self, name: &str) -> Result<String, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required --{name}")))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.str(name)?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: {v:?} is not an integer")))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.str(name)?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: {v:?} is not a number")))
+    }
+
+    /// Parse "RxC" grid syntax, e.g. "2x4".
+    pub fn grid(&self, name: &str) -> Result<(usize, usize), CliError> {
+        let v = self.str(name)?;
+        let (r, c) = v
+            .split_once('x')
+            .ok_or_else(|| CliError(format!("--{name}: expected RxC, got {v:?}")))?;
+        Ok((
+            r.parse().map_err(|_| CliError(format!("--{name}: bad rows in {v:?}")))?,
+            c.parse().map_err(|_| CliError(format!("--{name}: bad cols in {v:?}")))?,
+        ))
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: {} [options]\n", self.prog);
+        for spec in &self.specs {
+            let tail = if spec.is_flag {
+                String::new()
+            } else {
+                format!(" <v>{}", spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default())
+            };
+            let _ = writeln!(s, "  --{}{}\n      {}", spec.name, tail, spec.help);
+        }
+        s
+    }
+}
+
+/// Convenience for building specs.
+pub fn opt(name: &'static str, default: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { name, help, default: Some(default), is_flag: false }
+}
+
+pub fn req(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { name, help, default: None, is_flag: false }
+}
+
+pub fn flag(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { name, help, default: None, is_flag: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let a = Args::new("t", vec![opt("batch", "8", "batch"), flag("verbose", "v"), req("config", "c")])
+            .parse(&argv(&["--config=gpt", "--verbose", "pos1", "--batch", "16"]))
+            .unwrap();
+        assert_eq!(a.str("config").unwrap(), "gpt");
+        assert_eq!(a.usize("batch").unwrap(), 16);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t", vec![opt("batch", "8", "")]).parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize("batch").unwrap(), 8);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::new("t", vec![]).parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn grid_syntax() {
+        let a = Args::new("t", vec![opt("grid", "2x4", "")]).parse(&argv(&[])).unwrap();
+        assert_eq!(a.grid("grid").unwrap(), (2, 4));
+        let b = Args::new("t", vec![opt("grid", "x", "")]).parse(&argv(&[])).unwrap();
+        assert!(b.grid("grid").is_err());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = Args::new("t", vec![req("config", "")]).parse(&argv(&[])).unwrap();
+        assert!(a.str("config").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Offline-friendly substrates: everything a framework normally pulls from
+//! crates.io, rebuilt here because the build is fully vendored (the only
+//! external dependencies are `xla` and `anyhow`).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod timer;

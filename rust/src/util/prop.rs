@@ -1,0 +1,163 @@
+//! Miniature property-testing harness (proptest is not available offline).
+//!
+//! Shape: `props::check(name, cases, |g| { ... })` where the closure draws
+//! random inputs from the [`Gen`] and asserts invariants by returning
+//! `Err(msg)` on failure.  On failure the harness re-runs with the failing
+//! seed printed so the case is reproducible, and performs a simple
+//! size-halving shrink pass over the integer draws.
+
+use crate::util::rng::Rng;
+
+pub struct Gen {
+    rng: Rng,
+    /// Log of integer draws, so failures can be replayed/shrunk.
+    pub draws: Vec<i64>,
+    /// When replaying a shrunk sequence, draws come from here first.
+    replay: Vec<i64>,
+    replay_i: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), draws: Vec::new(), replay: Vec::new(), replay_i: 0 }
+    }
+
+    fn replaying(seed: u64, replay: Vec<i64>) -> Self {
+        Gen { rng: Rng::new(seed), draws: Vec::new(), replay, replay_i: 0 }
+    }
+
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        let v = if self.replay_i < self.replay.len() {
+            let v = self.replay[self.replay_i].clamp(lo, hi);
+            self.replay_i += 1;
+            v
+        } else {
+            self.rng.range_i64(lo, hi)
+        };
+        self.draws.push(v);
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// Power-of-two in [lo, hi] (both must be powers of two).
+    pub fn pow2(&mut self, lo: usize, hi: usize) -> usize {
+        let l = lo.trailing_zeros() as i64;
+        let h = hi.trailing_zeros() as i64;
+        1usize << self.int(l, h)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        // map through an integer draw so shrinking still works
+        let t = self.int(0, 1_000_000) as f64 / 1_000_000.0;
+        lo + t * (hi - lo)
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..len).map(|_| self.f64(lo, hi) as f32).collect()
+    }
+}
+
+/// Run `cases` random cases of `f`.  Panics with a reproducible report on
+/// the first failure (after attempting to shrink the integer draws).
+pub fn check<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xC0FFEE, f)
+}
+
+pub fn check_seeded<F>(name: &str, cases: u64, base_seed: u64, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = f(&mut g) {
+            let draws = g.draws.clone();
+            let shrunk = shrink(&f, seed, draws);
+            let mut g2 = Gen::replaying(seed, shrunk.clone());
+            let final_msg = f(&mut g2).err().unwrap_or(msg);
+            panic!(
+                "property {:?} failed (case {case}, seed {seed:#x})\n  draws: {shrunk:?}\n  error: {final_msg}",
+                name
+            );
+        }
+    }
+}
+
+fn shrink<F>(f: &F, seed: u64, mut draws: Vec<i64>) -> Vec<i64>
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    // Halve each draw toward zero while the property still fails.
+    let mut improved = true;
+    let mut rounds = 0;
+    while improved && rounds < 40 {
+        improved = false;
+        rounds += 1;
+        for i in 0..draws.len() {
+            if draws[i] == 0 {
+                continue;
+            }
+            let mut cand = draws.clone();
+            cand[i] /= 2;
+            let mut g = Gen::replaying(seed, cand.clone());
+            if f(&mut g).is_err() {
+                draws = cand;
+                improved = true;
+            }
+        }
+    }
+    draws
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 100, |g| {
+            let a = g.int(-1000, 1000);
+            let b = g.int(-1000, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_report() {
+        check("always-small", 100, |g| {
+            let a = g.int(0, 1000);
+            if a < 900 {
+                Ok(())
+            } else {
+                Err(format!("{a} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn pow2_bounds() {
+        check("pow2", 200, |g| {
+            let v = g.pow2(1, 64);
+            if v.is_power_of_two() && (1..=64).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("bad {v}"))
+            }
+        });
+    }
+}

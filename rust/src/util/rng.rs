@@ -1,0 +1,211 @@
+//! Deterministic RNG: xoshiro256** + Box-Muller normals.
+//!
+//! Drives parameter initialization (layout::init), the synthetic data
+//! pipelines (trainer::data) and the property-testing harness.  Being
+//! seed-stable across runs is what makes the serial-vs-parallel loss
+//! equivalence experiment (Fig. 6 analogue) meaningful.
+
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Box-Muller produces normals in pairs; the spare is cached here.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 expansion of the seed into the xoshiro state
+        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            z = z.wrapping_add(0x9E3779B97F4A7C15);
+            let mut x = z;
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+            x ^ (x >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Rng { s, spare: None }
+    }
+
+    /// Independent child stream (used to give each worker / param its own
+    /// deterministic stream regardless of generation order).
+    pub fn fork(&self, tag: u64) -> Rng {
+        let mut mixed = Rng::new(self.s[0] ^ tag.wrapping_mul(0x9E3779B97F4A7C15));
+        mixed.s[1] ^= self.s[1];
+        mixed.s[2] ^= self.s[2].rotate_left(17);
+        mixed
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // multiply-shift; bias is negligible for n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi].
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a buffer with scaled normals (parameter init).
+    pub fn fill_normal(&mut self, buf: &mut [f32], scale: f32) {
+        for v in buf {
+            *v = self.normal_f32() * scale;
+        }
+    }
+
+    /// Zipf-ish rank sampler over [0, n): p(k) ~ 1/(k+1)^s, used by the
+    /// synthetic token corpus so the loss curve has realistic structure.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        // inverse-CDF on a harmonic approximation; good enough for data gen
+        let u = self.f64();
+        if s <= 1.0001 {
+            // H_n ~ ln(n); invert u*H_n = ln(k+1)
+            let hn = (n as f64).ln().max(1e-9);
+            let k = (u * hn).exp() - 1.0;
+            return (k as u64).min(n - 1);
+        }
+        let a = 1.0 - s;
+        let hn = ((n as f64).powf(a) - 1.0) / a;
+        let k = (1.0 + u * hn * a).powf(1.0 / a) - 1.0;
+        (k as u64).min(n - 1)
+    }
+
+    /// Shuffle (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            let k = r.below(17);
+            assert!(k < 17);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let mut r = Rng::new(9);
+        let n = 1000;
+        let mut counts = vec![0u32; n as usize];
+        for _ in 0..50_000 {
+            counts[r.zipf(n, 1.1) as usize] += 1;
+        }
+        assert!(counts[0] > counts[100] && counts[100] > 0);
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let base = Rng::new(5);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+        // and reproducible
+        let mut a2 = Rng::new(5).fork(1);
+        assert_eq!(Rng::new(5).fork(1).next_u64(), a2.next_u64());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

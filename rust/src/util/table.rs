@@ -1,0 +1,215 @@
+//! ASCII table / figure rendering for the repro harness: every paper table
+//! and figure is printed as an aligned text table (plus CSV written next to
+//! it) so `tensor3d repro ...` output can be diffed against EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String| {
+            for wi in &w {
+                out.push('+');
+                out.push_str(&"-".repeat(wi + 2));
+            }
+            out.push_str("+\n");
+        };
+        line(&mut out);
+        out.push('|');
+        for (i, h) in self.headers.iter().enumerate() {
+            let _ = write!(out, " {:<width$} |", h, width = w[i]);
+        }
+        out.push('\n');
+        line(&mut out);
+        for r in &self.rows {
+            out.push('|');
+            for (i, c) in r.iter().enumerate() {
+                let _ = write!(out, " {:>width$} |", c, width = w[i]);
+            }
+            out.push('\n');
+        }
+        line(&mut out);
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+}
+
+/// Simple ASCII line chart: series of (x, y) rendered on a height x width
+/// character grid with log-ish awareness left to the caller.  Used to
+/// visualize loss curves and scaling figures in the terminal.
+pub struct AsciiChart {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    pub series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+impl AsciiChart {
+    pub fn new(title: &str) -> Self {
+        AsciiChart { title: title.to_string(), width: 72, height: 18, series: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &str, pts: Vec<(f64, f64)>) {
+        self.series.push((name.to_string(), pts));
+    }
+
+    pub fn render(&self) -> String {
+        let marks = ['*', 'o', '+', 'x', '#', '@'];
+        let all: Vec<(f64, f64)> = self.series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+        if all.is_empty() {
+            return format!("== {} == (no data)\n", self.title);
+        }
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for (x, y) in &all {
+            xmin = xmin.min(*x);
+            xmax = xmax.max(*x);
+            ymin = ymin.min(*y);
+            ymax = ymax.max(*y);
+        }
+        if (xmax - xmin).abs() < 1e-12 {
+            xmax = xmin + 1.0;
+        }
+        if (ymax - ymin).abs() < 1e-12 {
+            ymax = ymin + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, pts)) in self.series.iter().enumerate() {
+            for (x, y) in pts {
+                let cx = ((x - xmin) / (xmax - xmin) * (self.width - 1) as f64).round() as usize;
+                let cy = ((y - ymin) / (ymax - ymin) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy;
+                grid[row][cx] = marks[si % marks.len()];
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let _ = writeln!(out, "y: [{ymin:.4}, {ymax:.4}]  x: [{xmin:.1}, {xmax:.1}]");
+        for row in &grid {
+            out.push('|');
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push('+');
+        out.push_str(&"-".repeat(self.width));
+        out.push('\n');
+        for (si, (name, _)) in self.series.iter().enumerate() {
+            let _ = writeln!(out, "  {} {}", marks[si % marks.len()], name);
+        }
+        out
+    }
+}
+
+pub fn fmt_si(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e12 {
+        format!("{:.2}T", v / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}K", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+pub fn fmt_bytes(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e12 {
+        format!("{:.2} TB", v / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2} GB", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2} MB", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2} KB", v / 1e3)
+    } else {
+        format!("{v:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["model", "time"]);
+        t.row(vec!["unet-3.5b".into(), "12.3".into()]);
+        t.row(vec!["u".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| unet-3.5b |"));
+        let widths: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        // all body lines same width
+        assert!(widths[1..].iter().all(|w| *w == widths[1] || *w == 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn chart_renders() {
+        let mut c = AsciiChart::new("loss");
+        c.add("t3d", (0..50).map(|i| (i as f64, 5.0 / (1.0 + i as f64))).collect());
+        let s = c.render();
+        assert!(s.contains("== loss =="));
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(fmt_si(1.5e9), "1.50G");
+        assert_eq!(fmt_bytes(2.0e6), "2.00 MB");
+    }
+}

@@ -1,0 +1,130 @@
+//! Timing + micro-bench harness (criterion is not available offline).
+//!
+//! `bench(name, iters, f)` reports min/median/mean over warmed-up runs;
+//! cargo-bench targets (`rust/benches/*.rs`, `harness = false`) use this
+//! so `make bench` works fully offline.
+
+use std::time::{Duration, Instant};
+
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}  ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.max),
+            self.iters
+        )
+    }
+
+    /// Throughput helper: items per second at the median.
+    pub fn per_sec(&self, items: f64) -> f64 {
+        items / self.median.as_secs_f64()
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+pub fn bench_header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "min", "median", "mean", "max"
+    )
+}
+
+/// Run `f` `iters` times (after 2 warmup runs) and gather stats.  `f`
+/// should return something observable to stop the optimizer from deleting
+/// the work; the result is black-boxed.
+pub fn bench<T, F: FnMut() -> T>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..2 {
+        black_box(f());
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        black_box(f());
+        times.push(t.elapsed());
+    }
+    times.sort();
+    let sum: Duration = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        min: times[0],
+        median: times[times.len() / 2],
+        mean: sum / (times.len() as u32),
+        max: *times.last().unwrap(),
+    }
+}
+
+/// Stable black_box on std (std::hint::black_box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let r = bench("noop-ish", 16, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert_eq!(r.iters, 16);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.per_sec(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.500ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,192 @@
+//! Cross-layer consistency: the analytic communication model (§5), the
+//! simulator, and the planner must agree with each other and with the
+//! paper's derivations on randomized inputs.  No artifacts required.
+
+use tensor3d::comm_model;
+use tensor3d::mesh::Mesh;
+use tensor3d::models::gpt::GptDims;
+use tensor3d::models::unet::UnetDims;
+use tensor3d::sim::Machine;
+use tensor3d::strategies::{self, Strategy, BYTES_PER_ELEM};
+use tensor3d::util::prop;
+
+#[test]
+fn sim_volume_equals_model_volume_on_random_configs() {
+    prop::check("sim-vs-model-volume", 12, |g| {
+        let dims = GptDims {
+            vocab: 512 * g.pow2(1, 4),
+            hidden: 128 * g.pow2(1, 4),
+            layers: g.usize(1, 4),
+            heads: 8,
+            seq: 64,
+        };
+        let net = dims.network();
+        let mesh = Mesh::new(g.pow2(1, 4), g.pow2(1, 4), g.pow2(1, 4), 1);
+        let batch = (mesh.g_data * 2 * g.usize(1, 4)) as usize;
+        let machine = Machine::polaris();
+        let (_, gb) = strategies::iterate(
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            &net,
+            &mesh,
+            batch,
+            &machine,
+        );
+        let want = (comm_model::tensor3d_network_volume(&net, batch as f64, &mesh)
+            + comm_model::data_parallel_volume(&net, &mesh))
+            * BYTES_PER_ELEM
+            / 1e9;
+        if want == 0.0 {
+            return if gb.abs() < 1e-12 { Ok(()) } else { Err(format!("{gb} != 0")) };
+        }
+        let rel = (gb / want - 1.0).abs();
+        if rel > 0.02 {
+            return Err(format!("sim {gb:.4} vs model {want:.4} (rel {rel:.3}) on {mesh}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn megatron_never_moves_less_than_optimal_tensor3d() {
+    prop::check("megatron-dominated", 12, |g| {
+        let dims = GptDims {
+            vocab: 2048,
+            hidden: 256 * g.pow2(1, 4),
+            layers: g.usize(2, 6),
+            heads: 8,
+            seq: 128,
+        };
+        let net = dims.network();
+        let world = 4 * g.pow2(1, 4);
+        let batch = 2 * world;
+        let best = comm_model::optimal_meshes(&net, batch as f64, world, 1)[0].0;
+        let v_best = comm_model::tensor3d_network_volume(&net, batch as f64, &best);
+        let v_meg = comm_model::megatron_network_volume(
+            &net,
+            batch as f64,
+            &Mesh::new(best.g_data, 1, best.g_tensor(), 1),
+        );
+        if v_best <= v_meg + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("optimal {v_best} > megatron {v_meg} at {best}"))
+        }
+    });
+}
+
+#[test]
+fn overdecomposition_never_increases_iteration_time() {
+    prop::check("depth-monotone", 6, |g| {
+        let dims = GptDims { vocab: 4096, hidden: 1024, layers: 3, heads: 8, seq: 512 };
+        let net = dims.network();
+        let mesh = Mesh::new(g.pow2(1, 2), 2, g.pow2(1, 2) * 2, 1);
+        let batch = mesh.g_data * 8;
+        let machine = Machine::polaris();
+        let (t1, _) = strategies::iterate(
+            Strategy::Tensor3d { depth: 1, transpose_opt: true },
+            &net,
+            &mesh,
+            batch,
+            &machine,
+        );
+        let (t2, _) = strategies::iterate(
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            &net,
+            &mesh,
+            batch,
+            &machine,
+        );
+        if t2 <= t1 * 1.001 {
+            Ok(())
+        } else {
+            Err(format!("depth 2 slower: {t2} vs {t1} on {mesh}"))
+        }
+    });
+}
+
+#[test]
+fn unet_planner_and_eq9_agree_on_table2() {
+    for row in tensor3d::models::unet::table2() {
+        let gt = row.g_tensor;
+        let closed = comm_model::unet_optimal_gc(gt);
+        // exhaustive optimum over divisors of g_tensor
+        let net = row.dims.network();
+        let best = comm_model::optimal_meshes(&net, row.batch as f64, row.gpus, gt)
+            .into_iter()
+            .find(|(m, _)| m.g_tensor() == gt)
+            .unwrap()
+            .0;
+        // the discrete optimum should be within one divisor step of Eq. 9
+        let ratio = best.g_c as f64 / closed;
+        assert!(
+            (0.4..=2.6).contains(&ratio),
+            "{}: discrete g_c {} vs Eq.9 {closed:.2}",
+            row.label,
+            best.g_c
+        );
+    }
+}
+
+#[test]
+fn weak_scaling_speedup_grows_with_model_size() {
+    // the headline trend of Fig. 7/8: Tensor3D's advantage over
+    // Megatron-LM widens as models scale
+    let machine = Machine::polaris();
+    let mut speedups = Vec::new();
+    for row in tensor3d::models::gpt::table3() {
+        let net = row.dims.network();
+        let mesh = comm_model::optimal_meshes(&net, row.batch as f64, row.gpus, row.g_tensor)
+            .into_iter()
+            .find(|(m, _)| m.g_tensor() == row.g_tensor)
+            .unwrap()
+            .0;
+        let (t3, _) = strategies::iterate(
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            &net,
+            &mesh,
+            row.batch,
+            &machine,
+        );
+        let (tm, _) = strategies::iterate(Strategy::Megatron, &net, &mesh, row.batch, &machine);
+        speedups.push(tm / t3);
+    }
+    assert!(
+        speedups.last().unwrap() > speedups.first().unwrap(),
+        "speedups should widen: {speedups:?}"
+    );
+    assert!(speedups.iter().all(|s| *s >= 0.99), "{speedups:?}");
+}
+
+#[test]
+fn unet_params_weak_scaling_doubles() {
+    // Table 2's recipe: channels x sqrt2 per GPU doubling => params x2
+    let rows = tensor3d::models::unet::table2();
+    for w in rows.windows(2) {
+        let r = w[1].dims.network().params / w[0].dims.network().params;
+        assert!((1.5..=2.8).contains(&r), "param ratio {r}");
+    }
+}
+
+#[test]
+fn colossal_table5_volume_ratios_in_paper_band() {
+    // Table 5: CAI-3D moves ~2x (U-Net 7.5B) and ~3.3x (GPT 10B) the data
+    let unet = UnetDims::table2_shape(3072).network();
+    let gpt = tensor3d::models::gpt::table3()[1].dims.network();
+    for (net, batch, gt, want_lo, want_hi) in
+        [(&unet, 2048.0, 8, 1.2, 4.0), (&gpt, 1024.0, 8, 1.8, 5.5)]
+    {
+        let t3d_mesh = comm_model::optimal_meshes(net, batch, 64, gt)
+            .into_iter()
+            .find(|(m, _)| m.g_tensor() == gt)
+            .unwrap()
+            .0;
+        let v3 = comm_model::tensor3d_network_volume(net, batch, &t3d_mesh);
+        let vc = comm_model::colossal3d_network_volume(net, batch, &Mesh::new(1, 8, 8, 1));
+        let ratio = vc / v3;
+        assert!(
+            (want_lo..=want_hi).contains(&ratio),
+            "{}: CAI/T3D ratio {ratio:.2} outside [{want_lo}, {want_hi}]",
+            net.name
+        );
+    }
+}

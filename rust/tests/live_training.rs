@@ -1,0 +1,148 @@
+//! Live-path integration tests: PJRT artifacts + Rust collectives +
+//! coordinator, end to end.  These need `make artifacts` to have produced
+//! the gpt-nano bundles; if they are missing the tests are skipped with a
+//! notice (CI runs `make artifacts` first).
+
+use std::path::{Path, PathBuf};
+use tensor3d::trainer::{self, data::Corpus, data::CorpusConfig, optimizer::AdamWConfig, TrainConfig};
+
+fn artifacts(name: &str) -> Option<PathBuf> {
+    let p = Path::new("artifacts").join(name);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/{name} missing — run `make artifacts`");
+        None
+    }
+}
+
+fn train_losses(dir: PathBuf, steps: u64, seed: u64) -> Vec<(u64, f64)> {
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        steps,
+        seed,
+        opt: AdamWConfig { lr: 1e-3, ..Default::default() },
+        log_every: 1,
+        verbose: false,
+        checkpoint_dir: None,
+    };
+    trainer::train(&cfg).expect("training failed").losses
+}
+
+#[test]
+fn serial_live_training_decreases_loss() {
+    let Some(dir) = artifacts("gpt-nano_r1c1d1b8_jnp") else { return };
+    let losses = train_losses(dir, 8, 42);
+    assert_eq!(losses.len(), 8);
+    let first = losses[0].1;
+    let last = losses.last().unwrap().1;
+    // initial loss ~ ln(V) = ln(256) = 5.55; must head downward
+    assert!((first - (256f64).ln()).abs() < 0.5, "init loss {first}");
+    assert!(last < first - 0.05, "loss did not drop: {first} -> {last}");
+}
+
+#[test]
+fn parallel_2x2_matches_serial_losses() {
+    // The Fig.-6 equivalence at test scale: identical seeds and batches,
+    // serial (1x1) vs Tensor3D (2x2, depth 2) — loss curves must agree to
+    // f32-reduction tolerance at every step.
+    let Some(serial) = artifacts("gpt-nano_r1c1d1b8_jnp") else { return };
+    let Some(par) = artifacts("gpt-nano_r2c2d2b8_jnp") else { return };
+    let a = train_losses(serial, 5, 7);
+    let b = train_losses(par, 5, 7);
+    assert_eq!(a.len(), b.len());
+    for ((sa, la), (sb, lb)) in a.iter().zip(&b) {
+        assert_eq!(sa, sb);
+        assert!(
+            (la - lb).abs() < 5e-3,
+            "step {sa}: serial {la} vs 2x2 {lb}"
+        );
+    }
+}
+
+#[test]
+fn serial_depth2_overdecomposition_matches_depth1() {
+    // §4.2 invariant live: splitting the batch into two sub-shards must
+    // not change the numerics, only the schedule.
+    let Some(d1) = artifacts("gpt-nano_r1c1d1b8_jnp") else { return };
+    let Some(d2) = artifacts("gpt-nano_r1c1d2b8_jnp") else { return };
+    let a = train_losses(d1, 4, 99);
+    let b = train_losses(d2, 4, 99);
+    for ((_, la), (_, lb)) in a.iter().zip(&b) {
+        assert!((la - lb).abs() < 5e-3, "depth1 {la} vs depth2 {lb}");
+    }
+}
+
+#[test]
+fn training_beats_unigram_entropy_eventually() {
+    // the corpus has a learnable rule; a short run should already dip
+    // under the unigram entropy floor of a structureless predictor
+    let Some(dir) = artifacts("gpt-nano_r1c1d1b8_jnp") else { return };
+    let report = trainer::train(&TrainConfig {
+        artifact_dir: dir,
+        steps: 30,
+        seed: 3,
+        opt: AdamWConfig { lr: 2e-3, ..Default::default() },
+        log_every: 10,
+        verbose: false,
+        checkpoint_dir: None,
+    })
+    .expect("train");
+    let last = report.losses.last().unwrap().1;
+    // unigram entropy of the zipf marginal is ~4.9 nats for V=256
+    assert!(
+        last < report.unigram_entropy + 0.3,
+        "loss {last} vs unigram {:.3}",
+        report.unigram_entropy
+    );
+}
+
+#[test]
+fn checkpoints_roundtrip_across_configs() {
+    use tensor3d::runtime::manifest::Manifest;
+    use tensor3d::trainer::checkpoint;
+    let Some(par) = artifacts("gpt-nano_r2c2d2b8_jnp") else { return };
+    let ck = std::env::temp_dir().join("t3d_live_ckpt");
+    let _ = std::fs::remove_dir_all(&ck);
+    let cfg = TrainConfig {
+        artifact_dir: par.clone(),
+        steps: 2,
+        seed: 5,
+        opt: AdamWConfig::default(),
+        log_every: 1,
+        verbose: false,
+        checkpoint_dir: Some(ck.clone()),
+    };
+    trainer::train(&cfg).expect("train");
+    let manifest = Manifest::load(&par).expect("manifest");
+    let full = checkpoint::load_full(&ck, &manifest).expect("load_full");
+    // all params present with the right shapes
+    assert_eq!(full["wemb"].rows, 256);
+    assert_eq!(full["wemb"].cols, 64);
+    assert_eq!(full["b0.wqkv"].cols, 192);
+    // replicas must agree: with the column-major rank layout
+    // (rank = j*g_r + i), GPU(0,0) is rank 0 and GPU(0,1) is rank 2 —
+    // both hold the i=0 shard of wemb (replicated over grid columns)
+    let r00 = checkpoint::load_shards(&ck.join("rank0.bin")).unwrap();
+    let r01 = checkpoint::load_shards(&ck.join("rank2.bin")).unwrap();
+    assert_eq!(r00["wemb"], r01["wemb"], "column replicas diverged");
+    assert_eq!(r00["lnf_g"], r01["lnf_g"]);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(dir) = artifacts("gpt-nano_r1c1d1b8_jnp") else { return };
+    let a = train_losses(dir.clone(), 3, 1234);
+    let b = train_losses(dir, 3, 1234);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn data_parallel_groups_match_single_group_consistency() {
+    // smoke the data communicator: g_data handled via corpus shards —
+    // verify corpus produces distinct shards per group
+    let c = Corpus::new(CorpusConfig::new(256, 32, 11));
+    let (t0, _) = c.batch_for(0, 0, 4);
+    let (t1, _) = c.batch_for(0, 1, 4);
+    assert_ne!(t0, t1);
+}
