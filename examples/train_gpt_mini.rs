@@ -25,6 +25,7 @@ fn run(dir: std::path::PathBuf, steps: u64, seed: u64, lr: f32, label: &str) -> 
         log_every: 20,
         verbose: true,
         checkpoint_dir: Some(std::path::PathBuf::from(format!("results/ckpt_{label}"))),
+        sharded_state: false,
     })
     .expect("training failed");
     eprintln!(

@@ -257,6 +257,104 @@ impl Communicator {
         out
     }
 
+    /// Reduce-scatter: every member contributes `data` (whose length must
+    /// be a multiple of the group size); returns this member's chunk of
+    /// the element-wise reduction, chunks assigned in member order (member
+    /// `m` owns elements `[m*len/p, (m+1)*len/p)`).
+    ///
+    /// This is the shared-memory analogue of a bandwidth-optimal ring
+    /// reduce-scatter: the reduction work is parallelized across members
+    /// (each reduces only its own chunk), and each member's per-element
+    /// summation order is member 0 first — identical to
+    /// [`Communicator::all_reduce`] — so
+    /// `all_gather(reduce_scatter(x)) == all_reduce(x)` **bit-for-bit**.
+    /// The depth-sharded optimizer relies on that identity to stay
+    /// bitwise-consistent with the replicated path.
+    pub fn reduce_scatter(&mut self, data: &[f32], op: ReduceOp) -> Vec<f32> {
+        self.calls += 1;
+        self.bytes_reduced += (data.len() * 4) as u64;
+        let p = self.shared.size;
+        if p == 1 {
+            self.next_gen += 1;
+            return data.to_vec();
+        }
+        assert_eq!(
+            data.len() % p,
+            0,
+            "reduce_scatter: buffer of {} elements not divisible by group size {p}",
+            data.len()
+        );
+        let chunk = data.len() / p;
+        let my_gen = self.next_gen;
+        self.next_gen += 1;
+
+        // Phase 0: wait for our generation to be current.
+        {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            while r.gen != my_gen {
+                r = self.shared.cv.wait(r).unwrap();
+            }
+        }
+        // Phase 1: deposit into the private slot (uncontended).
+        {
+            let mut slot = self.shared.slots[self.member].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        // Phase 2: rendezvous until every member has deposited.  No shared
+        // result is produced — each member reduces only its own chunk.
+        {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            r.arrived += 1;
+            if r.arrived == p {
+                r.done = true;
+                self.shared.cv.notify_all();
+            } else {
+                while !(r.done && r.gen == my_gen) {
+                    r = self.shared.cv.wait(r).unwrap();
+                }
+            }
+        }
+        // Phase 3: reduce this member's chunk across all slots (slots stay
+        // valid until every member leaves; one brief lock per slot so the
+        // members' chunk reductions proceed concurrently).
+        let lo = self.member * chunk;
+        let hi = lo + chunk;
+        let mut out: Vec<f32> = {
+            let slot = self.shared.slots[0].lock().unwrap();
+            slot[lo..hi].to_vec()
+        };
+        for m in 1..p {
+            let slot = self.shared.slots[m].lock().unwrap();
+            match op {
+                ReduceOp::Sum => {
+                    for (a, b) in out.iter_mut().zip(&slot[lo..hi]) {
+                        *a += *b;
+                    }
+                }
+                ReduceOp::Max => {
+                    for (a, b) in out.iter_mut().zip(&slot[lo..hi]) {
+                        *a = a.max(*b);
+                    }
+                }
+            }
+        }
+        // Phase 4: last leaver advances the generation.
+        {
+            let mut r = self.shared.rendezvous.lock().unwrap();
+            r.leaving += 1;
+            if r.leaving == p {
+                r.arrived = 0;
+                r.leaving = 0;
+                r.done = false;
+                r.gen += 1;
+                r.result = Arc::new(Vec::new());
+                self.shared.cv.notify_all();
+            }
+        }
+        out
+    }
+
     /// Barrier across the group.
     pub fn barrier(&mut self) {
         let mut z: [f32; 1] = [0.0];
@@ -365,6 +463,80 @@ mod tests {
                 let want: f32 = srcs.iter().map(|s| s[i]).sum();
                 if (out[i] - want).abs() > 1e-4 {
                     return Err(format!("idx {i}: {} != {want}", out[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reduce_scatter_sums_and_shards_in_member_order() {
+        // member m contributes [m*10 + k for k in 0..6] over a 3-group;
+        // summed element k is 30 + 3k, and member m owns chunk [2m, 2m+2).
+        let outs = run_group(3, |m, mut c| {
+            let data: Vec<f32> = (0..6).map(|k| (m * 10 + k) as f32).collect();
+            c.reduce_scatter(&data, ReduceOp::Sum)
+        });
+        for (m, v) in outs.iter().enumerate() {
+            let want: Vec<f32> =
+                (2 * m..2 * m + 2).map(|k| 30.0 + 3.0 * k as f32).collect();
+            assert_eq!(v, &want, "member {m}");
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_max() {
+        let outs = run_group(2, |m, mut c| {
+            let data = vec![m as f32, -(m as f32), 5.0 - m as f32, 0.5];
+            c.reduce_scatter(&data, ReduceOp::Max)
+        });
+        assert_eq!(outs[0], vec![1.0, 0.0]);
+        assert_eq!(outs[1], vec![5.0, 0.5]);
+    }
+
+    #[test]
+    fn reduce_scatter_singleton_is_identity() {
+        let g = CommGroup::new(1);
+        let mut c = g.handle(0);
+        let v = vec![3.0, -4.0, 7.5];
+        assert_eq!(c.reduce_scatter(&v, ReduceOp::Sum), v);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn reduce_scatter_rejects_indivisible_buffers() {
+        // the length check fires before the rendezvous, so no peers needed
+        let g = CommGroup::new(2);
+        let mut c = g.handle(0);
+        let _ = c.reduce_scatter(&[1.0, 2.0, 3.0], ReduceOp::Sum);
+    }
+
+    #[test]
+    fn all_gather_of_reduce_scatter_equals_all_reduce() {
+        // The §4.2/ZeRO decomposition identity AG(RS(x)) == AR(x), checked
+        // bit-for-bit across random group sizes and buffer lengths — the
+        // depth-sharded optimizer's consistency with the replicated path
+        // rests on this being exact, not approximate.
+        prop::check("rs-ag-vs-ar", 20, |g| {
+            let p = g.usize(1, 5);
+            let n = p * g.usize(1, 40);
+            let data: Vec<Vec<f32>> =
+                (0..p).map(|_| g.vec_f32(n, -5.0, 5.0)).collect();
+            let data = Arc::new(data);
+            let d1 = data.clone();
+            let scattered = run_group(p, move |m, mut c| {
+                let chunk = c.reduce_scatter(&d1[m], ReduceOp::Sum);
+                c.all_gather(&chunk)
+            });
+            let d2 = data.clone();
+            let reduced = run_group(p, move |m, mut c| {
+                let mut v = d2[m].clone();
+                c.all_reduce(&mut v, ReduceOp::Sum);
+                v
+            });
+            for m in 0..p {
+                if scattered[m] != reduced[m] {
+                    return Err(format!("member {m}: AG(RS(x)) != AR(x) at p={p} n={n}"));
                 }
             }
             Ok(())

@@ -18,6 +18,38 @@ pub fn allreduce_volume(p: usize, buf_sz: f64) -> f64 {
     2.0 * (p as f64 - 1.0) / p as f64 * buf_sz
 }
 
+/// Ring reduce-scatter volume per process: one half of Eq. 1 (each member
+/// keeps `buf_sz / p` of the reduction).
+pub fn reduce_scatter_volume(p: usize, buf_sz: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p as f64 - 1.0) / p as f64 * buf_sz
+}
+
+/// Ring all-gather volume per process: the other half of Eq. 1 (`buf_sz`
+/// is the full gathered buffer).
+pub fn allgather_volume(p: usize, buf_sz: f64) -> f64 {
+    reduce_scatter_volume(p, buf_sz)
+}
+
+/// Depth-sharded (ZeRO/AxoNN-style) state mode: per-GPU data-dimension
+/// volume per iteration — the forward all-gather of weights plus the
+/// backward reduce-scatter of gradients.
+///
+/// Note the trade-off against Eq. 4: the element count is *identical* to
+/// the data-parallel all-reduce it replaces (Eq. 1 decomposes exactly as
+/// AR = RS + AG), so the tensor-parallel volume model is unchanged.  What
+/// sharding buys is memory — optimizer state shrinks by `g_data` (see
+/// [`crate::models::NetworkDesc::state_bytes_per_gpu_sharded`]) — which
+/// lets the §5 planner admit smaller `G_tensor` / larger `G_data` meshes
+/// whose Eq. 4 volume is strictly lower, plus two independently
+/// overlappable halves instead of one monolithic all-reduce.
+pub fn depth_sharded_dp_volume(net: &NetworkDesc, mesh: &Mesh) -> f64 {
+    let shard = net.fc_params() / mesh.g_tensor() as f64;
+    allgather_volume(mesh.g_data, shard) + reduce_scatter_volume(mesh.g_data, shard)
+}
+
 /// Eq. 2 + Eq. 3: per-GPU per-iteration volume of the two Algorithm-1
 /// all-reduces for one FC layer under Tensor3D.
 ///
@@ -163,6 +195,26 @@ mod tests {
         assert_eq!(allreduce_volume(1, 100.0), 0.0);
         assert_eq!(allreduce_volume(2, 100.0), 100.0);
         assert!((allreduce_volume(4, 100.0) - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq1_decomposes_into_reduce_scatter_plus_allgather() {
+        for p in [1usize, 2, 3, 4, 8, 17] {
+            let rs = reduce_scatter_volume(p, 1000.0);
+            let ag = allgather_volume(p, 1000.0);
+            assert!((rs + ag - allreduce_volume(p, 1000.0)).abs() < 1e-9, "p={p}");
+        }
+    }
+
+    #[test]
+    fn depth_sharded_volume_equals_dp_allreduce() {
+        // the sharded mode trades memory, not volume
+        let net = GptDims { vocab: 512, hidden: 256, layers: 2, heads: 4, seq: 8 }.network();
+        for mesh in [Mesh::new(4, 2, 2, 1), Mesh::new(8, 1, 4, 1), Mesh::new(1, 2, 4, 1)] {
+            let sharded = depth_sharded_dp_volume(&net, &mesh);
+            let replicated = data_parallel_volume(&net, &mesh);
+            assert!((sharded - replicated).abs() < 1e-9, "{mesh}");
+        }
     }
 
     #[test]

@@ -18,9 +18,29 @@ pub enum CommKind {
     Data,
 }
 
+/// Which collective to run on which communicator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coll {
+    AllReduce(CommKind, ReduceOp),
+    /// Reduce-scatter: returns this member's chunk (member-order sharding;
+    /// the buffer length must be a multiple of the group size).
+    ReduceScatter(CommKind, ReduceOp),
+    /// All-gather: returns the members' buffers concatenated in member
+    /// order.
+    AllGather(CommKind),
+}
+
 enum Req {
-    Ar { kind: CommKind, op: ReduceOp, buf: Vec<f32>, reply: Sender<Vec<f32>> },
+    Coll { coll: Coll, buf: Vec<f32>, reply: Sender<Vec<f32>> },
     Stop,
+}
+
+fn pick(comms: &mut WorkerComms, kind: CommKind) -> &mut Communicator {
+    match kind {
+        CommKind::Col => &mut comms.col,
+        CommKind::Row => &mut comms.row,
+        CommKind::Data => &mut comms.data,
+    }
 }
 
 /// Handle the worker thread uses to enqueue collectives.
@@ -62,17 +82,21 @@ impl CommStream {
                 let mut stats = CommStats::default();
                 while let Ok(req) = rx.recv() {
                     match req {
-                        Req::Ar { kind, op, mut buf, reply } => {
-                            let comm = match kind {
-                                CommKind::Col => &mut comms.col,
-                                CommKind::Row => &mut comms.row,
-                                CommKind::Data => &mut comms.data,
-                            };
+                        Req::Coll { coll, mut buf, reply } => {
                             stats.calls += 1;
                             stats.bytes += (buf.len() * 4) as u64;
-                            comm.all_reduce(&mut buf, op);
+                            let out = match coll {
+                                Coll::AllReduce(kind, op) => {
+                                    pick(&mut comms, kind).all_reduce(&mut buf, op);
+                                    buf
+                                }
+                                Coll::ReduceScatter(kind, op) => {
+                                    pick(&mut comms, kind).reduce_scatter(&buf, op)
+                                }
+                                Coll::AllGather(kind) => pick(&mut comms, kind).all_gather(&buf),
+                            };
                             // receiver may have been dropped on shutdown
-                            let _ = reply.send(buf);
+                            let _ = reply.send(out);
                         }
                         Req::Stop => break,
                     }
@@ -83,18 +107,31 @@ impl CommStream {
         CommStream { tx, join: Some(join) }
     }
 
+    /// Enqueue a collective; returns immediately.
+    pub fn post_coll(&self, coll: Coll, buf: Vec<f32>) -> Pending {
+        let (reply, rx) = channel();
+        self.tx.send(Req::Coll { coll, buf, reply }).expect("comm stream died");
+        Pending { rx }
+    }
+
     /// Enqueue an all-reduce; returns immediately.
     pub fn post(&self, kind: CommKind, op: ReduceOp, buf: Vec<f32>) -> Pending {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Req::Ar { kind, op, buf, reply })
-            .expect("comm stream died");
-        Pending { rx }
+        self.post_coll(Coll::AllReduce(kind, op), buf)
     }
 
     /// Synchronous convenience (post + wait).
     pub fn all_reduce(&self, kind: CommKind, op: ReduceOp, buf: Vec<f32>) -> Vec<f32> {
         self.post(kind, op, buf).wait()
+    }
+
+    /// Synchronous reduce-scatter over `kind`: returns this member's chunk.
+    pub fn reduce_scatter(&self, kind: CommKind, op: ReduceOp, buf: Vec<f32>) -> Vec<f32> {
+        self.post_coll(Coll::ReduceScatter(kind, op), buf).wait()
+    }
+
+    /// Synchronous all-gather over `kind`: returns the concatenation.
+    pub fn all_gather(&self, kind: CommKind, buf: Vec<f32>) -> Vec<f32> {
+        self.post_coll(Coll::AllGather(kind), buf).wait()
     }
 
     pub fn shutdown(mut self) -> CommStats {
@@ -151,6 +188,24 @@ mod tests {
         for j in joins {
             let (a, b) = j.join().unwrap();
             assert_eq!((a, b), (2.0, 4.0));
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_all_gather_roundtrips() {
+        // AG(RS(x)) == AR(x) through the comm-stream thread as well
+        let ss = streams(2);
+        let mut joins = Vec::new();
+        for (m, s) in ss.into_iter().enumerate() {
+            joins.push(std::thread::spawn(move || {
+                let data = vec![m as f32 + 1.0; 8];
+                let chunk = s.reduce_scatter(CommKind::Col, ReduceOp::Sum, data);
+                assert_eq!(chunk, vec![3.0; 4], "member {m} chunk");
+                s.all_gather(CommKind::Col, chunk)
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), vec![3.0; 8]);
         }
     }
 

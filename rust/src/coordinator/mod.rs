@@ -34,8 +34,10 @@ use crate::layout::Mat;
 use crate::mesh::{Coord, Mesh};
 use crate::models::gpt::GptDims;
 use crate::runtime::{manifest::Manifest, Arg, ArgV, ArtifactStore};
-use crate::trainer::optimizer::{adamw_step, AdamWConfig, MomentState};
-use anyhow::{Context, Result};
+use crate::trainer::optimizer::{adamw_step, depth_shard_range, AdamWConfig, MomentState};
+use crate::util::error::{Context, Result};
+#[cfg(not(feature = "pjrt"))]
+use crate::xla;
 use comm_stream::{CommKind, CommStream, Pending, WorkerComms};
 use std::collections::BTreeMap;
 
@@ -95,6 +97,14 @@ pub struct Worker {
     specs: Vec<ParamSpec>,
     pub params: BTreeMap<String, Mat>,
     moments: BTreeMap<String, MomentState>,
+    /// Depth-sharded (ZeRO-style) optimizer state: this rank keeps AdamW
+    /// moments only for its `1/g_data` chunk of the flattened parameter
+    /// vector (specs order, zero-padded to a multiple of g_data).  Empty
+    /// in the replicated layout.
+    flat_moments: MomentState,
+    /// Whether the depth-sharded update path is active (manifest
+    /// `sharded_state` or `train --sharded-state`).
+    pub sharded_state: bool,
     pub opt: AdamWConfig,
     step_no: u64,
     depth: usize,
@@ -123,13 +133,26 @@ impl Worker {
         // generate the full parameter set deterministically, keep shards
         let full = init_full(&dims, seed);
         let specs = param_specs(&dims);
+        // depth sharding is the identity when there is no data dimension
+        // (mirrors strategies::build_tensor3d's use_shard guard), so skip
+        // the flatten/RS/AG round-trips entirely in that case
+        let sharded_state = manifest.sharded_state && mesh.g_data > 1;
         let mut params = BTreeMap::new();
         let mut moments = BTreeMap::new();
         for spec in &specs {
             let shard = spec.kind.shard(&full[&spec.name], coord.i, coord.j, &mesh);
-            moments.insert(spec.name.clone(), MomentState::zeros(shard.len()));
+            if !sharded_state {
+                moments.insert(spec.name.clone(), MomentState::zeros(shard.len()));
+            }
             params.insert(spec.name.clone(), shard);
         }
+        let flat_moments = if sharded_state {
+            let total: usize = params.values().map(|m| m.len()).sum();
+            let (lo, hi) = depth_shard_range(total, coord.d, mesh.g_data);
+            MomentState::zeros(hi - lo)
+        } else {
+            MomentState::default()
+        };
         Ok(Worker {
             rank,
             coord,
@@ -140,6 +163,8 @@ impl Worker {
             specs,
             params,
             moments,
+            flat_moments,
+            sharded_state,
             opt,
             step_no: 0,
             depth: manifest.depth,
@@ -542,42 +567,95 @@ impl Worker {
             acc(&mut grads, "wemb", dwemb);
         }
 
-        // ============ data-parallel gradient sync (one fused AR) ========
-        if self.mesh.g_data > 1 {
+        // ======== gradient sync + optimizer (replicated or sharded) =====
+        let grad_norm = if self.sharded_state {
+            // Depth-sharded state (ZeRO-style): reduce-scatter the flat
+            // gradient over the data group, step AdamW on the owned
+            // 1/g_data chunk only, all-gather the updated parameters.
+            // Bitwise-identical to the replicated path because
+            // reduce_scatter sums in member order (see collectives).
             let total: usize = self.specs.iter().map(|sp| grads[&sp.name].len()).sum();
-            let mut flat = Vec::with_capacity(total);
+            let g_data = self.mesh.g_data;
+            let (lo, hi) = depth_shard_range(total, self.coord.d, g_data);
+            let chunk = hi - lo;
+            let padded = chunk * g_data;
+            let mut flat = Vec::with_capacity(padded);
             for sp in &self.specs {
                 flat.extend_from_slice(&grads[&sp.name]);
             }
-            let flat = self.comm.all_reduce(CommKind::Data, ReduceOp::Sum, flat);
-            let mut off = 0;
+            flat.resize(padded, 0.0);
+            let my_grads = self.comm.reduce_scatter(CommKind::Data, ReduceOp::Sum, flat);
+            // gradient norm: owned-spec elements of this rank's chunk,
+            // summed over the data group (chunks partition the flat
+            // vector) and then the column/row groups as in the
+            // replicated path.
+            let mut normsq = 0.0f64;
+            let mut off = 0usize;
             for sp in &self.specs {
-                let g = grads.get_mut(&sp.name).unwrap();
-                let n = g.len();
-                g.copy_from_slice(&flat[off..off + n]);
+                let len = grads[&sp.name].len();
+                let (a, b) = (off.max(lo), (off + len).min(hi));
+                if sp.kind.owned(self.coord.i, self.coord.j) && a < b {
+                    normsq += math::sqsum(&my_grads[a - lo..b - lo]);
+                }
+                off += len;
+            }
+            let ns = self.comm.all_reduce(CommKind::Data, ReduceOp::Sum, vec![normsq as f32]);
+            let ns = self.comm.all_reduce(CommKind::Col, ReduceOp::Sum, ns);
+            let ns = self.comm.all_reduce(CommKind::Row, ReduceOp::Sum, ns);
+            // optimizer on the owned chunk of the flat parameter vector
+            let mut flat_w = Vec::with_capacity(padded);
+            for sp in &self.specs {
+                flat_w.extend_from_slice(&self.params[&sp.name].data);
+            }
+            flat_w.resize(padded, 0.0);
+            let mut my_w = flat_w[lo..hi].to_vec();
+            let opt = self.opt;
+            adamw_step(&opt, self.step_no, &mut my_w, &my_grads, &mut self.flat_moments);
+            let gathered = self.comm.all_gather(CommKind::Data, my_w);
+            let mut off = 0usize;
+            for sp in &self.specs {
+                let w = self.params.get_mut(&sp.name).unwrap();
+                let n = w.data.len();
+                w.data.copy_from_slice(&gathered[off..off + n]);
                 off += n;
             }
-        }
-
-        // ============ gradient norm (owned shards, counted once) ========
-        let mut normsq = 0.0f64;
-        for sp in &self.specs {
-            if sp.kind.owned(self.coord.i, self.coord.j) {
-                normsq += math::sqsum(&grads[&sp.name]);
+            (ns[0] as f64).sqrt()
+        } else {
+            // ======== data-parallel gradient sync (one fused AR) ========
+            if self.mesh.g_data > 1 {
+                let total: usize = self.specs.iter().map(|sp| grads[&sp.name].len()).sum();
+                let mut flat = Vec::with_capacity(total);
+                for sp in &self.specs {
+                    flat.extend_from_slice(&grads[&sp.name]);
+                }
+                let flat = self.comm.all_reduce(CommKind::Data, ReduceOp::Sum, flat);
+                let mut off = 0;
+                for sp in &self.specs {
+                    let g = grads.get_mut(&sp.name).unwrap();
+                    let n = g.len();
+                    g.copy_from_slice(&flat[off..off + n]);
+                    off += n;
+                }
             }
-        }
-        let ns = self
-            .comm
-            .all_reduce(CommKind::Col, ReduceOp::Sum, vec![normsq as f32]);
-        let ns = self.comm.all_reduce(CommKind::Row, ReduceOp::Sum, ns);
-        let grad_norm = (ns[0] as f64).sqrt();
 
-        // ============ optimizer ============
-        for sp in &self.specs {
-            let w = self.params.get_mut(&sp.name).unwrap();
-            let st = self.moments.get_mut(&sp.name).unwrap();
-            adamw_step(&self.opt, self.step_no, &mut w.data, &grads[&sp.name], st);
-        }
+            // ======== gradient norm (owned shards, counted once) ========
+            let mut normsq = 0.0f64;
+            for sp in &self.specs {
+                if sp.kind.owned(self.coord.i, self.coord.j) {
+                    normsq += math::sqsum(&grads[&sp.name]);
+                }
+            }
+            let ns = self.comm.all_reduce(CommKind::Col, ReduceOp::Sum, vec![normsq as f32]);
+            let ns = self.comm.all_reduce(CommKind::Row, ReduceOp::Sum, ns);
+
+            // ======== optimizer ========
+            for sp in &self.specs {
+                let w = self.params.get_mut(&sp.name).unwrap();
+                let st = self.moments.get_mut(&sp.name).unwrap();
+                adamw_step(&self.opt, self.step_no, &mut w.data, &grads[&sp.name], st);
+            }
+            (ns[0] as f64).sqrt()
+        };
 
         // ============ loss reduction ============
         // local parts hold the owned-logz contributions of this vocab
@@ -604,10 +682,12 @@ impl Worker {
         // correct approach: snapshot params+moments, run step, restore.
         let params = self.params.clone();
         let moments = self.moments.clone();
+        let flat_moments = self.flat_moments.clone();
         let step_no = self.step_no;
         let stats = self.step(tokens, labels)?;
         self.params = params;
         self.moments = moments;
+        self.flat_moments = flat_moments;
         self.step_no = step_no;
         Ok(stats.loss)
     }

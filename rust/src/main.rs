@@ -9,7 +9,7 @@
 //!   repro     regenerate any paper table/figure (fig4..fig9, tab4, tab5,
 //!             ablation, all)
 
-use anyhow::{anyhow, bail, Result};
+use tensor3d::util::error::{anyhow, bail, Result};
 use tensor3d::comm_model;
 use tensor3d::mesh::Mesh;
 use tensor3d::models::{gpt, unet, NetworkDesc};
@@ -31,6 +31,7 @@ fn model_by_name(name: &str) -> Result<(NetworkDesc, NetKind, usize, usize)> {
         "gpt20b" => (t3[2].dims.network(), NetKind::Transformer, t3[2].batch, t3[2].g_tensor),
         "gpt40b" => (t3[3].dims.network(), NetKind::Transformer, t3[3].batch, t3[3].g_tensor),
         "gpt9b" => (gpt::gpt_9b().network(), NetKind::Transformer, 64, 8),
+        "gpt80b" => (gpt::gpt_80b().network(), NetKind::Transformer, 1024, 64),
         "unet3.5b" => (t2[0].dims.network(), NetKind::Unet, t2[0].batch, t2[0].g_tensor),
         "unet7.5b" => (t2[1].dims.network(), NetKind::Unet, t2[1].batch, t2[1].g_tensor),
         "unet14b" => (t2[2].dims.network(), NetKind::Unet, t2[2].batch, t2[2].g_tensor),
@@ -69,6 +70,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             opt("log-every", "10", "progress print interval"),
             opt("checkpoint", "", "checkpoint output dir (empty = none)"),
             flag("quiet", "suppress progress lines"),
+            flag("sharded-state", "depth-shard optimizer state across data groups"),
         ],
     )
     .parse(argv)
@@ -83,6 +85,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         log_every: a.usize("log-every")? as u64,
         verbose: !a.flag("quiet"),
         checkpoint_dir: if ck.is_empty() { None } else { Some(ck.into()) },
+        sharded_state: a.flag("sharded-state"),
     };
     let report = trainer::train(&cfg)?;
     let mut chart = AsciiChart::new("training loss");
@@ -109,18 +112,40 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
             opt("gpus", "16", "GPU count"),
             opt("machine", "perlmutter", "perlmutter|polaris"),
             opt("batch", "0", "global batch (0 = model default)"),
+            flag("sharded-state", "depth-shard optimizer state (ZeRO-style memory rule)"),
+            flag("json", "emit the recommendation as one-line JSON (CI golden diff)"),
         ],
     )
     .parse(argv)
     .map_err(|e| anyhow!("{e}"))?;
-    let (net, kind, default_batch, _) = model_by_name(&a.str("model")?)?;
+    let model_name = a.str("model")?;
+    let (net, kind, default_batch, _) = model_by_name(&model_name)?;
     let machine = machine_by_name(&a.str("machine")?)?;
     let batch = match a.usize("batch")? {
         0 => default_batch,
         b => b,
     };
     let gpus = a.usize("gpus")?;
-    let p = planner::plan(&net, kind, batch, gpus, &machine);
+    let mode = if a.flag("sharded-state") {
+        planner::StateMode::DepthSharded
+    } else {
+        planner::StateMode::Replicated
+    };
+    let p = planner::plan_mode(&net, kind, batch, gpus, &machine, mode);
+    if a.flag("json") {
+        use tensor3d::util::json::Json;
+        let j = Json::obj(vec![
+            ("model", Json::str(&model_name)),
+            ("gpus", Json::num(gpus as f64)),
+            ("world", Json::num(p.mesh.world() as f64)),
+            ("g_data", Json::num(p.mesh.g_data as f64)),
+            ("g_r", Json::num(p.mesh.g_r as f64)),
+            ("g_c", Json::num(p.mesh.g_c as f64)),
+            ("g_tensor", Json::num(p.mesh.g_tensor() as f64)),
+        ]);
+        println!("{j}");
+        return Ok(());
+    }
     println!(
         "model {} ({} params), batch {batch}, {gpus}x {}:",
         net.name,
@@ -173,6 +198,8 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             opt("gpus", "64", "GPU count (when mesh empty)"),
             opt("machine", "polaris", "perlmutter|polaris"),
             opt("batch", "0", "global batch (0 = default)"),
+            flag("sharded-state", "depth-shard parameter/optimizer state (overlapped RS/AG)"),
+            flag("dp-barrier", "ablation: serialize the sharded-state collectives"),
         ],
     )
     .parse(argv)
@@ -202,17 +229,33 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             .ok_or_else(|| anyhow!("--mesh wants g_data,RxC"))?;
         Mesh::new(dpart.parse()?, r.parse()?, c.parse()?, depth)
     };
-    let (time, gb) = strategies::iterate(strat, &net, &mesh, batch, &machine);
+    let opts = strategies::ScheduleOpts {
+        sharded_state: a.flag("sharded-state"),
+        dp_barrier: a.flag("dp-barrier"),
+    };
+    if opts.sharded_state && strat == Strategy::Colossal3d {
+        bail!("--sharded-state is not modelled for colossal3d");
+    }
+    let (time, gb) = strategies::iterate_with(strat, &net, &mesh, batch, &machine, opts);
     let u = strategies::mfu(&net, batch, mesh.world(), time, &machine);
     println!(
-        "{} on {} GPUs ({}): strategy {}  mesh g_data={} g_r={} g_c={}",
+        "{} on {} GPUs ({}): strategy {}  mesh g_data={} g_r={} g_c={}{}",
         net.name,
         mesh.world(),
         machine.name,
         strat.label(),
         mesh.g_data,
         mesh.g_r,
-        mesh.g_c
+        mesh.g_c,
+        if opts.sharded_state {
+            if opts.dp_barrier {
+                "  [sharded state, serialized]"
+            } else {
+                "  [sharded state, overlapped]"
+            }
+        } else {
+            ""
+        }
     );
     println!(
         "  time/iter: {time:.3}s   comm volume: {} per GPU   MFU {:.1}%",

@@ -156,6 +156,14 @@ pub fn gpt_10b() -> GptDims {
     table3()[1].dims
 }
 
+/// Weak-scaling continuation of Table 3 (h doubles as G quadruples):
+/// GPT 80B on 1024 GPUs.  Used by the CI bench-smoke gate, which pins the
+/// planner's recommended `(G_data, G_r, G_c)` for this config against a
+/// checked-in golden JSON (ci/golden_plan_gpt80b_1024.json).
+pub fn gpt_80b() -> GptDims {
+    GptDims { vocab: 51200, hidden: 16384, layers: 24, heads: 128, seq: 2048 }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +192,12 @@ mod tests {
     fn gpt9b_is_about_9b() {
         let p = gpt_9b().params();
         assert!((8e9..10.5e9).contains(&p), "{p:.3e}");
+    }
+
+    #[test]
+    fn gpt80b_is_about_80b() {
+        let p = gpt_80b().params();
+        assert!((72e9..88e9).contains(&p), "{p:.3e}");
     }
 
     #[test]

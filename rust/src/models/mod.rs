@@ -92,6 +92,16 @@ impl NetworkDesc {
     pub fn state_bytes_per_gpu(&self, g_tensor: usize) -> f64 {
         16.0 * self.params / g_tensor as f64
     }
+
+    /// Like [`NetworkDesc::state_bytes_per_gpu`], but with the AdamW
+    /// master/moment state (the fp32 master + m + v, 12 of the 16
+    /// bytes/param) additionally sharded `g_data`-ways across the depth
+    /// dimension, ZeRO-1 style.  The fp16 weights and gradients (4
+    /// bytes/param) stay materialized on every rank so the
+    /// forward/backward path is unchanged between the all-gathers.
+    pub fn state_bytes_per_gpu_sharded(&self, g_tensor: usize, g_data: usize) -> f64 {
+        (4.0 + 12.0 / g_data as f64) * self.params / g_tensor as f64
+    }
 }
 
 #[cfg(test)]
@@ -123,5 +133,21 @@ mod tests {
         };
         assert_eq!(net.state_bytes_per_gpu(1), 16e9);
         assert_eq!(net.state_bytes_per_gpu(8), 2e9);
+    }
+
+    #[test]
+    fn sharded_state_bytes_shrink_with_g_data() {
+        let net = NetworkDesc {
+            name: "x".into(),
+            layers: vec![],
+            attached: vec![],
+            params: 1e9,
+            train_flops_per_sample: 0.0,
+        };
+        // g_data = 1 degenerates to the replicated accounting
+        assert_eq!(net.state_bytes_per_gpu_sharded(8, 1), net.state_bytes_per_gpu(8));
+        // 12 of the 16 bytes/param shard away; 4 (fp16 w+g) stay
+        assert_eq!(net.state_bytes_per_gpu_sharded(1, 4), 7e9);
+        assert!(net.state_bytes_per_gpu_sharded(8, 16) < net.state_bytes_per_gpu(8) / 3.0);
     }
 }

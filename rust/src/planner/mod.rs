@@ -9,15 +9,37 @@
 //!      (`sqrt(3 G_t)` for transformers, Eq. 7; `sqrt(G_t/1.98)` for
 //!      U-Nets, Eq. 9) — implemented as an exact argmin over divisors,
 //!      which the closed forms approximate.
+//!
+//! [`StateMode::DepthSharded`] changes rule 1's memory constraint: with
+//! the optimizer state sharded `G_data`-ways (ZeRO-style, see
+//! [`crate::models::NetworkDesc::state_bytes_per_gpu_sharded`]), memory
+//! feasibility depends on the *whole* mesh, so the planner admits smaller
+//! `G_tensor` at large `G_data` — trading replicated state for the
+//! (Eq.-1-equal, but overlappable) reduce-scatter/all-gather traffic and
+//! a strictly lower Eq. 4 tensor-parallel volume.
 
 use crate::comm_model;
 use crate::mesh::{divisors, Mesh};
 use crate::models::NetworkDesc;
 use crate::sim::Machine;
 
+/// How parameter/optimizer state is laid out across the data dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StateMode {
+    /// Every rank of a tensor group holds a full replica of its shard's
+    /// weights and optimizer state (the seed behavior).
+    #[default]
+    Replicated,
+    /// ZeRO-style: optimizer state sharded `G_data`-ways; weights
+    /// all-gathered / gradients reduce-scattered per iteration.
+    DepthSharded,
+}
+
 #[derive(Debug, Clone)]
 pub struct Plan {
     pub mesh: Mesh,
+    /// State layout the plan was computed for.
+    pub mode: StateMode,
     /// Modelled tensor-parallel volume per GPU per iteration (elements).
     pub volume_elems: f64,
     /// Parameter+optimizer state bytes per GPU at this sharding.
@@ -50,29 +72,59 @@ pub fn min_g_tensor(net: &NetworkDesc, machine: &Machine, world: usize) -> usize
     world
 }
 
-/// Produce the recommended plan for `world` GPUs.
+/// Produce the recommended plan for `world` GPUs (replicated state).
 pub fn plan(net: &NetworkDesc, kind: NetKind, batch: usize, world: usize, machine: &Machine) -> Plan {
-    let floor = min_g_tensor(net, machine, world);
-    let candidates = comm_model::optimal_meshes(net, batch as f64, world, floor);
-    // rule 1: restrict to maximal g_data (= minimal g_tensor >= floor)
-    let g_tensor_min = candidates
-        .iter()
-        .map(|(m, _)| m.g_tensor())
-        .min()
-        .unwrap_or(world);
+    plan_mode(net, kind, batch, world, machine, StateMode::Replicated)
+}
+
+/// Produce the recommended plan for `world` GPUs under an explicit state
+/// layout.
+pub fn plan_mode(
+    net: &NetworkDesc,
+    kind: NetKind,
+    batch: usize,
+    world: usize,
+    machine: &Machine,
+    mode: StateMode,
+) -> Plan {
+    let budget = machine.mem_bytes * STATE_BUDGET_FRACTION;
+    // memory-feasible candidates, sorted by Eq. 4 volume ascending
+    let candidates: Vec<(Mesh, f64)> = match mode {
+        StateMode::Replicated => {
+            let floor = min_g_tensor(net, machine, world);
+            comm_model::optimal_meshes(net, batch as f64, world, floor)
+        }
+        StateMode::DepthSharded => {
+            let mut out: Vec<(Mesh, f64)> = Mesh::factorizations(world)
+                .into_iter()
+                .filter(|m| net.state_bytes_per_gpu_sharded(m.g_tensor(), m.g_data) <= budget)
+                .map(|m| (m, comm_model::tensor3d_network_volume(net, batch as f64, &m)))
+                .collect();
+            out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            out
+        }
+    };
+    // rule 1: maximize g_data among feasible meshes; rule 2: min volume
+    let g_data_max = candidates.iter().map(|(m, _)| m.g_data).max().unwrap_or(1);
     let best = candidates
         .iter()
-        .filter(|(m, _)| m.g_tensor() == g_tensor_min)
+        .filter(|(m, _)| m.g_data == g_data_max)
         .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
         .map(|(m, v)| (*m, *v))
         .unwrap_or((Mesh::new(1, 1, world, 1), f64::INFINITY));
     let gc_closed = match kind {
-        NetKind::Transformer => comm_model::transformer_optimal_gc(g_tensor_min),
-        NetKind::Unet => comm_model::unet_optimal_gc(g_tensor_min),
+        NetKind::Transformer => comm_model::transformer_optimal_gc(best.0.g_tensor()),
+        NetKind::Unet => comm_model::unet_optimal_gc(best.0.g_tensor()),
     };
-    let state = net.state_bytes_per_gpu(best.0.g_tensor());
+    let state = match mode {
+        StateMode::Replicated => net.state_bytes_per_gpu(best.0.g_tensor()),
+        StateMode::DepthSharded => {
+            net.state_bytes_per_gpu_sharded(best.0.g_tensor(), best.0.g_data)
+        }
+    };
     Plan {
         mesh: best.0,
+        mode,
         volume_elems: best.1,
         state_bytes: state,
         mem_fraction: state / machine.mem_bytes,
@@ -125,12 +177,52 @@ mod tests {
     }
 
     #[test]
+    fn depth_sharded_mode_admits_larger_g_data() {
+        // GPT 40B on 256 Polaris GPUs: replicated state forces
+        // g_tensor >= 32 (g_data = 8); sharding the optimizer state
+        // g_data-ways fits much smaller tensor groups, and Eq. 5 says the
+        // extra data parallelism strictly lowers the volume.
+        let net = gpt::table3()[3].dims.network();
+        let machine = Machine::polaris();
+        let rep = plan_mode(&net, NetKind::Transformer, 1024, 256, &machine, StateMode::Replicated);
+        let sh =
+            plan_mode(&net, NetKind::Transformer, 1024, 256, &machine, StateMode::DepthSharded);
+        assert_eq!(rep.mesh.g_data, 8, "{:?}", rep.mesh);
+        assert!(sh.mesh.g_data > rep.mesh.g_data, "sharded {:?} vs {:?}", sh.mesh, rep.mesh);
+        assert!(sh.volume_elems < rep.volume_elems);
+        assert!(sh.state_bytes <= machine.mem_bytes * STATE_BUDGET_FRACTION * 1.0001);
+        assert_eq!(sh.mode, StateMode::DepthSharded);
+    }
+
+    #[test]
+    fn depth_sharded_equals_replicated_when_memory_is_loose() {
+        // a tiny model fits everywhere, so both modes pick the same mesh
+        let net = gpt::GptDims { vocab: 512, hidden: 256, layers: 2, heads: 4, seq: 8 }.network();
+        let machine = Machine::perlmutter();
+        let rep = plan_mode(&net, NetKind::Transformer, 64, 16, &machine, StateMode::Replicated);
+        let sh = plan_mode(&net, NetKind::Transformer, 64, 16, &machine, StateMode::DepthSharded);
+        assert_eq!(rep.mesh, sh.mesh);
+    }
+
+    #[test]
     fn alternatives_sorted_ascending() {
         let net = gpt::table3()[0].dims.network();
         let p = plan(&net, NetKind::Transformer, 1024, 32, &Machine::polaris());
         for w in p.alternatives.windows(2) {
             assert!(w[0].1 <= w[1].1);
         }
+    }
+
+    #[test]
+    fn gpt80b_1024_plan_matches_ci_golden() {
+        // pins ci/golden_plan_gpt80b_1024.json — the CI bench-smoke job
+        // diffs `tensor3d plan --model gpt80b --gpus 1024 --machine
+        // polaris --json` against that file, and this test keeps the two
+        // from drifting apart silently.
+        let net = gpt::gpt_80b().network();
+        let p = plan(&net, NetKind::Transformer, 1024, 1024, &Machine::polaris());
+        assert_eq!((p.mesh.g_data, p.mesh.g_r, p.mesh.g_c), (16, 4, 16), "{:?}", p.mesh);
+        assert_eq!(p.mesh.g_tensor(), 64);
     }
 
     #[test]

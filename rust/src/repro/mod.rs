@@ -273,15 +273,26 @@ pub fn ablation() -> String {
         "Ablation: §4.1 (transposed layout) and §4.2 (overdecomposition), GPT 10B / 64 GPUs",
         &["configuration", "time/iter (s)", "vol/GPU", "overlap"],
     );
-    for (label, strat) in [
-        ("full tensor3d (d=2, §4.1 on)", Strategy::Tensor3d { depth: 2, transpose_opt: true }),
-        ("no overdecomposition (d=1)", Strategy::Tensor3d { depth: 1, transpose_opt: true }),
-        ("depth 4", Strategy::Tensor3d { depth: 4, transpose_opt: true }),
-        ("no §4.1 (boundary xpose)", Strategy::Tensor3d { depth: 2, transpose_opt: false }),
-        ("neither (naive 2D)", Strategy::Tensor3d { depth: 1, transpose_opt: false }),
-        ("megatron-lm", Strategy::Megatron),
+    let d2 = Strategy::Tensor3d { depth: 2, transpose_opt: true };
+    let no_opts = strategies::ScheduleOpts::default();
+    let sharded = strategies::ScheduleOpts { sharded_state: true, dp_barrier: false };
+    let sharded_barrier = strategies::ScheduleOpts { sharded_state: true, dp_barrier: true };
+    let d1 = Strategy::Tensor3d { depth: 1, transpose_opt: true };
+    let d4 = Strategy::Tensor3d { depth: 4, transpose_opt: true };
+    let d2_nox = Strategy::Tensor3d { depth: 2, transpose_opt: false };
+    let d1_nox = Strategy::Tensor3d { depth: 1, transpose_opt: false };
+    for (label, strat, opts) in [
+        ("full tensor3d (d=2, §4.1 on)", d2, no_opts),
+        ("no overdecomposition (d=1)", d1, no_opts),
+        ("depth 4", d4, no_opts),
+        ("no §4.1 (boundary xpose)", d2_nox, no_opts),
+        ("neither (naive 2D)", d1_nox, no_opts),
+        ("megatron-lm", Strategy::Megatron, no_opts),
+        ("+ depth-sharded state (overlapped)", d2, sharded),
+        ("+ depth-sharded state (barrier)", d2, sharded_barrier),
     ] {
-        let programs = strategies::build_programs(strat, &net, &mesh, row.batch, &machine);
+        let programs =
+            strategies::build_programs_with(strat, &net, &mesh, row.batch, &machine, opts);
         let r = sim::simulate(&machine, &programs);
         let gb = r.comm_bytes.iter().sum::<f64>() / r.comm_bytes.len() as f64 / 1e9;
         t.row(vec![

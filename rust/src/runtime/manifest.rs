@@ -4,7 +4,7 @@
 
 use crate::models::gpt::GptDims;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,6 +56,10 @@ pub struct Manifest {
     pub g_r: usize,
     pub g_c: usize,
     pub depth: usize,
+    /// Depth-sharded (ZeRO-style) parameter/optimizer state.  Optional in
+    /// the grid object (`"sharded_state": true`); defaults to the
+    /// replicated layout, and `tensor3d train --sharded-state` overrides.
+    pub sharded_state: bool,
     pub batch: usize,
     pub backend: String,
     pub rows_per_exec: usize,
@@ -156,6 +160,7 @@ impl Manifest {
             g_r: usize_of(g, "g_r")?,
             g_c: usize_of(g, "g_c")?,
             depth: usize_of(g, "depth")?,
+            sharded_state: g.get("sharded_state").and_then(|v| v.as_bool()).unwrap_or(false),
             batch: usize_of(&j, "batch")?,
             backend: j
                 .req("backend")
@@ -226,6 +231,8 @@ mod tests {
         assert_eq!(e.inputs[0].shape, vec![4, 32]);
         assert!(m.entry("nope").is_err());
         assert_eq!(m.params, 135168);
+        // absent from the fixture: defaults to the replicated layout
+        assert!(!m.sharded_state);
     }
 
     #[test]

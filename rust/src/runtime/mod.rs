@@ -9,7 +9,9 @@
 
 pub mod manifest;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
+#[cfg(not(feature = "pjrt"))]
+use crate::xla;
 use manifest::{DType, EntrySpec, Manifest};
 use std::collections::HashMap;
 

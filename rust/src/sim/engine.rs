@@ -16,7 +16,17 @@ use std::collections::{BinaryHeap, HashMap};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Stream {
     Compute,
+    /// Tensor-parallel collectives (the Algorithm-1 all-reduces).
     Comm,
+    /// Depth/data-dimension collectives of the sharded-state mode (weight
+    /// all-gathers, gradient reduce-scatters).  A separate stream so they
+    /// overlap both compute *and* the tensor-parallel collectives, exactly
+    /// like a dedicated NCCL communicator stream.
+    CommDp,
+}
+
+impl Stream {
+    pub const ALL: [Stream; 3] = [Stream::Compute, Stream::Comm, Stream::CommDp];
 }
 
 /// Global op identifier: (gpu, index in that GPU's program).
@@ -30,6 +40,58 @@ pub enum OpKind {
     /// `bytes` is the per-GPU buffer size; ops with the same `tag` across
     /// the group rendezvous together.
     AllReduce { tag: u64, bytes: f64, group: Vec<usize> },
+    /// Ring all-gather; `bytes` is the full gathered buffer per GPU (each
+    /// member contributes `bytes / |group|`).  Used by the depth-sharded
+    /// state mode to rematerialize weights before the forward pass.
+    AllGather { tag: u64, bytes: f64, group: Vec<usize> },
+    /// Ring reduce-scatter; `bytes` is the full pre-scatter buffer (each
+    /// member keeps `bytes / |group|`).  Replaces the data-parallel
+    /// gradient all-reduce under depth sharding.
+    ReduceScatter { tag: u64, bytes: f64, group: Vec<usize> },
+}
+
+impl OpKind {
+    /// `(tag, bytes, group)` when this op is a collective.
+    pub fn collective(&self) -> Option<(u64, f64, &[usize])> {
+        match self {
+            OpKind::Compute { .. } => None,
+            OpKind::AllReduce { tag, bytes, group }
+            | OpKind::AllGather { tag, bytes, group }
+            | OpKind::ReduceScatter { tag, bytes, group } => Some((*tag, *bytes, group)),
+        }
+    }
+
+    /// Per-GPU wire traffic (sent+received bytes) of one participation.
+    pub fn wire_bytes(&self) -> f64 {
+        match self {
+            OpKind::Compute { .. } => 0.0,
+            OpKind::AllReduce { bytes, group, .. } => {
+                let p = group.len() as f64;
+                2.0 * (p - 1.0) / p * bytes
+            }
+            OpKind::AllGather { bytes, group, .. } | OpKind::ReduceScatter { bytes, group, .. } => {
+                let p = group.len() as f64;
+                (p - 1.0) / p * bytes
+            }
+        }
+    }
+
+    /// Wall-clock duration of the collective on `machine` once all members
+    /// have arrived (zero for compute ops, which are timed elsewhere).
+    pub fn collective_time(&self, machine: &Machine, per_node: usize) -> f64 {
+        match self {
+            OpKind::Compute { .. } => 0.0,
+            OpKind::AllReduce { bytes, group, .. } => {
+                machine.allreduce_time(*bytes, group.len(), per_node)
+            }
+            OpKind::AllGather { bytes, group, .. } => {
+                machine.allgather_time(*bytes, group.len(), per_node)
+            }
+            OpKind::ReduceScatter { bytes, group, .. } => {
+                machine.reduce_scatter_time(*bytes, group.len(), per_node)
+            }
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -149,20 +211,14 @@ pub fn simulate_with_trace(
     let mut done_time: Vec<Vec<f64>> = programs.iter().map(|p| vec![0.0; p.ops.len()]).collect();
     // next op index per (gpu, stream)
     let mut next: Vec<HashMap<Stream, usize>> = (0..n)
-        .map(|_| {
-            let mut m = HashMap::new();
-            m.insert(Stream::Compute, 0usize);
-            m.insert(Stream::Comm, 0usize);
-            m
-        })
+        .map(|_| Stream::ALL.iter().map(|s| (*s, 0usize)).collect())
         .collect();
     // per-stream FIFO order: precompute each stream's op index list
     let stream_ops: Vec<HashMap<Stream, Vec<usize>>> = programs
         .iter()
         .map(|p| {
-            let mut m: HashMap<Stream, Vec<usize>> = HashMap::new();
-            m.insert(Stream::Compute, Vec::new());
-            m.insert(Stream::Comm, Vec::new());
+            let mut m: HashMap<Stream, Vec<usize>> =
+                Stream::ALL.iter().map(|s| (*s, Vec::new())).collect();
             for (i, op) in p.ops.iter().enumerate() {
                 m.get_mut(&op.stream).unwrap().push(i);
             }
@@ -170,12 +226,7 @@ pub fn simulate_with_trace(
         })
         .collect();
     let mut stream_free: Vec<HashMap<Stream, f64>> = (0..n)
-        .map(|_| {
-            let mut m = HashMap::new();
-            m.insert(Stream::Compute, 0.0f64);
-            m.insert(Stream::Comm, 0.0f64);
-            m
-        })
+        .map(|_| Stream::ALL.iter().map(|s| (*s, 0.0f64)).collect())
         .collect();
 
     let mut collectives: HashMap<u64, CollectiveState> = HashMap::new();
@@ -201,7 +252,7 @@ pub fn simulate_with_trace(
             let mut progressed = true;
             while progressed {
                 progressed = false;
-                for stream in [Stream::Compute, Stream::Comm] {
+                for stream in Stream::ALL {
                     let idx_pos = next[gpu][&stream];
                     let ops_in_stream = &stream_ops[gpu][&stream];
                     if idx_pos >= ops_in_stream.len() {
@@ -248,8 +299,10 @@ pub fn simulate_with_trace(
                             }));
                             progressed = true;
                         }
-                        OpKind::AllReduce { tag, bytes, group } => {
-                            let st = collectives.entry(*tag).or_insert(CollectiveState {
+                        kind => {
+                            let (tag, _bytes, group) =
+                                kind.collective().expect("non-compute op must be a collective");
+                            let st = collectives.entry(tag).or_insert(CollectiveState {
                                 arrived: 0,
                                 group_size: group.len(),
                                 ready_time: 0.0,
@@ -259,21 +312,20 @@ pub fn simulate_with_trace(
                             st.ready_time = st.ready_time.max(ready_at);
                             st.members.push((gpu, op_i));
                             *next[gpu].get_mut(&stream).unwrap() += 1;
-                            comm_bytes[gpu] +=
-                                2.0 * (group.len() as f64 - 1.0) / group.len() as f64 * bytes;
+                            comm_bytes[gpu] += kind.wire_bytes();
                             if st.arrived == st.group_size {
                                 let per_node = machine.members_per_node(group);
-                                let dur =
-                                    machine.allreduce_time(*bytes, group.len(), per_node);
+                                let dur = kind.collective_time(machine, per_node);
                                 let start = st.ready_time;
                                 let end = start + dur;
                                 for &(mg, mi) in &st.members.clone() {
-                                    *stream_free[mg].get_mut(&Stream::Comm).unwrap() = end;
+                                    let mstream = programs[mg].ops[mi].stream;
+                                    *stream_free[mg].get_mut(&mstream).unwrap() = end;
                                     comm_busy[mg] += dur;
                                     if keep_spans {
                                         spans.push(Span {
                                             gpu: mg,
-                                            stream: Stream::Comm,
+                                            stream: mstream,
                                             name: programs[mg].ops[mi].name.clone(),
                                             start,
                                             end,
@@ -287,7 +339,7 @@ pub fn simulate_with_trace(
                                         what: EventKind::OpDone((mg, mi)),
                                     }));
                                 }
-                                collectives.remove(tag);
+                                collectives.remove(&tag);
                             }
                             progressed = true;
                         }
@@ -487,6 +539,57 @@ mod tests {
             deps: vec![(0, 0)],
         });
         simulate(&m, &[p]);
+    }
+
+    #[test]
+    fn dp_stream_overlaps_tensor_parallel_comm() {
+        // An all-gather on the CommDp stream and an all-reduce on the Comm
+        // stream, both ready at t=0, must run concurrently (makespan = max,
+        // not sum) — the property the sharded-state schedule depends on.
+        let m = machine();
+        let mk = |_gpu: usize| {
+            let mut p = GpuProgram::default();
+            p.push(ar("tp-ar", 40, 1e9, vec![0, 1], vec![]));
+            p.push(Op {
+                name: "wgather".into(),
+                kind: OpKind::AllGather { tag: 41, bytes: 1e9, group: vec![0, 1] },
+                stream: Stream::CommDp,
+                deps: vec![],
+            });
+            p
+        };
+        let r = simulate(&m, &[mk(0), mk(1)]);
+        let t_ar = m.allreduce_time(1e9, 2, 4);
+        let t_ag = m.allgather_time(1e9, 2, 4);
+        assert!((r.makespan - t_ar.max(t_ag)).abs() < 1e-12, "{}", r.makespan);
+    }
+
+    #[test]
+    fn reduce_scatter_plus_allgather_timed_as_one_allreduce() {
+        let m = machine();
+        let mk = |gpu: usize| {
+            let mut p = GpuProgram::default();
+            let rs = p.push(Op {
+                name: "rs".into(),
+                kind: OpKind::ReduceScatter { tag: 50, bytes: 2e9, group: vec![0, 1, 2, 3] },
+                stream: Stream::CommDp,
+                deps: vec![],
+            });
+            p.push(Op {
+                name: "ag".into(),
+                kind: OpKind::AllGather { tag: 51, bytes: 2e9, group: vec![0, 1, 2, 3] },
+                stream: Stream::CommDp,
+                deps: vec![(gpu, rs)],
+            });
+            p
+        };
+        let r = simulate(&m, &[mk(0), mk(1), mk(2), mk(3)]);
+        let t_ar = m.allreduce_time(2e9, 4, 4);
+        assert!((r.makespan - t_ar).abs() <= 1e-12 * t_ar, "{} vs {t_ar}", r.makespan);
+        // wire accounting: each half moves (p-1)/p * bytes per GPU
+        for g in 0..4 {
+            assert!((r.comm_bytes[g] - 2.0 * 0.75 * 2e9).abs() < 1e-6);
+        }
     }
 
     #[test]

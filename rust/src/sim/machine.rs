@@ -106,15 +106,42 @@ impl Machine {
         }
         let pf = p as f64;
         let ring_bytes = 2.0 * (pf - 1.0) / pf * bytes;
-        let node_local = per_node >= p;
-        let (bw, lat) = if node_local {
+        let (bw, lat) = self.ring_bw_lat(p, per_node);
+        ring_bytes / bw + 2.0 * (pf - 1.0) * lat
+    }
+
+    /// Ring all-gather time: `bytes` is the **full gathered buffer** (each
+    /// member contributes `bytes / p`); the ring moves `(p-1)/p * bytes`
+    /// per GPU in `p-1` latency hops — exactly half an all-reduce, which
+    /// is why the depth-sharded schedule can hide each half separately.
+    pub fn allgather_time(&self, bytes: f64, p: usize, per_node: usize) -> f64 {
+        if p <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let pf = p as f64;
+        let ring_bytes = (pf - 1.0) / pf * bytes;
+        let (bw, lat) = self.ring_bw_lat(p, per_node);
+        ring_bytes / bw + (pf - 1.0) * lat
+    }
+
+    /// Ring reduce-scatter time: `bytes` is the full pre-scatter buffer
+    /// (each member keeps `bytes / p`).  Cost model is symmetric to
+    /// [`Machine::allgather_time`].
+    pub fn reduce_scatter_time(&self, bytes: f64, p: usize, per_node: usize) -> f64 {
+        self.allgather_time(bytes, p, per_node)
+    }
+
+    /// Bottleneck bandwidth and per-hop latency of one ring over this
+    /// group shape (see [`Machine::allreduce_time`] for the sharing
+    /// rationale).
+    fn ring_bw_lat(&self, p: usize, per_node: usize) -> (f64, f64) {
+        if per_node >= p {
             (self.intra_bw, self.intra_lat_s)
         } else {
             let concurrent_groups = (self.gpus_per_node / per_node.max(1)).max(1) as f64;
             let share = (self.inter_bw_per_node / concurrent_groups).min(self.nic_bw);
             (share.min(self.intra_bw), self.inter_lat_s)
-        };
-        ring_bytes / bw + 2.0 * (pf - 1.0) * lat
+        }
     }
 
     /// How many members of a `group` (global ranks, `gpus_per_node` packed
@@ -160,6 +187,20 @@ mod tests {
         assert!(t2 > t1, "cross-node must be slower: {t2} vs {t1}");
         assert!(m.allreduce_time(2e9, 4, 4) > t1);
         assert_eq!(m.allreduce_time(1e9, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn allgather_plus_reduce_scatter_equals_allreduce() {
+        // Patarasuk–Yuan decomposition: AR = RS + AG in both bandwidth and
+        // latency terms, for node-local and cross-node groups alike.
+        let m = Machine::polaris();
+        for (bytes, p, per_node) in [(1e9, 4, 4), (1e9, 8, 4), (3e8, 16, 2), (1e9, 1, 1)] {
+            let ar = m.allreduce_time(bytes, p, per_node);
+            let rs = m.reduce_scatter_time(bytes, p, per_node);
+            let ag = m.allgather_time(bytes, p, per_node);
+            assert!((rs + ag - ar).abs() <= 1e-12 * ar.max(1.0), "p={p}: {rs}+{ag} != {ar}");
+        }
+        assert_eq!(m.allgather_time(1e9, 1, 1), 0.0);
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub fn chrome_trace(spans: &[Span]) -> String {
                     Json::num(match s.stream {
                         Stream::Compute => 0.0,
                         Stream::Comm => 1.0,
+                        Stream::CommDp => 2.0,
                     }),
                 ),
                 (
@@ -45,11 +46,12 @@ pub fn ascii_timeline(spans: &[Span], gpu: usize, width: usize) -> String {
     let t_end = gspans.iter().map(|s| s.end).fold(0.0, f64::max);
     let t0 = 0.0;
     let scale = width as f64 / (t_end - t0).max(1e-12);
-    let mut rows = vec![vec![' '; width]; 2];
+    let mut rows = vec![vec![' '; width]; 3];
     for s in &gspans {
         let row = match s.stream {
             Stream::Compute => 0,
             Stream::Comm => 1,
+            Stream::CommDp => 2,
         };
         let shard_b = s.name.starts_with("s1.");
         let ch = match (s.is_comm, shard_b) {
@@ -74,6 +76,12 @@ pub fn ascii_timeline(spans: &[Span], gpu: usize, width: usize) -> String {
     out.push_str("|\n  comm    |");
     out.extend(rows[1].iter());
     out.push_str("|\n");
+    // depth/data-dimension stream, only present under sharded state
+    if rows[2].iter().any(|c| *c != ' ') {
+        out.push_str("  comm-dp |");
+        out.extend(rows[2].iter());
+        out.push_str("|\n");
+    }
     out
 }
 

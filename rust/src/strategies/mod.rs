@@ -17,7 +17,7 @@
 
 use crate::mesh::{Coord, Mesh};
 use crate::models::NetworkDesc;
-use crate::sim::engine::{GpuProgram, Op, OpKind, Stream};
+use crate::sim::engine::{GpuProgram, Op, OpKind, OpRef, Stream};
 use crate::sim::Machine;
 
 pub const BYTES_PER_ELEM: f64 = 2.0; // fp16 activations/gradients (§6.1)
@@ -75,6 +75,30 @@ const PH_FWD: u64 = 1;
 const PH_BWD: u64 = 2;
 const PH_XPOSE: u64 = 3;
 const PH_DP: u64 = 4;
+const PH_WGATHER: u64 = 5;
+const PH_GSCATTER: u64 = 6;
+
+/// Options orthogonal to the [`Strategy`] enum.
+///
+/// `sharded_state` turns on the depth-sharded (ZeRO-style) parameter and
+/// optimizer state: every rank of a data group keeps `1/G_data` of the
+/// weight/optimizer state, weights are all-gathered per layer on a
+/// dedicated comm stream ahead of that layer's forward compute, and the
+/// data-parallel gradient all-reduce is replaced by a per-layer
+/// reduce-scatter emitted as soon as the layer's dW is available.  The
+/// wire volume is identical to the replicated all-reduce (Eq. 1 splits as
+/// AR = RS + AG), but the two halves are individually overlappable and
+/// the optimizer step shrinks by `G_data` — the §4.2 round-robin idea
+/// applied to the depth dimension.
+///
+/// `dp_barrier` is the ablation: the same collectives serialized against
+/// compute (gathers blocked behind the previous layer, compute blocked
+/// behind scatters), isolating how much the overlap is worth.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScheduleOpts {
+    pub sharded_state: bool,
+    pub dp_barrier: bool,
+}
 
 /// Build the per-GPU programs for one training iteration.
 pub fn build_programs(
@@ -84,13 +108,28 @@ pub fn build_programs(
     batch: usize,
     machine: &Machine,
 ) -> Vec<GpuProgram> {
+    build_programs_with(strategy, net, mesh_in, batch, machine, ScheduleOpts::default())
+}
+
+/// [`build_programs`] with explicit [`ScheduleOpts`].
+pub fn build_programs_with(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh_in: &Mesh,
+    batch: usize,
+    machine: &Machine,
+    opts: ScheduleOpts,
+) -> Vec<GpuProgram> {
     let mesh = strategy.effective_mesh(mesh_in);
     match strategy {
         Strategy::Tensor3d { depth, transpose_opt } => {
-            build_tensor3d(net, &mesh, batch, depth, transpose_opt)
+            build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts)
         }
-        Strategy::Megatron => build_tensor3d(net, &mesh, batch, 1, true),
-        Strategy::Colossal3d => build_colossal(net, &mesh, batch, machine),
+        Strategy::Megatron => build_tensor3d(net, &mesh, batch, 1, true, opts),
+        Strategy::Colossal3d => {
+            assert!(!opts.sharded_state, "sharded state is not modelled for Colossal-AI-3D");
+            build_colossal(net, &mesh, batch, machine)
+        }
     }
 }
 
@@ -106,19 +145,52 @@ fn build_tensor3d(
     batch: usize,
     depth: usize,
     transpose_opt: bool,
+    opts: ScheduleOpts,
 ) -> Vec<GpuProgram> {
     let world = mesh.world();
     let samples_per_exec = batch as f64 / (mesh.g_data * depth) as f64;
+    // depth sharding is the identity when there is no data dimension
+    let use_shard = opts.sharded_state && mesh.g_data > 1;
     let mut programs: Vec<GpuProgram> = vec![GpuProgram::default(); world];
 
     for rank in 0..world {
         let Coord { d, i, j } = mesh.coord_of(rank);
         let p = &mut programs[rank];
+        let dp_gid = i * mesh.g_c + j;
         // last op of each (shard, kind) for dependency chaining
         let mut last_fwd: Vec<Option<usize>> = vec![None; depth];
 
         // ---------------- forward ----------------
         for (li, layer) in net.layers.iter().enumerate() {
+            // sharded state: all-gather this layer's weights over the data
+            // group on the dedicated dp stream.  Without the barrier the op
+            // has no deps, so gathers prefetch back-to-back from t=0 and
+            // hide under earlier layers' compute; with the barrier each
+            // gather waits for the previous layer's compute (fully
+            // exposed), the ablation of the overlap claim.
+            let wgather = if use_shard {
+                let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                let mut deps: Vec<OpRef> = Vec::new();
+                if opts.dp_barrier {
+                    for s in 0..depth {
+                        if let Some(x) = last_fwd[s] {
+                            deps.push((rank, x));
+                        }
+                    }
+                }
+                Some(p.push(Op {
+                    name: format!("wgather.{}", layer.name),
+                    kind: OpKind::AllGather {
+                        tag: tag(PH_WGATHER, li, 0, GK_DATA, dp_gid),
+                        bytes,
+                        group: mesh.data_group(rank),
+                    },
+                    stream: Stream::CommDp,
+                    deps,
+                }))
+            } else {
+                None
+            };
             // effective grid roles (§4.1 swap for transposed layers)
             let (fwd_gk, fwd_gid, g_r_eff, g_c_eff) = if layer.transposed && transpose_opt {
                 (GK_ROW, d * mesh.g_r + i, mesh.g_c, mesh.g_r)
@@ -142,6 +214,9 @@ fn build_tensor3d(
                 let mut deps = Vec::new();
                 if let Some(prev) = last_fwd[s] {
                     deps.push((rank, prev));
+                }
+                if let Some(wg) = wgather {
+                    deps.push((rank, wg));
                 }
                 let mm = p.push(Op {
                     name: format!("s{s}.fwd.{}", layer.name),
@@ -197,6 +272,10 @@ fn build_tensor3d(
         // ---------------- backward ----------------
         let mut last_bwd: Vec<Option<usize>> = last_fwd.clone();
         let mut last_dw: Vec<Option<usize>> = vec![None; depth];
+        // sharded state: per-layer gradient reduce-scatters (and, in the
+        // barrier ablation, the scatter each subsequent layer must wait on)
+        let mut gscatters: Vec<usize> = Vec::new();
+        let mut last_rs: Option<usize> = None;
         for (li, layer) in net.layers.iter().enumerate().rev() {
             let (bwd_gk, bwd_gid, g_r_eff, g_c_eff) = if layer.transposed && transpose_opt {
                 // transposed layer: backward AR over the COLUMN comm
@@ -220,6 +299,11 @@ fn build_tensor3d(
                 let mut deps = Vec::new();
                 if let Some(prev) = last_bwd[s] {
                     deps.push((rank, prev));
+                }
+                if opts.dp_barrier {
+                    if let Some(rs) = last_rs {
+                        deps.push((rank, rs));
+                    }
                 }
                 // activation checkpointing (§6.1): recompute this layer's
                 // forward before its backward
@@ -269,10 +353,45 @@ fn build_tensor3d(
                 last_bwd[s] = Some(ar);
                 last_dw[s] = Some(dw);
             }
+            // sharded state: reduce-scatter this layer's gradient over the
+            // data group as soon as every sub-shard's dW is in, overlapping
+            // with the (earlier) layers still running backward.
+            if use_shard {
+                let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                let deps: Vec<OpRef> =
+                    (0..depth).filter_map(|s| last_dw[s]).map(|x| (rank, x)).collect();
+                let rs = p.push(Op {
+                    name: format!("gscatter.{}", layer.name),
+                    kind: OpKind::ReduceScatter {
+                        tag: tag(PH_GSCATTER, li, 0, GK_DATA, dp_gid),
+                        bytes,
+                        group: mesh.data_group(rank),
+                    },
+                    stream: Stream::CommDp,
+                    deps,
+                });
+                gscatters.push(rs);
+                last_rs = Some(rs);
+            }
+        }
+
+        // ---------------- depth-sharded optimizer ---------------------
+        if use_shard {
+            // each rank steps only its 1/(G_tensor * G_data) slice
+            let deps: Vec<OpRef> = gscatters.iter().map(|&x| (rank, x)).collect();
+            p.push(Op {
+                name: "adamw-shard".into(),
+                kind: OpKind::Compute {
+                    flops: 12.0 * net.fc_params() / (mesh.g_tensor() * mesh.g_data) as f64,
+                    min_dim: 1e9,
+                },
+                stream: Stream::Compute,
+                deps,
+            });
         }
 
         // ---------------- data-parallel gradient AR + optimizer --------
-        if mesh.g_data > 1 {
+        if mesh.g_data > 1 && !use_shard {
             let grad_bytes = net.fc_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
             let mut deps: Vec<(usize, usize)> = Vec::new();
             for s in 0..depth {
@@ -424,7 +543,19 @@ pub fn iterate(
     batch: usize,
     machine: &Machine,
 ) -> (f64, f64) {
-    let programs = build_programs(strategy, net, mesh, batch, machine);
+    iterate_with(strategy, net, mesh, batch, machine, ScheduleOpts::default())
+}
+
+/// [`iterate`] with explicit [`ScheduleOpts`].
+pub fn iterate_with(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    machine: &Machine,
+    opts: ScheduleOpts,
+) -> (f64, f64) {
+    let programs = build_programs_with(strategy, net, mesh, batch, machine, opts);
     let r = crate::sim::simulate(machine, &programs);
     let gb = r.comm_bytes.iter().sum::<f64>() / r.comm_bytes.len() as f64 / 1e9;
     (r.makespan, gb)
@@ -506,6 +637,73 @@ mod tests {
                 "depth {depth}: sim {gb} vs model {want_gb}"
             );
         }
+    }
+
+    #[test]
+    fn sharded_state_volume_equals_replicated() {
+        // AR = RS + AG: the depth-sharded schedule moves exactly the bytes
+        // of the data-parallel all-reduce it replaces, split into halves.
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(4, 2, 4, 1);
+        let strat = Strategy::Tensor3d { depth: 2, transpose_opt: true };
+        let (_, v_rep) = iterate(strat, &net, &mesh, 64, &machine);
+        let (_, v_sh) = iterate_with(
+            strat,
+            &net,
+            &mesh,
+            64,
+            &machine,
+            ScheduleOpts { sharded_state: true, dp_barrier: false },
+        );
+        assert!((v_sh / v_rep - 1.0).abs() < 1e-9, "sharded {v_sh} vs replicated {v_rep}");
+    }
+
+    #[test]
+    fn sharded_state_overlap_strictly_beats_barrier() {
+        // Acceptance criterion: the overlapped reduce-scatter/all-gather
+        // schedule is strictly faster than the same schedule with a
+        // serializing barrier.
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(4, 2, 4, 1);
+        let strat = Strategy::Tensor3d { depth: 2, transpose_opt: true };
+        let (t_overlap, _) = iterate_with(
+            strat,
+            &net,
+            &mesh,
+            64,
+            &machine,
+            ScheduleOpts { sharded_state: true, dp_barrier: false },
+        );
+        let (t_barrier, _) = iterate_with(
+            strat,
+            &net,
+            &mesh,
+            64,
+            &machine,
+            ScheduleOpts { sharded_state: true, dp_barrier: true },
+        );
+        assert!(t_overlap < t_barrier, "overlap {t_overlap} vs barrier {t_barrier}");
+    }
+
+    #[test]
+    fn sharded_state_noop_without_data_dimension() {
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(1, 2, 4, 1);
+        let strat = Strategy::Tensor3d { depth: 2, transpose_opt: true };
+        let (t_rep, v_rep) = iterate(strat, &net, &mesh, 64, &machine);
+        let (t_sh, v_sh) = iterate_with(
+            strat,
+            &net,
+            &mesh,
+            64,
+            &machine,
+            ScheduleOpts { sharded_state: true, dp_barrier: false },
+        );
+        assert_eq!(t_rep.to_bits(), t_sh.to_bits());
+        assert_eq!(v_rep.to_bits(), v_sh.to_bits());
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::layout::Mat;
 use crate::mesh::Mesh;
 use crate::runtime::manifest::Manifest;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;

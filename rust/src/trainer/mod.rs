@@ -10,7 +10,7 @@ pub mod optimizer;
 use crate::coordinator::{build_worker_comms, Worker};
 use crate::mesh::Mesh;
 use crate::runtime::manifest::Manifest;
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 use data::{Corpus, CorpusConfig};
 use optimizer::AdamWConfig;
 use std::path::Path;
@@ -27,6 +27,9 @@ pub struct TrainConfig {
     pub verbose: bool,
     /// Optional checkpoint directory (written at the end of training).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Depth-shard parameter/optimizer state across the data groups
+    /// (ZeRO-style; OR-ed with the manifest's `sharded_state` flag).
+    pub sharded_state: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -44,8 +47,9 @@ pub struct TrainReport {
 
 /// Train for `cfg.steps` steps on the artifacts at `cfg.artifact_dir`.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
-    let manifest = Manifest::load(&cfg.artifact_dir)
+    let mut manifest = Manifest::load(&cfg.artifact_dir)
         .with_context(|| format!("loading manifest from {}", cfg.artifact_dir.display()))?;
+    manifest.sharded_state |= cfg.sharded_state;
     let mesh = Mesh::new(manifest.g_data, manifest.g_r, manifest.g_c, manifest.depth);
     let world = mesh.world();
     let corpus_cfg = CorpusConfig::new(manifest.model.vocab, manifest.model.seq, cfg.seed);

@@ -7,6 +7,13 @@
 //! python/compile/sharded_ref.py — so replicas stay in sync without any
 //! extra communication.  Matches python/compile/model.py::adamw_update
 //! (validated in rust/tests and python tests).
+//!
+//! Under the depth-sharded state mode the same elementwise property lets
+//! each rank of a data group step only its [`depth_shard_range`] chunk of
+//! the flattened parameter vector: the reduce-scattered gradient chunk is
+//! bitwise-equal to the corresponding slice of the all-reduced gradient,
+//! so chunked AdamW followed by an all-gather reproduces the replicated
+//! update exactly while storing only `1/g_data` of the m/v moments.
 
 #[derive(Debug, Clone, Copy)]
 pub struct AdamWConfig {
@@ -34,6 +41,15 @@ impl MomentState {
     pub fn zeros(n: usize) -> Self {
         MomentState { m: vec![0.0; n], v: vec![0.0; n] }
     }
+}
+
+/// Flat-chunk bounds `[lo, hi)` owned by data-rank `d` under `g_data`-way
+/// depth sharding of a `total`-element flat buffer.  Chunks are
+/// `ceil(total / g_data)` elements; the buffer is zero-padded to
+/// `chunk * g_data`, so the last rank's chunk may cover padding.
+pub fn depth_shard_range(total: usize, d: usize, g_data: usize) -> (usize, usize) {
+    let chunk = total.div_ceil(g_data.max(1));
+    (d * chunk, (d + 1) * chunk)
 }
 
 /// One fused AdamW step on a shard.  `t` is the 1-based step count.
@@ -89,6 +105,47 @@ mod tests {
             adamw_step(&cfg, t, &mut w, &g, &mut st);
         }
         assert!((w[0] - 3.0).abs() < 0.05, "w = {}", w[0]);
+    }
+
+    #[test]
+    fn depth_shard_ranges_partition_the_padded_buffer() {
+        for (total, g_data) in [(10usize, 4usize), (16, 4), (7, 3), (5, 1), (3, 8)] {
+            let chunk = total.div_ceil(g_data);
+            let mut end = 0;
+            for d in 0..g_data {
+                let (lo, hi) = depth_shard_range(total, d, g_data);
+                assert_eq!(lo, end, "total={total} g_data={g_data} d={d}");
+                assert_eq!(hi - lo, chunk);
+                end = hi;
+            }
+            assert!(end >= total, "chunks must cover the buffer");
+            assert!(end - total < g_data.max(chunk), "padding bounded by one chunk");
+        }
+    }
+
+    #[test]
+    fn chunked_update_matches_full_update() {
+        // the depth-sharded invariant: stepping disjoint chunks with
+        // chunked moments == stepping the whole vector with full moments
+        let cfg = AdamWConfig::default();
+        let n = 13;
+        let g_data = 4;
+        let chunk = n.div_ceil(g_data);
+        let padded = chunk * g_data;
+        let mut w_full: Vec<f32> = (0..padded).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut w_sharded = w_full.clone();
+        let mut st_full = MomentState::zeros(padded);
+        let mut st_chunks: Vec<MomentState> =
+            (0..g_data).map(|_| MomentState::zeros(chunk)).collect();
+        for t in 1..=5u64 {
+            let g: Vec<f32> = (0..padded).map(|i| ((i + t as usize) as f32 * 0.11).cos()).collect();
+            adamw_step(&cfg, t, &mut w_full, &g, &mut st_full);
+            for d in 0..g_data {
+                let (lo, hi) = depth_shard_range(n, d, g_data);
+                adamw_step(&cfg, t, &mut w_sharded[lo..hi], &g[lo..hi], &mut st_chunks[d]);
+            }
+        }
+        assert_eq!(w_full, w_sharded);
     }
 
     #[test]

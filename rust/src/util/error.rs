@@ -1,0 +1,113 @@
+//! In-tree error handling (`anyhow` is not available in the offline,
+//! fully-vendored build): a string-message error with context chaining,
+//! the `anyhow!`/`bail!` constructor macros the codebase uses, and a
+//! `Result` alias defaulting the error type.
+//!
+//! The design mirrors `anyhow`'s surface where the repo uses it: any
+//! `std::error::Error` converts into [`Error`] via `?`, and
+//! [`Context::context`]/[`Context::with_context`] prepend a message.
+
+use std::fmt;
+
+/// A boxed-string error.  Deliberately does **not** implement
+/// `std::error::Error` so the blanket `From` below stays coherent
+/// (the same trick `anyhow::Error` uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Prepend context to the error message of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`] from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+// Re-export so call sites can `use crate::util::error::{anyhow, bail}`.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("nope: {}", 7)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        assert_eq!(fails().unwrap_err().to_string(), "nope: 7");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::other("boom"));
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: boom");
+        let r2: Result<()> = Err(anyhow!("inner"));
+        let e2 = r2.with_context(|| format!("rank {}", 3)).unwrap_err();
+        assert_eq!(e2.to_string(), "rank 3: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+}

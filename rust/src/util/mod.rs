@@ -1,8 +1,10 @@
 //! Offline-friendly substrates: everything a framework normally pulls from
-//! crates.io, rebuilt here because the build is fully vendored (the only
-//! external dependencies are `xla` and `anyhow`).
+//! crates.io, rebuilt here because the build is fully vendored (zero
+//! crates.io dependencies; even error handling and the PJRT bindings are
+//! in-tree — see [`error`] and [`crate::xla`]).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

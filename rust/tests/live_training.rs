@@ -17,6 +17,10 @@ fn artifacts(name: &str) -> Option<PathBuf> {
 }
 
 fn train_losses(dir: PathBuf, steps: u64, seed: u64) -> Vec<(u64, f64)> {
+    train_losses_mode(dir, steps, seed, false)
+}
+
+fn train_losses_mode(dir: PathBuf, steps: u64, seed: u64, sharded_state: bool) -> Vec<(u64, f64)> {
     let cfg = TrainConfig {
         artifact_dir: dir,
         steps,
@@ -25,6 +29,7 @@ fn train_losses(dir: PathBuf, steps: u64, seed: u64) -> Vec<(u64, f64)> {
         log_every: 1,
         verbose: false,
         checkpoint_dir: None,
+        sharded_state,
     };
     trainer::train(&cfg).expect("training failed").losses
 }
@@ -74,6 +79,22 @@ fn serial_depth2_overdecomposition_matches_depth1() {
 }
 
 #[test]
+fn depth_sharded_state_matches_replicated_losses() {
+    // The PR's live acceptance: ZeRO-style depth sharding of the
+    // optimizer state is bit-consistent with the replicated path (the
+    // reduce-scatter sums in member order, so the chunked AdamW sees the
+    // exact gradients of the fused all-reduce).
+    let Some(par) = artifacts("gpt-nano_r2c2d2b8_jnp") else { return };
+    let a = train_losses_mode(par.clone(), 4, 21, false);
+    let b = train_losses_mode(par, 4, 21, true);
+    assert_eq!(a.len(), b.len());
+    for ((sa, la), (sb, lb)) in a.iter().zip(&b) {
+        assert_eq!(sa, sb);
+        assert!((la - lb).abs() < 5e-3, "step {sa}: replicated {la} vs sharded {lb}");
+    }
+}
+
+#[test]
 fn training_beats_unigram_entropy_eventually() {
     // the corpus has a learnable rule; a short run should already dip
     // under the unigram entropy floor of a structureless predictor
@@ -86,6 +107,7 @@ fn training_beats_unigram_entropy_eventually() {
         log_every: 10,
         verbose: false,
         checkpoint_dir: None,
+        sharded_state: false,
     })
     .expect("train");
     let last = report.losses.last().unwrap().1;
@@ -112,6 +134,7 @@ fn checkpoints_roundtrip_across_configs() {
         log_every: 1,
         verbose: false,
         checkpoint_dir: Some(ck.clone()),
+        sharded_state: false,
     };
     trainer::train(&cfg).expect("train");
     let manifest = Manifest::load(&par).expect("manifest");
