@@ -1,0 +1,463 @@
+#!/usr/bin/env python3
+"""Standalone Python mirror of the Rust discrete-event simulator.
+
+This is a line-for-line port of the cost models and schedule builder in
+``rust/src/sim/machine.rs`` and ``rust/src/strategies/mod.rs`` (Tensor3D
+path) plus the engine's event-loop semantics — kept in-tree so the
+empirically pinned Rust tests are diagnosable without a Rust toolchain:
+
+* ``planner::tests::refined_choice_differs_from_volume_choice_on_gpt9b_16``
+  pins that sim-refined planning picks a different grid than Eq. 4 on
+  GPT-9B / 16 Polaris GPUs (replicated state).  Run this file to see the
+  full candidate ranking the Rust test relies on (at authoring time:
+  Eq.-4 base (2,2,4) at ~6.42 s vs sim winner (2,4,2) at ~5.86 s).
+* The issue-order permutation-invariance property of
+  ``rust/tests/sim_golden.rs`` can be spot-checked here with
+  ``simulate(..., order=...)``.
+
+Python floats are IEEE-754 doubles, so where the op sequences match the
+Rust engine the arithmetic matches closely; this mirror is for *ranking
+and schedule-shape* diagnosis, not bit-level comparison (the Rust
+``sim::reference`` engine is the bitwise golden).
+
+No dependencies beyond the standard library.  Usage::
+
+    python3 python/tests/sim_mirror.py            # refine scan, pinned cases
+"""
+import heapq
+
+BYTES_PER_ELEM = 2.0
+COMPUTE, AR, AG, RS = 0, 1, 2, 3
+STATE_BUDGET = 0.6
+
+
+class Machine:
+    def __init__(self, name, gpn, peak, mem, intra_bw, intra_lat, inter_bw, nic, inter_lat,
+                 effmax, halfdim):
+        self.name = name
+        self.gpus_per_node = gpn
+        self.peak_flops = peak
+        self.mem_bytes = mem
+        self.intra_bw = intra_bw
+        self.intra_lat_s = intra_lat
+        self.inter_bw_per_node = inter_bw
+        self.nic_bw = nic
+        self.inter_lat_s = inter_lat
+        self.gemm_eff_max = effmax
+        self.gemm_eff_halfdim = halfdim
+
+    def gemm_eff(self, md):
+        return self.gemm_eff_max * md / (md + self.gemm_eff_halfdim)
+
+    def compute_time(self, flops, md):
+        if flops <= 0:
+            return 0.0
+        return flops / (self.peak_flops * max(self.gemm_eff(md), 1e-3))
+
+    def ring_bw_lat(self, p, per_node):
+        if per_node >= p:
+            return (self.intra_bw, self.intra_lat_s)
+        cg = max(self.gpus_per_node // max(per_node, 1), 1)
+        share = min(self.inter_bw_per_node / cg, self.nic_bw)
+        return (min(share, self.intra_bw), self.inter_lat_s)
+
+    def allreduce_time(self, bytes_, p, per_node):
+        if p <= 1 or bytes_ <= 0:
+            return 0.0
+        pf = float(p)
+        rb = 2.0 * (pf - 1.0) / pf * bytes_
+        bw, lat = self.ring_bw_lat(p, per_node)
+        return rb / bw + 2.0 * (pf - 1.0) * lat
+
+    def allgather_time(self, bytes_, p, per_node):
+        if p <= 1 or bytes_ <= 0:
+            return 0.0
+        pf = float(p)
+        rb = (pf - 1.0) / pf * bytes_
+        bw, lat = self.ring_bw_lat(p, per_node)
+        return rb / bw + (pf - 1.0) * lat
+
+    def reduce_scatter_time(self, b, p, pn):
+        return self.allgather_time(b, p, pn)
+
+    def members_per_node(self, group):
+        per = {}
+        for r in group:
+            per[r // self.gpus_per_node] = per.get(r // self.gpus_per_node, 0) + 1
+        return max(per.values()) if per else 1
+
+
+def perlmutter():
+    return Machine("perlmutter", 4, 312e12, 40e9, 200e9, 2e-6, 100e9, 25e9, 4e-6, 0.62, 96.0)
+
+
+def polaris():
+    return Machine("polaris", 4, 312e12, 40e9, 200e9, 2e-6, 25e9, 12.5e9, 4e-6, 0.62, 96.0)
+
+
+def frontier():
+    return Machine("frontier", 8, 191.5e12, 64e9, 100e9, 2e-6, 100e9, 25e9, 4e-6, 0.55, 96.0)
+
+
+class Mesh:
+    def __init__(self, gd, gr, gc, depth=1):
+        self.g_data, self.g_r, self.g_c, self.depth = gd, gr, gc, depth
+
+    def g_tensor(self):
+        return self.g_r * self.g_c
+
+    def world(self):
+        return self.g_data * self.g_tensor()
+
+    def coord_of(self, rank):
+        t = self.g_tensor()
+        return (rank // t, (rank % t) // self.g_r, rank % self.g_r)  # (d, j, i)
+
+    def rank_of(self, d, i, j):
+        return d * self.g_tensor() + j * self.g_r + i
+
+    def col_group(self, rank):
+        d, j, _ = self.coord_of(rank)
+        return tuple(self.rank_of(d, ii, j) for ii in range(self.g_r))
+
+    def row_group(self, rank):
+        d, _, i = self.coord_of(rank)
+        return tuple(self.rank_of(d, i, jj) for jj in range(self.g_c))
+
+    def data_group(self, rank):
+        _, j, i = self.coord_of(rank)
+        return tuple(self.rank_of(dd, i, j) for dd in range(self.g_data))
+
+    def key(self):
+        return (self.g_data, self.g_r, self.g_c)
+
+
+def divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def factorizations(world):
+    out = []
+    for gd in divisors(world):
+        t = world // gd
+        for gr in divisors(t):
+            out.append(Mesh(gd, gr, t // gr))
+    return out
+
+
+class Layer:
+    def __init__(self, name, k, n, rows, transposed):
+        self.name, self.k, self.n, self.rows, self.transposed = name, k, n, rows, transposed
+
+    def fwd_flops(self, samples):
+        return 2.0 * samples * self.rows * self.k * self.n
+
+    def weight_params(self):
+        return float(self.k * self.n)
+
+
+class Net:
+    def __init__(self, layers, attached, params):
+        self.layers, self.attached, self.params = layers, attached, params
+
+    def fc_params(self):
+        return sum(l.weight_params() for l in self.layers)
+
+
+def gpt_network(vocab, hidden, layers, heads, seq):
+    """Mirror of models::gpt::GptDims::network()."""
+    h = hidden
+    L, A = [], []
+    for l in range(layers):
+        L.append(Layer(f"b{l}.qkv", h, 3 * h, seq, False))
+        A.append((len(L) - 1, 4.0 * seq * seq * h))
+        L.append(Layer(f"b{l}.proj", h, h, seq, True))
+        L.append(Layer(f"b{l}.mlp1", h, 4 * h, seq, False))
+        L.append(Layer(f"b{l}.mlp2", 4 * h, h, seq, True))
+    L.append(Layer("head", h, vocab, seq, False))
+    f, v, s = 4 * h, vocab, seq
+    per_block = h * 3.0 * h + 3.0 * h + h * h + h + h * f + f + f * h + h + 4.0 * h
+    params = v * h + s * h + layers * per_block + 2.0 * h + h * v + v
+    return Net(L, A, params)
+
+
+def ar_vol(p, buf):
+    return 0.0 if p <= 1 else 2.0 * (p - 1.0) / p * buf
+
+
+def t3d_volume(net, batch, mesh):
+    """Mirror of comm_model::tensor3d_network_volume (elements/GPU/iter)."""
+    tot = 0.0
+    for l in net.layers:
+        m = batch / mesh.g_data * l.rows
+        gr, gc = (mesh.g_c, mesh.g_r) if l.transposed else (mesh.g_r, mesh.g_c)
+        tot += ar_vol(gr, m * l.n / gc) + ar_vol(gc, m * l.k / gr)
+    return tot
+
+
+def state_bytes(net, gt):
+    return 16.0 * net.params / gt
+
+
+def state_bytes_sharded(net, gt, gd):
+    return (4.0 + 12.0 / gd) * net.params / gt
+
+
+def min_g_tensor(net, machine, world):
+    for gt in divisors(world):
+        if state_bytes(net, gt) <= machine.mem_bytes * STATE_BUDGET:
+            return gt
+    return world
+
+
+def candidates(net, batch, world, machine, mode):
+    """Feasible meshes sorted by Eq.-4 volume (mode: 'rep' | 'sh')."""
+    if mode == "rep":
+        floor = min_g_tensor(net, machine, world)
+        ms = [m for m in factorizations(world) if m.g_tensor() >= floor]
+    else:
+        budget = machine.mem_bytes * STATE_BUDGET
+        ms = [m for m in factorizations(world)
+              if state_bytes_sharded(net, m.g_tensor(), m.g_data) <= budget]
+    out = [(m, t3d_volume(net, batch, m)) for m in ms]
+    out.sort(key=lambda x: x[1])
+    return out
+
+
+def base_plan(cands):
+    """Rule 1 (max g_data) + rule 2 (min volume) — planner::plan_mode."""
+    gdmax = max(m.g_data for m, _ in cands)
+    return min(((m, v) for m, v in cands if m.g_data == gdmax), key=lambda x: x[1])
+
+
+def build_t3d(net, mesh_in, batch, depth, machine, sharded=False, barrier=False):
+    """Mirror of strategies::build_tensor3d (transpose_opt = true).
+
+    Per-rank op tuples: (kind, a, b, tag, group, stream, deps) where for
+    COMPUTE a=flops b=min_dim, for collectives a=bytes.
+    """
+    del machine  # groups are resolved at simulate time in the mirror
+    mesh = Mesh(mesh_in.g_data, mesh_in.g_r, mesh_in.g_c, depth)
+    world = mesh.world()
+    spe = batch / (mesh.g_data * depth)
+    use_shard = sharded and mesh.g_data > 1
+    gt = mesh.g_tensor()
+    GK_COL, GK_ROW, GK_DATA = 0, 1, 2
+    PH_FWD, PH_BWD, PH_DP, PH_WG, PH_GS = 1, 2, 4, 5, 6
+
+    def tag(phase, layer, shard, gk, gid):
+        return (phase << 58) | (layer << 38) | (shard << 30) | (gk << 27) | gid
+
+    programs = []
+    for rank in range(world):
+        d, j, i = mesh.coord_of(rank)
+        ops = []
+
+        def push(kind, a, b, tg, grp, stream, deps):
+            ops.append((kind, a, b, tg, grp, stream, tuple(deps)))
+            return len(ops) - 1
+
+        dp_gid = i * mesh.g_c + j
+        col, row, datag = mesh.col_group(rank), mesh.row_group(rank), mesh.data_group(rank)
+        last_fwd = [None] * depth
+        for li, layer in enumerate(net.layers):
+            wg = None
+            if use_shard:
+                byts = layer.weight_params() / gt * BYTES_PER_ELEM
+                deps = []
+                if barrier:
+                    deps = [x for x in last_fwd if x is not None]
+                wg = push(AG, byts, 0, tag(PH_WG, li, 0, GK_DATA, dp_gid), datag, 2, deps)
+            if layer.transposed:
+                gre, gce, fwd_gk, fwd_gid, fwd_group = mesh.g_c, mesh.g_r, GK_ROW, d * mesh.g_r + i, row
+            else:
+                gre, gce, fwd_gk, fwd_gid, fwd_group = mesh.g_r, mesh.g_c, GK_COL, d * mesh.g_c + j, col
+            m_local = spe * layer.rows
+            flops = layer.fwd_flops(spe) / gt
+            md = min(m_local, layer.k / gre, layer.n / gce)
+            ar_bytes = m_local * layer.n / gce * BYTES_PER_ELEM
+            for s in range(depth):
+                deps = []
+                if last_fwd[s] is not None:
+                    deps.append(last_fwd[s])
+                if wg is not None:
+                    deps.append(wg)
+                mm = push(COMPUTE, flops, md, 0, None, 0, deps)
+                ar = push(AR, ar_bytes, 0, tag(PH_FWD, li, s, fwd_gk, fwd_gid), fwd_group, 1, [mm])
+                tail = ar
+                for (al, af) in net.attached:
+                    if al == li:
+                        tail = push(COMPUTE, af * spe / mesh.g_c, m_local, 0, None, 0, [tail])
+                last_fwd[s] = tail
+        last_bwd = list(last_fwd)
+        last_dw = [None] * depth
+        gscatters, last_rs = [], None
+        for li in range(len(net.layers) - 1, -1, -1):
+            layer = net.layers[li]
+            if layer.transposed:
+                gre, gce, bwd_gk, bwd_gid, bwd_group = mesh.g_c, mesh.g_r, GK_COL, d * mesh.g_c + j, col
+            else:
+                gre, gce, bwd_gk, bwd_gid, bwd_group = mesh.g_r, mesh.g_c, GK_ROW, d * mesh.g_r + i, row
+            m_local = spe * layer.rows
+            flops = layer.fwd_flops(spe) / gt
+            md = min(m_local, layer.k / gre, layer.n / gce)
+            ar_bytes = m_local * layer.k / gre * BYTES_PER_ELEM
+            for s in range(depth):
+                deps = []
+                if last_bwd[s] is not None:
+                    deps.append(last_bwd[s])
+                if barrier and last_rs is not None:
+                    deps.append(last_rs)
+                rc = push(COMPUTE, flops, md, 0, None, 0, deps)
+                deps = [rc]
+                for (al, af) in net.attached:
+                    if al == li:
+                        ab = push(COMPUTE, 3.0 * af * spe / mesh.g_c, m_local, 0, None, 0, deps)
+                        deps = [ab]
+                dx = push(COMPUTE, flops, md, 0, None, 0, deps)
+                ar = push(AR, ar_bytes, 0, tag(PH_BWD, li, s, bwd_gk, bwd_gid), bwd_group, 1, [dx])
+                dw = push(COMPUTE, flops, md, 0, None, 0, deps)
+                last_bwd[s], last_dw[s] = ar, dw
+            if use_shard:
+                byts = layer.weight_params() / gt * BYTES_PER_ELEM
+                deps = [x for x in last_dw if x is not None]
+                rs = push(RS, byts, 0, tag(PH_GS, li, 0, GK_DATA, dp_gid), datag, 2, deps)
+                gscatters.append(rs)
+                last_rs = rs
+        if use_shard:
+            push(COMPUTE, 12.0 * net.fc_params() / (gt * mesh.g_data), 1e9, 0, None, 0,
+                 list(gscatters))
+        if mesh.g_data > 1 and not use_shard:
+            gb = net.fc_params() / gt * BYTES_PER_ELEM
+            deps = []
+            for s in range(depth):
+                if last_dw[s] is not None:
+                    deps.append(last_dw[s])
+                if last_bwd[s] is not None:
+                    deps.append(last_bwd[s])
+            dp = push(AR, gb, 0, tag(PH_DP, 0, 0, GK_DATA, i * mesh.g_c + j), datag, 1, deps)
+            push(COMPUTE, 12.0 * net.fc_params() / gt, 1e9, 0, None, 0, [dp])
+        programs.append(ops)
+    return programs
+
+
+def simulate(machine, programs, order=None):
+    """Mirror of sim::engine::simulate / simulate_permuted: returns makespan."""
+    n = len(programs)
+    done = [[False] * len(p) for p in programs]
+    done_time = [[0.0] * len(p) for p in programs]
+    nxt = [[0, 0, 0] for _ in range(n)]
+    stream_ops = []
+    for p in programs:
+        m = [[], [], []]
+        for idx, op in enumerate(p):
+            m[op[5]].append(idx)
+        stream_ops.append(m)
+    stream_free = [[0.0, 0.0, 0.0] for _ in range(n)]
+    collectives = {}
+    heap = []
+    state = {"seq": 0, "now": 0.0}
+    pernode_cache = {}
+
+    def per_node(grp):
+        r = pernode_cache.get(grp)
+        if r is None:
+            r = machine.members_per_node(grp)
+            pernode_cache[grp] = r
+        return r
+
+    def try_issue(gpu):
+        progressed = True
+        while progressed:
+            progressed = False
+            for st in range(3):
+                ip, sl = nxt[gpu][st], stream_ops[gpu][st]
+                if ip >= len(sl):
+                    continue
+                oi = sl[ip]
+                op = programs[gpu][oi]
+                ready = max(stream_free[gpu][st], state["now"])
+                ok = True
+                for dd in op[6]:
+                    if not done[gpu][dd]:
+                        ok = False
+                        break
+                    ready = max(ready, done_time[gpu][dd])
+                if not ok:
+                    continue
+                kind = op[0]
+                if kind == COMPUTE:
+                    end = ready + machine.compute_time(op[1], op[2])
+                    nxt[gpu][st] += 1
+                    stream_free[gpu][st] = end
+                    state["seq"] += 1
+                    heapq.heappush(heap, (end, state["seq"], gpu, oi))
+                    progressed = True
+                else:
+                    tg, grp = op[3], op[4]
+                    stt = collectives.get(tg)
+                    if stt is None:
+                        stt = [0, len(grp), 0.0, []]
+                        collectives[tg] = stt
+                    stt[0] += 1
+                    stt[2] = max(stt[2], ready)
+                    stt[3].append((gpu, oi))
+                    nxt[gpu][st] += 1
+                    if stt[0] == stt[1]:
+                        p, pn = len(grp), per_node(grp)
+                        if kind == AR:
+                            dur = machine.allreduce_time(op[1], p, pn)
+                        elif kind == AG:
+                            dur = machine.allgather_time(op[1], p, pn)
+                        else:
+                            dur = machine.reduce_scatter_time(op[1], p, pn)
+                        end = stt[2] + dur
+                        for (mg, mi) in stt[3]:
+                            stream_free[mg][programs[mg][mi][5]] = end
+                            state["seq"] += 1
+                            heapq.heappush(heap, (end, state["seq"], mg, mi))
+                        del collectives[tg]
+                    progressed = True
+
+    wl = list(order) if order is not None else list(range(n))
+    while wl:
+        try_issue(wl.pop())
+    while heap:
+        t, _, g, i = heapq.heappop(heap)
+        state["now"] = t
+        done[g][i] = True
+        done_time[g][i] = t
+        try_issue(g)
+    for g in range(n):
+        assert all(done[g]), f"deadlock on gpu {g}"
+    return max(max(v) if v else 0.0 for v in done_time)
+
+
+def refine(net, batch, world, machine, mode, k=6, depth=2):
+    """Mirror of planner::plan_refined (Tensor3D, transpose_opt on)."""
+    cands = candidates(net, batch, world, machine, mode)
+    base, _ = base_plan(cands)
+    top = [m for m, _ in cands[:k]]
+    if base.key() not in [m.key() for m in top]:
+        top.append(base)
+    scored = []
+    for m in top:
+        progs = build_t3d(net, m, batch, depth, machine, sharded=(mode == "sh"))
+        scored.append((m, simulate(machine, progs)))
+    scored.sort(key=lambda x: x[1])
+    basemk = [mk for m, mk in scored if m.key() == base.key()][0]
+    return base, basemk, scored
+
+
+if __name__ == "__main__":
+    # The configuration pinned by planner::tests::
+    # refined_choice_differs_from_volume_choice_on_gpt9b_16.
+    gpt9b = gpt_network(51200, 5632, 24, 32, 2048)
+    base, basemk, scored = refine(gpt9b, 64, 16, polaris(), "rep", k=6)
+    print(f"gpt9b/16 polaris replicated: Eq.-4 base {base.key()} at {basemk:.4f}s")
+    for m, mk in scored:
+        mark = " <- sim winner" if (m, mk) == scored[0] else ""
+        print(f"  {m.key()}: {mk:.4f}s{mark}")
+    assert scored[0][0].key() != base.key(), "expected the sim-refined choice to differ"
+    assert scored[0][1] < basemk, "expected the sim-refined choice to be faster"
+    print("ok: sim-refined choice differs from the Eq.-4 choice (as the Rust test pins)")

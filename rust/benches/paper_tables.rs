@@ -78,12 +78,45 @@ fn hot_paths() {
         1024,
         &machine,
     );
-    let n_ops: usize = programs.iter().map(|p| p.ops.len()).sum();
+    let n_ops: usize = programs.total_ops();
     let r = bench("sim engine: GPT-10B/64gpu iteration", 10, || {
         simulate(&machine, &programs).makespan
     });
     println!("{}", r.report());
     println!("    -> {:.2} M ops/s ({} ops)", n_ops as f64 / r.median.as_secs_f64() / 1e6, n_ops);
+
+    // paper scale: the gpt80b/1024 headline configuration (what the CI
+    // bench-sim budget gate watches) — program build and one full-world
+    // simulated iteration, depth-sharded state
+    {
+        let net80 = gpt::gpt_80b().network();
+        let p = tensor3d::planner::plan_mode(
+            &net80,
+            NetKind::Transformer,
+            1024,
+            1024,
+            &machine,
+            tensor3d::planner::StateMode::DepthSharded,
+        );
+        let opts = ScheduleOpts { sharded_state: true, dp_barrier: false };
+        let strat = Strategy::Tensor3d { depth: 2, transpose_opt: true };
+        let rb = bench("sim build: GPT-80B/1024gpu program set", 3, || {
+            build_programs_with(strat, &net80, &p.mesh, 1024, &machine, opts).total_ops()
+        });
+        println!("{}", rb.report());
+        let set = build_programs_with(strat, &net80, &p.mesh, 1024, &machine, opts);
+        let big_ops = set.total_ops();
+        let rs = bench("sim engine: GPT-80B/1024gpu iteration", 3, || {
+            simulate(&machine, &set).makespan
+        });
+        println!("{}", rs.report());
+        println!(
+            "    -> {:.2} M ops/s ({} ops, {} communicators)",
+            big_ops as f64 / rs.median.as_secs_f64() / 1e6,
+            big_ops,
+            set.comm.len()
+        );
+    }
 
     // layout: 2-D shard + assemble of a 4096x4096 weight
     let mut rng = Rng::new(1);

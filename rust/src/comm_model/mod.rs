@@ -163,7 +163,9 @@ pub fn optimal_meshes(
         .filter(|m| m.g_tensor() >= min_g_tensor)
         .map(|m| (m, tensor3d_network_volume(net, batch, &m)))
         .collect();
-    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a NaN volume (degenerate
+    // model description) must never panic the planner mid-search
+    out.sort_by(|a, b| a.1.total_cmp(&b.1));
     out
 }
 

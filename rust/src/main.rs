@@ -1,13 +1,18 @@
 //! `tensor3d` — CLI for the Tensor3D framework.
 //!
 //! Subcommands:
-//!   train     live training on AOT artifacts (the real three-layer stack)
-//!   plan      §5 planner: recommend (G_data, G_r, G_c) for a model+cluster
-//!   simulate  one iteration of a strategy on the cluster simulator
-//!   sweep     Fig. 5 configuration sweep
-//!   trace     Fig. 4 overlap trace (writes Chrome trace JSON)
-//!   repro     regenerate any paper table/figure (fig4..fig9, tab4, tab5,
-//!             ablation, all)
+//!   train      live training on AOT artifacts (the real three-layer stack)
+//!   plan       §5 planner: recommend (G_data, G_r, G_c) for a model+cluster
+//!              (--refine K re-ranks the K best Eq.-4 candidates by
+//!              simulated full-world makespan)
+//!   simulate   one iteration of a strategy on the cluster simulator
+//!   bench-sim  paper-scale simulator benchmark: build + simulate a full
+//!              gpt80b iteration on the 1024-GPU Polaris mesh and write
+//!              BENCH_sim.json (schema documented in ROADMAP.md)
+//!   sweep      Fig. 5 configuration sweep
+//!   trace      Fig. 4 overlap trace (writes Chrome trace JSON)
+//!   repro      regenerate any paper table/figure (fig4..fig9, tab4, tab5,
+//!              ablation, all)
 
 use tensor3d::util::error::{anyhow, bail, Result};
 use tensor3d::comm_model;
@@ -56,7 +61,8 @@ fn strategy_by_name(name: &str, depth: usize) -> Result<Strategy> {
 }
 
 fn machine_by_name(name: &str) -> Result<Machine> {
-    Machine::by_name(name).ok_or_else(|| anyhow!("unknown machine {name:?} (perlmutter|polaris)"))
+    Machine::by_name(name)
+        .ok_or_else(|| anyhow!("unknown machine {name:?} (perlmutter|polaris|frontier)"))
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
@@ -110,8 +116,15 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         vec![
             opt("model", "gpt9b", "model preset"),
             opt("gpus", "16", "GPU count"),
-            opt("machine", "perlmutter", "perlmutter|polaris"),
+            opt("machine", "perlmutter", "perlmutter|polaris|frontier"),
             opt("batch", "0", "global batch (0 = model default)"),
+            opt(
+                "refine",
+                "0",
+                "re-rank the K best Eq.-4 candidates by simulated full-world \
+                 makespan (0 = volume-only, the paper's §5 rules)",
+            ),
+            opt("depth", "2", "overdecomposition degree used by --refine simulations"),
             flag("sharded-state", "depth-shard optimizer state (ZeRO-style memory rule)"),
             flag("json", "emit the recommendation as one-line JSON (CI golden diff)"),
         ],
@@ -131,6 +144,63 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     } else {
         planner::StateMode::Replicated
     };
+    let refine = a.usize("refine")?;
+    if refine > 0 {
+        let r = planner::plan_refined(
+            &net,
+            kind,
+            batch,
+            gpus,
+            &machine,
+            mode,
+            refine,
+            a.usize("depth")?,
+        );
+        if a.flag("json") {
+            use tensor3d::util::json::Json;
+            let j = Json::obj(vec![
+                ("model", Json::str(&model_name)),
+                ("gpus", Json::num(gpus as f64)),
+                ("g_data", Json::num(r.mesh.g_data as f64)),
+                ("g_r", Json::num(r.mesh.g_r as f64)),
+                ("g_c", Json::num(r.mesh.g_c as f64)),
+                ("makespan_s", Json::num(r.makespan_s)),
+                ("eq4_g_data", Json::num(r.base.mesh.g_data as f64)),
+                ("eq4_g_r", Json::num(r.base.mesh.g_r as f64)),
+                ("eq4_g_c", Json::num(r.base.mesh.g_c as f64)),
+                ("eq4_makespan_s", Json::num(r.base_makespan_s)),
+            ]);
+            println!("{j}");
+            return Ok(());
+        }
+        println!(
+            "model {} ({} params), batch {batch}, {gpus}x {}: sim-refined plan (top {refine} \
+             Eq.-4 candidates re-ranked by simulated makespan)",
+            net.name,
+            fmt_bytes(net.params),
+            machine.name
+        );
+        for (m, vol, mk) in &r.candidates {
+            let marker = if *m == r.mesh { " <- recommended" } else { "" };
+            let base = if *m == r.base.mesh { " [Eq.-4 winner]" } else { "" };
+            println!(
+                "  g_data={} g_r={} g_c={}  volume {}  simulated {mk:.3} s/iter{base}{marker}",
+                m.g_data,
+                m.g_r,
+                m.g_c,
+                fmt_bytes(vol * strategies::BYTES_PER_ELEM)
+            );
+        }
+        println!(
+            "  refined: g_data={} g_r={} g_c={} at {:.3} s/iter ({:.1}% vs the Eq.-4 pick)",
+            r.mesh.g_data,
+            r.mesh.g_r,
+            r.mesh.g_c,
+            r.makespan_s,
+            (1.0 - r.makespan_s / r.base_makespan_s) * 100.0
+        );
+        return Ok(());
+    }
     let p = planner::plan_mode(&net, kind, batch, gpus, &machine, mode);
     if a.flag("json") {
         use tensor3d::util::json::Json;
@@ -196,7 +266,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             opt("mesh", "", "g_data,g_rxg_c e.g. 8,2x4 (empty = planner)"),
             opt("depth", "2", "overdecomposition degree"),
             opt("gpus", "64", "GPU count (when mesh empty)"),
-            opt("machine", "polaris", "perlmutter|polaris"),
+            opt("machine", "polaris", "perlmutter|polaris|frontier"),
             opt("batch", "0", "global batch (0 = default)"),
             flag("sharded-state", "depth-shard parameter/optimizer state (overlapped RS/AG)"),
             flag("dp-barrier", "ablation: serialize the sharded-state collectives"),
@@ -265,6 +335,122 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Paper-scale simulator benchmark: build and simulate one full training
+/// iteration at the headline configuration (gpt80b, 1024 GPUs) and write
+/// the timings to a JSON file so the perf trajectory is tracked in CI.
+/// The BENCH_sim.json schema is documented in ROADMAP.md (§Verification).
+fn cmd_bench_sim(argv: &[String]) -> Result<()> {
+    use tensor3d::util::json::Json;
+    use tensor3d::util::timer::Stopwatch;
+    let a = Args::new(
+        "tensor3d bench-sim",
+        vec![
+            opt("model", "gpt80b", "model preset"),
+            opt("gpus", "1024", "GPU count"),
+            opt("machine", "polaris", "perlmutter|polaris|frontier"),
+            opt("depth", "2", "overdecomposition degree"),
+            opt("batch", "0", "global batch (0 = model default)"),
+            opt("out", "BENCH_sim.json", "result file (schema documented in ROADMAP.md)"),
+            opt(
+                "budget-s",
+                "0",
+                "fail if build+simulate wall clock exceeds this many seconds (0 = no budget; \
+                 CI uses 60 to catch hot-loop regressions)",
+            ),
+            flag("replicated", "replicated parameter/optimizer state (default: depth-sharded)"),
+        ],
+    )
+    .parse(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+    let model_name = a.str("model")?;
+    let (net, kind, default_batch, _) = model_by_name(&model_name)?;
+    let machine = machine_by_name(&a.str("machine")?)?;
+    let batch = match a.usize("batch")? {
+        0 => default_batch,
+        b => b,
+    };
+    let gpus = a.usize("gpus")?;
+    let depth = a.usize("depth")?;
+    let sharded = !a.flag("replicated");
+    let mode = if sharded {
+        planner::StateMode::DepthSharded
+    } else {
+        planner::StateMode::Replicated
+    };
+    let plan = planner::plan_mode(&net, kind, batch, gpus, &machine, mode);
+    let mesh = plan.mesh;
+    let strat = Strategy::Tensor3d { depth, transpose_opt: true };
+    let opts = strategies::ScheduleOpts { sharded_state: sharded, dp_barrier: false };
+
+    let sw = Stopwatch::start();
+    let set = strategies::build_programs_with(strat, &net, &mesh, batch, &machine, opts);
+    let build_s = sw.secs();
+    let ops = set.total_ops();
+    let groups = set.comm.len();
+    let classes = set.classes.len();
+
+    let sw = Stopwatch::start();
+    let r = tensor3d::sim::simulate(&machine, &set);
+    let sim_s = sw.secs();
+    let total_s = build_s + sim_s;
+    let ops_per_sec = ops as f64 / sim_s.max(1e-12);
+    let u = strategies::mfu(&net, batch, mesh.world(), r.makespan, &machine);
+
+    let j = Json::obj(vec![
+        ("model", Json::str(&model_name)),
+        ("gpus", Json::num(gpus as f64)),
+        ("machine", Json::str(&machine.name)),
+        ("depth", Json::num(depth as f64)),
+        ("sharded_state", Json::Bool(sharded)),
+        ("g_data", Json::num(mesh.g_data as f64)),
+        ("g_r", Json::num(mesh.g_r as f64)),
+        ("g_c", Json::num(mesh.g_c as f64)),
+        ("ops", Json::num(ops as f64)),
+        ("groups", Json::num(groups as f64)),
+        ("classes", Json::num(classes as f64)),
+        ("build_s", Json::num(build_s)),
+        ("sim_s", Json::num(sim_s)),
+        ("total_s", Json::num(total_s)),
+        ("ops_per_sec", Json::num(ops_per_sec)),
+        ("makespan_s", Json::num(r.makespan)),
+        ("overlap_fraction", Json::num(r.overlap_fraction())),
+        ("mfu", Json::num(u)),
+    ]);
+    let out = a.str("out")?;
+    std::fs::write(&out, format!("{j}\n"))?;
+    println!(
+        "bench-sim: {} on {gpus}x {} (g_data={} g_r={} g_c={}, depth {depth}, {} state)",
+        net.name,
+        machine.name,
+        mesh.g_data,
+        mesh.g_r,
+        mesh.g_c,
+        if sharded { "depth-sharded" } else { "replicated" }
+    );
+    println!(
+        "  program build: {build_s:.3} s   ({:.2} M ops, {groups} communicators, {classes} \
+         op-template class{})",
+        ops as f64 / 1e6,
+        if classes == 1 { "" } else { "es" }
+    );
+    println!("  simulate:      {sim_s:.3} s   ({:.2} M ops/s)", ops_per_sec / 1e6);
+    println!(
+        "  makespan {:.3} s/iter   overlap {:.1}%   MFU {:.1}%",
+        r.makespan,
+        r.overlap_fraction() * 100.0,
+        u * 100.0
+    );
+    println!("  results -> {out}");
+    let budget = a.f64("budget-s")?;
+    if budget > 0.0 && total_s > budget {
+        bail!(
+            "bench-sim wall clock {total_s:.1}s exceeded the {budget:.0}s budget \
+             (build {build_s:.1}s + sim {sim_s:.1}s) — hot-loop regression?"
+        );
+    }
+    Ok(())
+}
+
 fn cmd_repro(argv: &[String]) -> Result<()> {
     let which = argv.first().map(|s| s.as_str()).unwrap_or("all");
     let _ = std::fs::create_dir_all("results");
@@ -291,7 +477,7 @@ fn main() -> Result<()> {
     let Some((cmd, rest)) = argv.split_first() else {
         eprintln!(
             "tensor3d — communication-minimizing asynchronous tensor parallelism\n\
-             usage: tensor3d <train|plan|simulate|sweep|trace|repro> [options]\n\
+             usage: tensor3d <train|plan|simulate|bench-sim|sweep|trace|repro> [options]\n\
              run a subcommand with --help-me to see its options"
         );
         return Ok(());
@@ -300,6 +486,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(rest),
         "plan" => cmd_plan(rest),
         "simulate" => cmd_simulate(rest),
+        "bench-sim" => cmd_bench_sim(rest),
         "sweep" => {
             println!("{}", repro::fig5_sweep());
             Ok(())

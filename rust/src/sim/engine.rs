@@ -5,10 +5,34 @@
 //!
 //! Programs are per-GPU FIFO op lists (the order kernels were *enqueued*,
 //! exactly like a CUDA stream); an op additionally waits on explicit
-//! dependencies (events), which is how the round-robin sub-shard schedule
-//! expresses "compute of X'' may start while the all-reduce of X' is in
-//! flight, but the next layer of X' must wait for that all-reduce".
+//! dependencies (events on other streams of the same GPU), which is how
+//! the round-robin sub-shard schedule expresses "compute of X'' may start
+//! while the all-reduce of X' is in flight, but the next layer of X' must
+//! wait for that all-reduce".
+//!
+//! ## Paper-scale representation
+//!
+//! The engine is sized for the paper's headline configuration (gpt80b on
+//! the full 1024-GPU Polaris mesh, ~1.5 M ops), so the program
+//! representation is deduplicated and the event loop is allocation-free:
+//!
+//! * communicator groups are interned once in a [`CommWorld`]
+//!   ([`GroupId`] per op) with `members_per_node` and ring
+//!   bandwidth/latency precomputed at registration;
+//! * SPMD-symmetric rank programs share one op-template per
+//!   mesh-coordinate class ([`ClassProgram`]); a rank binds only its
+//!   per-slot `(tag, group)` pairs — program-build memory is O(world),
+//!   not O(world × ops × group size);
+//! * op names are interned ([`NameId`]) and resolved only when
+//!   `keep_spans` asks for a trace;
+//! * per-GPU per-stream state is fixed `[T; 3]` arrays indexed by
+//!   [`Stream`], and collective member lists are pooled, so the hot loop
+//!   performs no hashing of stream keys and no mid-loop `Vec` clones.
+//!
+//! `rust/tests/sim_golden.rs` pins this engine bit-for-bit against the
+//! pre-refactor event loop kept in [`super::reference`].
 
+use super::comm_world::{CommWorld, GroupId};
 use super::machine::Machine;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -27,93 +51,401 @@ pub enum Stream {
 
 impl Stream {
     pub const ALL: [Stream; 3] = [Stream::Compute, Stream::Comm, Stream::CommDp];
+
+    /// Dense index for `[T; 3]` per-stream state tables.
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
 }
 
-/// Global op identifier: (gpu, index in that GPU's program).
-pub type OpRef = (usize, usize);
+/// Interned op label (see [`NameTable`]): names repeat across ranks and
+/// sub-shards, so an op stores 4 bytes and the string is formatted once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NameId(u32);
 
-#[derive(Debug, Clone)]
+/// Label interner for op names.
+#[derive(Debug, Clone, Default)]
+pub struct NameTable {
+    names: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl NameTable {
+    pub fn intern(&mut self, s: String) -> NameId {
+        if let Some(&i) = self.index.get(&s) {
+            return NameId(i);
+        }
+        let i = self.names.len() as u32;
+        self.names.push(s.clone());
+        self.index.insert(s, i);
+        NameId(i)
+    }
+
+    #[inline]
+    pub fn get(&self, id: NameId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum OpKind {
     /// Matmul-ish work: `flops` at efficiency driven by `min_dim`.
     Compute { flops: f64, min_dim: f64 },
-    /// All-reduce over `group` (global ranks, must contain this GPU);
-    /// `bytes` is the per-GPU buffer size; ops with the same `tag` across
-    /// the group rendezvous together.
-    AllReduce { tag: u64, bytes: f64, group: Vec<usize> },
+    /// All-reduce; `bytes` is the per-GPU buffer size.  `slot` indexes the
+    /// rank's binding table for the `(tag, group)` pair; ops with the same
+    /// tag across the group rendezvous together.
+    AllReduce { bytes: f64, slot: u32 },
     /// Ring all-gather; `bytes` is the full gathered buffer per GPU (each
-    /// member contributes `bytes / |group|`).  Used by the depth-sharded
-    /// state mode to rematerialize weights before the forward pass.
-    AllGather { tag: u64, bytes: f64, group: Vec<usize> },
+    /// member contributes `bytes / p`).  Used by the depth-sharded state
+    /// mode to rematerialize weights before the forward pass.
+    AllGather { bytes: f64, slot: u32 },
     /// Ring reduce-scatter; `bytes` is the full pre-scatter buffer (each
-    /// member keeps `bytes / |group|`).  Replaces the data-parallel
-    /// gradient all-reduce under depth sharding.
-    ReduceScatter { tag: u64, bytes: f64, group: Vec<usize> },
+    /// member keeps `bytes / p`).  Replaces the data-parallel gradient
+    /// all-reduce under depth sharding.
+    ReduceScatter { bytes: f64, slot: u32 },
 }
 
 impl OpKind {
-    /// `(tag, bytes, group)` when this op is a collective.
-    pub fn collective(&self) -> Option<(u64, f64, &[usize])> {
-        match self {
+    /// `(bytes, slot)` when this op is a collective.
+    #[inline]
+    pub fn collective(&self) -> Option<(f64, u32)> {
+        match *self {
             OpKind::Compute { .. } => None,
-            OpKind::AllReduce { tag, bytes, group }
-            | OpKind::AllGather { tag, bytes, group }
-            | OpKind::ReduceScatter { tag, bytes, group } => Some((*tag, *bytes, group)),
+            OpKind::AllReduce { bytes, slot }
+            | OpKind::AllGather { bytes, slot }
+            | OpKind::ReduceScatter { bytes, slot } => Some((bytes, slot)),
         }
     }
 
-    /// Per-GPU wire traffic (sent+received bytes) of one participation.
-    pub fn wire_bytes(&self) -> f64 {
-        match self {
+    /// Per-GPU wire traffic (sent+received bytes) of one participation in
+    /// a collective over a `p`-member group.
+    #[inline]
+    pub fn wire_bytes(&self, p: usize) -> f64 {
+        match *self {
             OpKind::Compute { .. } => 0.0,
-            OpKind::AllReduce { bytes, group, .. } => {
-                let p = group.len() as f64;
+            OpKind::AllReduce { bytes, .. } => {
+                let p = p as f64;
                 2.0 * (p - 1.0) / p * bytes
             }
-            OpKind::AllGather { bytes, group, .. } | OpKind::ReduceScatter { bytes, group, .. } => {
-                let p = group.len() as f64;
+            OpKind::AllGather { bytes, .. } | OpKind::ReduceScatter { bytes, .. } => {
+                let p = p as f64;
                 (p - 1.0) / p * bytes
             }
         }
     }
 
-    /// Wall-clock duration of the collective on `machine` once all members
-    /// have arrived (zero for compute ops, which are timed elsewhere).
-    pub fn collective_time(&self, machine: &Machine, per_node: usize) -> f64 {
-        match self {
+    /// Wall-clock duration of the collective once all members have
+    /// arrived, on a ring with precomputed `(bw, lat)` (zero for compute
+    /// ops, which are timed elsewhere).
+    #[inline]
+    pub fn collective_time_on(&self, p: usize, bw: f64, lat: f64) -> f64 {
+        match *self {
             OpKind::Compute { .. } => 0.0,
-            OpKind::AllReduce { bytes, group, .. } => {
-                machine.allreduce_time(*bytes, group.len(), per_node)
-            }
-            OpKind::AllGather { bytes, group, .. } => {
-                machine.allgather_time(*bytes, group.len(), per_node)
-            }
-            OpKind::ReduceScatter { bytes, group, .. } => {
-                machine.reduce_scatter_time(*bytes, group.len(), per_node)
+            OpKind::AllReduce { bytes, .. } => Machine::allreduce_time_on(bytes, p, bw, lat),
+            OpKind::AllGather { bytes, .. } => Machine::allgather_time_on(bytes, p, bw, lat),
+            OpKind::ReduceScatter { bytes, .. } => {
+                Machine::reduce_scatter_time_on(bytes, p, bw, lat)
             }
         }
     }
 }
 
+/// One op template, shared by every rank of its coordinate class.
 #[derive(Debug, Clone)]
 pub struct Op {
-    pub name: String,
+    pub name: NameId,
     pub kind: OpKind,
     pub stream: Stream,
-    /// Events (other ops, possibly on other streams of the same GPU) that
-    /// must complete before this op may *start*.
-    pub deps: Vec<OpRef>,
+    /// Same-rank op indices that must complete before this op may start.
+    pub deps: Vec<u32>,
 }
 
-#[derive(Debug, Default, Clone)]
-pub struct GpuProgram {
+/// Per-rank `(tag, group)` instantiation of one collective slot.
+#[derive(Debug, Clone, Copy)]
+pub struct Binding {
+    pub tag: u64,
+    pub group: GroupId,
+}
+
+/// The op templates of one mesh-coordinate class.
+#[derive(Debug, Clone, Default)]
+pub struct ClassProgram {
     pub ops: Vec<Op>,
+    /// Per-stream FIFO issue order (indices into `ops`), precomputed.
+    pub stream_ops: [Vec<u32>; 3],
+    /// Number of collective slots (length of every member rank's binding
+    /// table).
+    pub n_slots: u32,
 }
 
-impl GpuProgram {
-    /// Append an op; returns its OpRef index for use in later deps.
-    pub fn push(&mut self, op: Op) -> usize {
-        self.ops.push(op);
-        self.ops.len() - 1
+/// A complete deduplicated SPMD program: what `strategies::build_programs*`
+/// emits and [`simulate`] consumes.
+#[derive(Debug, Clone)]
+pub struct ProgramSet {
+    pub comm: CommWorld,
+    pub names: NameTable,
+    pub classes: Vec<ClassProgram>,
+    /// Class of each rank.
+    pub rank_class: Vec<u32>,
+    /// Per-rank binding tables, indexed by collective slot.
+    pub bindings: Vec<Vec<Binding>>,
+    /// The machine whose topology the [`CommWorld`] ring parameters were
+    /// precomputed for; [`simulate`] refuses to run the set on any other
+    /// machine — name *and* parameters — because the collectives would
+    /// silently be timed on the build machine while compute ran on the
+    /// other.
+    pub machine: Machine,
+}
+
+impl ProgramSet {
+    #[inline]
+    pub fn world(&self) -> usize {
+        self.rank_class.len()
+    }
+
+    #[inline]
+    pub fn class_of(&self, rank: usize) -> &ClassProgram {
+        &self.classes[self.rank_class[rank] as usize]
+    }
+
+    #[inline]
+    pub fn binding(&self, rank: usize, slot: u32) -> Binding {
+        self.bindings[rank][slot as usize]
+    }
+
+    /// Total op count across all ranks (each rank executes its full class
+    /// template).
+    pub fn total_ops(&self) -> usize {
+        self.rank_class
+            .iter()
+            .map(|&c| self.classes[c as usize].ops.len())
+            .sum()
+    }
+
+    /// Resolved name of one rank's op (labels are shared per class).
+    pub fn op_name(&self, rank: usize, op: usize) -> &str {
+        self.names.get(self.class_of(rank).ops[op].name)
+    }
+}
+
+/// Incremental [`ProgramSet`] construction.
+///
+/// Ranks are declared in order with [`ProgramSetBuilder::begin_rank`]; the
+/// first rank of each `class_key` builds the op templates (name closures
+/// are invoked, ops appended), every later rank of the same key only
+/// appends its `(tag, group)` bindings — so name formatting and op
+/// construction happen once per class, not once per rank.  Debug builds
+/// verify that later ranks replay exactly the template's op sequence.
+#[derive(Debug)]
+pub struct ProgramSetBuilder {
+    set: ProgramSet,
+    class_index: HashMap<u64, u32>,
+    cur_class: u32,
+    cur_building: bool,
+    cur_op: u32,
+    started: bool,
+}
+
+impl ProgramSetBuilder {
+    pub fn new(machine: &Machine) -> Self {
+        ProgramSetBuilder {
+            set: ProgramSet {
+                comm: CommWorld::new(),
+                names: NameTable::default(),
+                classes: Vec::new(),
+                rank_class: Vec::new(),
+                bindings: Vec::new(),
+                machine: machine.clone(),
+            },
+            class_index: HashMap::new(),
+            cur_class: 0,
+            cur_building: false,
+            cur_op: 0,
+            started: false,
+        }
+    }
+
+    /// Intern a communicator group (see [`CommWorld::register`]).
+    pub fn group(&mut self, members: Vec<usize>) -> GroupId {
+        let ProgramSet { comm, machine, .. } = &mut self.set;
+        comm.register(machine, members)
+    }
+
+    /// Start the next rank's program.  Ranks sharing a `class_key` share
+    /// one op-template; the key is opaque to the builder.
+    pub fn begin_rank(&mut self, class_key: u64) {
+        self.end_rank();
+        let n_classes = self.set.classes.len() as u32;
+        let class = *self.class_index.entry(class_key).or_insert(n_classes);
+        self.cur_building = class == n_classes;
+        if self.cur_building {
+            self.set.classes.push(ClassProgram::default());
+        }
+        self.cur_class = class;
+        self.cur_op = 0;
+        self.set.rank_class.push(class);
+        let slots = self.set.classes[class as usize].n_slots as usize;
+        self.set.bindings.push(Vec::with_capacity(slots));
+        self.started = true;
+    }
+
+    fn end_rank(&mut self) {
+        if !self.started {
+            return;
+        }
+        let cls = &mut self.set.classes[self.cur_class as usize];
+        if self.cur_building {
+            cls.n_slots = self.set.bindings.last().map(|b| b.len() as u32).unwrap_or(0);
+            for (i, op) in cls.ops.iter().enumerate() {
+                cls.stream_ops[op.stream.index()].push(i as u32);
+            }
+        } else {
+            assert_eq!(
+                self.cur_op as usize,
+                cls.ops.len(),
+                "rank replayed {} ops but its class template has {}",
+                self.cur_op,
+                cls.ops.len()
+            );
+            // release-active: a compute-for-collective swap at equal op
+            // count would misalign every later slot binding
+            let slots = self.set.bindings.last().map(|b| b.len() as u32).unwrap_or(0);
+            assert_eq!(
+                slots, cls.n_slots,
+                "rank bound {slots} collective slots but its class template has {}",
+                cls.n_slots
+            );
+        }
+    }
+
+    /// Whether the current rank is defining a new class template (callers
+    /// may skip work — e.g. name formatting — when it is not; the name
+    /// closures passed to the op methods are only invoked when this is
+    /// true).
+    pub fn building(&self) -> bool {
+        self.cur_building
+    }
+
+    fn push_template(
+        &mut self,
+        name: impl FnOnce() -> String,
+        kind: OpKind,
+        stream: Stream,
+        deps: Vec<u32>,
+    ) {
+        let name = self.set.names.intern(name());
+        self.set.classes[self.cur_class as usize]
+            .ops
+            .push(Op { name, kind, stream, deps });
+    }
+
+    #[cfg(debug_assertions)]
+    fn check_replay(&self, kind: &OpKind, stream: Stream, deps: &[u32]) {
+        // full-payload comparison: a rank whose flops/bytes/slot diverge
+        // from its class template would otherwise silently simulate the
+        // template rank's numbers
+        let t = &self.set.classes[self.cur_class as usize].ops[self.cur_op as usize];
+        debug_assert_eq!(t.kind, *kind, "op payload drifted from template");
+        debug_assert_eq!(t.stream, stream, "op stream drifted from template");
+        debug_assert_eq!(t.deps, deps, "op deps drifted from template");
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn check_replay(&self, _kind: &OpKind, _stream: Stream, _deps: &[u32]) {}
+
+    /// Append a compute op; returns its index for use in later deps.
+    pub fn compute(
+        &mut self,
+        name: impl FnOnce() -> String,
+        flops: f64,
+        min_dim: f64,
+        deps: Vec<u32>,
+    ) -> u32 {
+        let kind = OpKind::Compute { flops, min_dim };
+        if self.cur_building {
+            self.push_template(name, kind, Stream::Compute, deps);
+        } else {
+            self.check_replay(&kind, Stream::Compute, &deps);
+        }
+        let i = self.cur_op;
+        self.cur_op += 1;
+        i
+    }
+
+    fn collective(
+        &mut self,
+        name: impl FnOnce() -> String,
+        kind_of: impl FnOnce(f64, u32) -> OpKind,
+        tag: u64,
+        group: GroupId,
+        bytes: f64,
+        stream: Stream,
+        deps: Vec<u32>,
+    ) -> u32 {
+        let slot = self.set.bindings.last().expect("begin_rank first").len() as u32;
+        let kind = kind_of(bytes, slot);
+        if self.cur_building {
+            self.push_template(name, kind, stream, deps);
+        } else {
+            self.check_replay(&kind, stream, &deps);
+        }
+        self.set.bindings.last_mut().unwrap().push(Binding { tag, group });
+        let i = self.cur_op;
+        self.cur_op += 1;
+        i
+    }
+
+    pub fn all_reduce(
+        &mut self,
+        name: impl FnOnce() -> String,
+        tag: u64,
+        group: GroupId,
+        bytes: f64,
+        stream: Stream,
+        deps: Vec<u32>,
+    ) -> u32 {
+        let kind = |bytes, slot| OpKind::AllReduce { bytes, slot };
+        self.collective(name, kind, tag, group, bytes, stream, deps)
+    }
+
+    pub fn all_gather(
+        &mut self,
+        name: impl FnOnce() -> String,
+        tag: u64,
+        group: GroupId,
+        bytes: f64,
+        stream: Stream,
+        deps: Vec<u32>,
+    ) -> u32 {
+        let kind = |bytes, slot| OpKind::AllGather { bytes, slot };
+        self.collective(name, kind, tag, group, bytes, stream, deps)
+    }
+
+    pub fn reduce_scatter(
+        &mut self,
+        name: impl FnOnce() -> String,
+        tag: u64,
+        group: GroupId,
+        bytes: f64,
+        stream: Stream,
+        deps: Vec<u32>,
+    ) -> u32 {
+        let kind = |bytes, slot| OpKind::ReduceScatter { bytes, slot };
+        self.collective(name, kind, tag, group, bytes, stream, deps)
+    }
+
+    pub fn finish(mut self) -> ProgramSet {
+        self.end_rank();
+        self.set
     }
 }
 
@@ -164,19 +496,15 @@ struct CollectiveState {
     arrived: usize,
     group_size: usize,
     ready_time: f64,
-    members: Vec<OpRef>,
+    members: Vec<(u32, u32)>,
 }
 
 #[derive(PartialEq)]
 struct Event {
     time: f64,
     seq: u64,
-    what: EventKind,
-}
-
-#[derive(PartialEq)]
-enum EventKind {
-    OpDone(OpRef),
+    gpu: u32,
+    op: u32,
 }
 
 impl Eq for Event {}
@@ -189,6 +517,8 @@ impl PartialOrd for Event {
 
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // mirrors the reference engine: time, then issue sequence (times
+        // are finite by construction, so the unwrap_or is never taken)
         self.time
             .partial_cmp(&other.time)
             .unwrap_or(std::cmp::Ordering::Equal)
@@ -196,40 +526,63 @@ impl Ord for Event {
     }
 }
 
-/// Simulate one iteration of `programs` (one per GPU) on `machine`.
-pub fn simulate(machine: &Machine, programs: &[GpuProgram]) -> SimResult {
-    simulate_with_trace(machine, programs, false)
+/// Simulate one iteration of `set` on `machine`.
+pub fn simulate(machine: &Machine, set: &ProgramSet) -> SimResult {
+    simulate_with_trace(machine, set, false)
 }
 
-pub fn simulate_with_trace(
+pub fn simulate_with_trace(machine: &Machine, set: &ProgramSet, keep_spans: bool) -> SimResult {
+    let order: Vec<usize> = (0..set.world()).collect();
+    simulate_impl(machine, set, keep_spans, &order)
+}
+
+/// [`simulate`] with an explicit initial issue order over the GPUs (a
+/// permutation of `0..world`).
+///
+/// For the schedules the strategies emit — where consecutive collectives
+/// on one stream either share a communicator or are ordered through
+/// compute dependencies — results are invariant under the permutation
+/// (collective start times are maxima over member readiness and stream
+/// FIFOs are per-GPU), which `rust/tests/sim_golden.rs` checks
+/// property-style.  This is a property of those schedules, not of
+/// arbitrary programs: back-to-back dependency-free collectives into
+/// *disjoint* groups on one stream can legitimately overlap or serialize
+/// depending on arrival interleaving.
+pub fn simulate_permuted(machine: &Machine, set: &ProgramSet, order: &[usize]) -> SimResult {
+    let mut seen = vec![false; set.world()];
+    assert_eq!(order.len(), set.world(), "order must be a permutation of 0..world");
+    for &g in order {
+        assert!(g < seen.len() && !seen[g], "order must be a permutation of 0..world");
+        seen[g] = true;
+    }
+    simulate_impl(machine, set, false, order)
+}
+
+fn simulate_impl(
     machine: &Machine,
-    programs: &[GpuProgram],
+    set: &ProgramSet,
     keep_spans: bool,
+    initial_order: &[usize],
 ) -> SimResult {
-    let n = programs.len();
-    let mut done: Vec<Vec<bool>> = programs.iter().map(|p| vec![false; p.ops.len()]).collect();
-    let mut done_time: Vec<Vec<f64>> = programs.iter().map(|p| vec![0.0; p.ops.len()]).collect();
-    // next op index per (gpu, stream)
-    let mut next: Vec<HashMap<Stream, usize>> = (0..n)
-        .map(|_| Stream::ALL.iter().map(|s| (*s, 0usize)).collect())
-        .collect();
-    // per-stream FIFO order: precompute each stream's op index list
-    let stream_ops: Vec<HashMap<Stream, Vec<usize>>> = programs
-        .iter()
-        .map(|p| {
-            let mut m: HashMap<Stream, Vec<usize>> =
-                Stream::ALL.iter().map(|s| (*s, Vec::new())).collect();
-            for (i, op) in p.ops.iter().enumerate() {
-                m.get_mut(&op.stream).unwrap().push(i);
-            }
-            m
-        })
-        .collect();
-    let mut stream_free: Vec<HashMap<Stream, f64>> = (0..n)
-        .map(|_| Stream::ALL.iter().map(|s| (*s, 0.0f64)).collect())
-        .collect();
+    assert_eq!(
+        *machine, set.machine,
+        "ProgramSet was built for machine {:?} (parameters included): its interned ring \
+         parameters do not transfer to {:?} — rebuild the programs for that machine",
+        set.machine.name, machine.name
+    );
+    let n = set.world();
+    // per-rank class resolution, once
+    let classes: Vec<&ClassProgram> = (0..n).map(|g| set.class_of(g)).collect();
+    let mut done: Vec<Vec<bool>> = classes.iter().map(|c| vec![false; c.ops.len()]).collect();
+    let mut done_time: Vec<Vec<f64>> = classes.iter().map(|c| vec![0.0; c.ops.len()]).collect();
+    // next op position and free time per (gpu, stream): flat arrays, no
+    // hashing in the hot loop
+    let mut next: Vec<[usize; 3]> = vec![[0; 3]; n];
+    let mut stream_free: Vec<[f64; 3]> = vec![[0.0f64; 3]; n];
 
     let mut collectives: HashMap<u64, CollectiveState> = HashMap::new();
+    // recycled member lists: completing a collective returns its Vec here
+    let mut member_pool: Vec<Vec<(u32, u32)>> = Vec::new();
     let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
     let mut seq = 0u64;
     let mut spans = Vec::new();
@@ -242,50 +595,53 @@ pub fn simulate_with_trace(
     // pair after each event (O(events * world)), keep a worklist of GPUs
     // whose streams might have become issueable — a GPU is re-examined
     // only when one of its ops completes (dependencies are always
-    // same-GPU; collective completions enqueue OpDone for every member).
-    let mut worklist: Vec<usize> = (0..n).collect();
+    // same-GPU; collective completions enqueue a done event for every
+    // member).
+    let mut worklist: Vec<usize> = initial_order.to_vec();
     let mut queued: Vec<bool> = vec![true; n];
 
     macro_rules! try_issue_gpu {
         ($gpu:expr) => {{
             let gpu = $gpu;
+            let cls = classes[gpu];
             let mut progressed = true;
             while progressed {
                 progressed = false;
                 for stream in Stream::ALL {
-                    let idx_pos = next[gpu][&stream];
-                    let ops_in_stream = &stream_ops[gpu][&stream];
+                    let si = stream.index();
+                    let idx_pos = next[gpu][si];
+                    let ops_in_stream = &cls.stream_ops[si];
                     if idx_pos >= ops_in_stream.len() {
                         continue;
                     }
                     let op_i = ops_in_stream[idx_pos];
-                    let op = &programs[gpu].ops[op_i];
+                    let op = &cls.ops[op_i as usize];
                     // deps satisfied?
-                    let mut ready_at = stream_free[gpu][&stream].max(now);
+                    let mut ready_at = stream_free[gpu][si].max(now);
                     let mut ok = true;
-                    for &(dg, di) in &op.deps {
-                        if !done[dg][di] {
+                    for &di in &op.deps {
+                        if !done[gpu][di as usize] {
                             ok = false;
                             break;
                         }
-                        ready_at = ready_at.max(done_time[dg][di]);
+                        ready_at = ready_at.max(done_time[gpu][di as usize]);
                     }
                     if !ok {
                         continue;
                     }
-                    match &op.kind {
+                    match op.kind {
                         OpKind::Compute { flops, min_dim } => {
-                            let dur = machine.compute_time(*flops, *min_dim);
+                            let dur = machine.compute_time(flops, min_dim);
                             let start = ready_at;
                             let end = start + dur;
-                            *next[gpu].get_mut(&stream).unwrap() += 1;
-                            *stream_free[gpu].get_mut(&stream).unwrap() = end;
+                            next[gpu][si] += 1;
+                            stream_free[gpu][si] = end;
                             compute_busy[gpu] += dur;
                             if keep_spans {
                                 spans.push(Span {
                                     gpu,
                                     stream,
-                                    name: op.name.clone(),
+                                    name: set.names.get(op.name).to_string(),
                                     start,
                                     end,
                                     is_comm: false,
@@ -295,51 +651,54 @@ pub fn simulate_with_trace(
                             heap.push(Reverse(Event {
                                 time: end,
                                 seq,
-                                what: EventKind::OpDone((gpu, op_i)),
+                                gpu: gpu as u32,
+                                op: op_i,
                             }));
                             progressed = true;
                         }
                         kind => {
-                            let (tag, _bytes, group) =
+                            let (_bytes, slot) =
                                 kind.collective().expect("non-compute op must be a collective");
-                            let st = collectives.entry(tag).or_insert(CollectiveState {
-                                arrived: 0,
-                                group_size: group.len(),
-                                ready_time: 0.0,
-                                members: Vec::new(),
+                            let b = set.bindings[gpu][slot as usize];
+                            let info = set.comm.group(b.group);
+                            let st = collectives.entry(b.tag).or_insert_with(|| {
+                                CollectiveState {
+                                    arrived: 0,
+                                    group_size: info.size,
+                                    ready_time: 0.0,
+                                    members: member_pool.pop().unwrap_or_default(),
+                                }
                             });
                             st.arrived += 1;
                             st.ready_time = st.ready_time.max(ready_at);
-                            st.members.push((gpu, op_i));
-                            *next[gpu].get_mut(&stream).unwrap() += 1;
-                            comm_bytes[gpu] += kind.wire_bytes();
+                            st.members.push((gpu as u32, op_i));
+                            next[gpu][si] += 1;
+                            comm_bytes[gpu] += kind.wire_bytes(info.size);
                             if st.arrived == st.group_size {
-                                let per_node = machine.members_per_node(group);
-                                let dur = kind.collective_time(machine, per_node);
+                                let mut st = collectives.remove(&b.tag).unwrap();
+                                let dur = kind.collective_time_on(info.size, info.bw, info.lat);
                                 let start = st.ready_time;
                                 let end = start + dur;
-                                for &(mg, mi) in &st.members.clone() {
-                                    let mstream = programs[mg].ops[mi].stream;
-                                    *stream_free[mg].get_mut(&mstream).unwrap() = end;
-                                    comm_busy[mg] += dur;
+                                for &(mg, mi) in &st.members {
+                                    let mgu = mg as usize;
+                                    let mop = &classes[mgu].ops[mi as usize];
+                                    stream_free[mgu][mop.stream.index()] = end;
+                                    comm_busy[mgu] += dur;
                                     if keep_spans {
                                         spans.push(Span {
-                                            gpu: mg,
-                                            stream: mstream,
-                                            name: programs[mg].ops[mi].name.clone(),
+                                            gpu: mgu,
+                                            stream: mop.stream,
+                                            name: set.names.get(mop.name).to_string(),
                                             start,
                                             end,
                                             is_comm: true,
                                         });
                                     }
                                     seq += 1;
-                                    heap.push(Reverse(Event {
-                                        time: end,
-                                        seq,
-                                        what: EventKind::OpDone((mg, mi)),
-                                    }));
+                                    heap.push(Reverse(Event { time: end, seq, gpu: mg, op: mi }));
                                 }
-                                collectives.remove(&tag);
+                                st.members.clear();
+                                member_pool.push(st.members);
                             }
                             progressed = true;
                         }
@@ -355,16 +714,12 @@ pub fn simulate_with_trace(
     }
     while let Some(Reverse(ev)) = heap.pop() {
         now = ev.time;
-        // drain all events at this timestamp, then issue once per touched gpu
-        match ev.what {
-            EventKind::OpDone((g, i)) => {
-                done[g][i] = true;
-                done_time[g][i] = now;
-                if !queued[g] {
-                    queued[g] = true;
-                    worklist.push(g);
-                }
-            }
+        let (g, i) = (ev.gpu as usize, ev.op as usize);
+        done[g][i] = true;
+        done_time[g][i] = now;
+        if !queued[g] {
+            queued[g] = true;
+            worklist.push(g);
         }
         while let Some(g) = worklist.pop() {
             queued[g] = false;
@@ -375,11 +730,7 @@ pub fn simulate_with_trace(
     // sanity: everything must have run (deadlock check)
     for (g, d) in done.iter().enumerate() {
         for (i, ok) in d.iter().enumerate() {
-            assert!(
-                *ok,
-                "deadlock: gpu {g} op {i} ({}) never ran",
-                programs[g].ops[i].name
-            );
+            assert!(*ok, "deadlock: gpu {g} op {i} ({}) never ran", set.op_name(g, i));
         }
     }
 
@@ -403,49 +754,67 @@ mod tests {
         Machine::perlmutter()
     }
 
-    fn compute(name: &str, flops: f64, deps: Vec<OpRef>) -> Op {
-        Op {
-            name: name.into(),
-            kind: OpKind::Compute { flops, min_dim: 1e9 },
-            stream: Stream::Compute,
-            deps,
+    /// Per-rank test-program builder: every rank gets its own class.
+    struct T {
+        b: ProgramSetBuilder,
+        rank: u64,
+    }
+
+    impl T {
+        fn new(m: &Machine) -> T {
+            T { b: ProgramSetBuilder::new(m), rank: 0 }
+        }
+
+        fn rank(&mut self) -> &mut ProgramSetBuilder {
+            self.b.begin_rank(self.rank);
+            self.rank += 1;
+            &mut self.b
+        }
+
+        fn finish(self) -> ProgramSet {
+            self.b.finish()
         }
     }
 
-    fn ar(name: &str, tag: u64, bytes: f64, group: Vec<usize>, deps: Vec<OpRef>) -> Op {
-        Op {
-            name: name.into(),
-            kind: OpKind::AllReduce { tag, bytes, group },
-            stream: Stream::Comm,
-            deps,
-        }
+    fn compute(b: &mut ProgramSetBuilder, name: &str, flops: f64, deps: Vec<u32>) -> u32 {
+        let n = name.to_string();
+        b.compute(move || n, flops, 1e9, deps)
+    }
+
+    fn ar(
+        b: &mut ProgramSetBuilder,
+        name: &str,
+        tag: u64,
+        bytes: f64,
+        group: Vec<usize>,
+        deps: Vec<u32>,
+    ) -> u32 {
+        let g = b.group(group);
+        let n = name.to_string();
+        b.all_reduce(move || n, tag, g, bytes, Stream::Comm, deps)
     }
 
     #[test]
     fn single_gpu_sequential_compute() {
         let m = machine();
-        let mut p = GpuProgram::default();
-        p.push(compute("a", 312e12 * 0.62, vec![])); // ~1s at full eff
-        p.push(compute("b", 312e12 * 0.62, vec![]));
-        let r = simulate(&m, &[p]);
+        let mut t = T::new(&m);
+        let b = t.rank();
+        compute(b, "a", 312e12 * 0.62, vec![]); // ~1s at full eff
+        compute(b, "b", 312e12 * 0.62, vec![]);
+        let r = simulate(&m, &t.finish());
         assert!((r.makespan - 2.0).abs() < 0.02, "{}", r.makespan);
     }
 
     #[test]
     fn collective_rendezvous_synchronizes() {
         let m = machine();
-        let mk = |flops: f64| {
-            let mut p = GpuProgram::default();
-            let c = p.push(compute("w", flops, vec![]));
-            p.push(ar("ar", 1, 1e9, vec![0, 1], vec![(usize::MAX, c)]));
-            p
-        };
-        // fix deps to self-gpu refs
-        let mut p0 = mk(1e12);
-        let mut p1 = mk(4e12);
-        p0.ops[1].deps = vec![(0, 0)];
-        p1.ops[1].deps = vec![(1, 0)];
-        let r = simulate(&m, &[p0, p1]);
+        let mut t = T::new(&m);
+        for flops in [1e12, 4e12] {
+            let b = t.rank();
+            let c = compute(b, "w", flops, vec![]);
+            ar(b, "ar", 1, 1e9, vec![0, 1], vec![c]);
+        }
+        let r = simulate(&m, &t.finish());
         // AR starts only when BOTH computes finish
         let t_fast = m.compute_time(1e12, 1e9);
         let t_slow = m.compute_time(4e12, 1e9);
@@ -458,19 +827,15 @@ mod tests {
     fn overlap_hides_comm_under_independent_compute() {
         // The §4.2 pattern: shard A's AR runs while shard B computes.
         let m = machine();
-        let mut p0 = GpuProgram::default();
-        let a = p0.push(compute("A.mm", 1e13, vec![]));
-        let ar_a = p0.push(ar("A.ar", 7, 2e9, vec![0, 1], vec![(0, a)]));
-        let b = p0.push(compute("B.mm", 1e13, vec![(0, a)])); // indep of A's AR
-        let _ = p0.push(compute("A.next", 1e13, vec![(0, ar_a)]));
-        let _ = b;
-        let mut p1 = p0.clone();
-        for op in p1.ops.iter_mut() {
-            for d in op.deps.iter_mut() {
-                d.0 = 1;
-            }
+        let mut t = T::new(&m);
+        for _ in 0..2 {
+            let b = t.rank();
+            let a = compute(b, "A.mm", 1e13, vec![]);
+            let ar_a = ar(b, "A.ar", 7, 2e9, vec![0, 1], vec![a]);
+            let _b = compute(b, "B.mm", 1e13, vec![a]); // indep of A's AR
+            compute(b, "A.next", 1e13, vec![ar_a]);
         }
-        let r = simulate(&m, &[p0, p1]);
+        let r = simulate(&m, &t.finish());
         let t_mm = m.compute_time(1e13, 1e9);
         let t_ar = m.allreduce_time(2e9, 2, 4);
         assert!(t_ar < t_mm, "test premise: AR fits under one matmul");
@@ -488,14 +853,14 @@ mod tests {
     fn sync_schedule_exposes_comm() {
         // Megatron-style: next compute depends on the AR.
         let m = machine();
-        let mk = |gpu: usize| {
-            let mut p = GpuProgram::default();
-            let a = p.push(compute("mm", 1e13, vec![]));
-            let r = p.push(ar("ar", 3, 2e9, vec![0, 1], vec![(gpu, a)]));
-            p.push(compute("mm2", 1e13, vec![(gpu, r)]));
-            p
-        };
-        let r = simulate(&m, &[mk(0), mk(1)]);
+        let mut t = T::new(&m);
+        for _ in 0..2 {
+            let b = t.rank();
+            let a = compute(b, "mm", 1e13, vec![]);
+            let r = ar(b, "ar", 3, 2e9, vec![0, 1], vec![a]);
+            compute(b, "mm2", 1e13, vec![r]);
+        }
+        let r = simulate(&m, &t.finish());
         let t_mm = m.compute_time(1e13, 1e9);
         let t_ar = m.allreduce_time(2e9, 2, 4);
         assert!((r.makespan - (2.0 * t_mm + t_ar)).abs() < 1e-9);
@@ -507,14 +872,13 @@ mod tests {
         // Two ARs enqueued in order on the same comm stream serialize even
         // if both are ready.
         let m = machine();
-        let mk = |gpu: usize| {
-            let mut p = GpuProgram::default();
-            p.push(ar("ar1", 10, 1e9, vec![0, 1], vec![]));
-            p.push(ar("ar2", 11, 1e9, vec![0, 1], vec![]));
-            let _ = gpu;
-            p
-        };
-        let r = simulate(&m, &[mk(0), mk(1)]);
+        let mut t = T::new(&m);
+        for _ in 0..2 {
+            let b = t.rank();
+            ar(b, "ar1", 10, 1e9, vec![0, 1], vec![]);
+            ar(b, "ar2", 11, 1e9, vec![0, 1], vec![]);
+        }
+        let r = simulate(&m, &t.finish());
         let t_ar = m.allreduce_time(1e9, 2, 4);
         assert!((r.makespan - 2.0 * t_ar).abs() < 1e-9, "{}", r.makespan);
     }
@@ -523,22 +887,12 @@ mod tests {
     #[should_panic(expected = "deadlock")]
     fn deadlock_detected() {
         let m = machine();
-        let mut p = GpuProgram::default();
-        // op depends on itself-ish (on an op that never runs: dep on index 1
-        // which depends on index 0)
-        p.push(Op {
-            name: "x".into(),
-            kind: OpKind::Compute { flops: 1.0, min_dim: 1.0 },
-            stream: Stream::Compute,
-            deps: vec![(0, 1)],
-        });
-        p.push(Op {
-            name: "y".into(),
-            kind: OpKind::Compute { flops: 1.0, min_dim: 1.0 },
-            stream: Stream::Compute,
-            deps: vec![(0, 0)],
-        });
-        simulate(&m, &[p]);
+        let mut t = T::new(&m);
+        let b = t.rank();
+        // x depends on y which depends on x: neither ever runs
+        compute(b, "x", 1.0, vec![1]);
+        compute(b, "y", 1.0, vec![0]);
+        simulate(&m, &t.finish());
     }
 
     #[test]
@@ -547,18 +901,14 @@ mod tests {
         // stream, both ready at t=0, must run concurrently (makespan = max,
         // not sum) — the property the sharded-state schedule depends on.
         let m = machine();
-        let mk = |_gpu: usize| {
-            let mut p = GpuProgram::default();
-            p.push(ar("tp-ar", 40, 1e9, vec![0, 1], vec![]));
-            p.push(Op {
-                name: "wgather".into(),
-                kind: OpKind::AllGather { tag: 41, bytes: 1e9, group: vec![0, 1] },
-                stream: Stream::CommDp,
-                deps: vec![],
-            });
-            p
-        };
-        let r = simulate(&m, &[mk(0), mk(1)]);
+        let mut t = T::new(&m);
+        for _ in 0..2 {
+            let b = t.rank();
+            ar(b, "tp-ar", 40, 1e9, vec![0, 1], vec![]);
+            let g = b.group(vec![0, 1]);
+            b.all_gather(|| "wgather".into(), 41, g, 1e9, Stream::CommDp, vec![]);
+        }
+        let r = simulate(&m, &t.finish());
         let t_ar = m.allreduce_time(1e9, 2, 4);
         let t_ag = m.allgather_time(1e9, 2, 4);
         assert!((r.makespan - t_ar.max(t_ag)).abs() < 1e-12, "{}", r.makespan);
@@ -567,23 +917,14 @@ mod tests {
     #[test]
     fn reduce_scatter_plus_allgather_timed_as_one_allreduce() {
         let m = machine();
-        let mk = |gpu: usize| {
-            let mut p = GpuProgram::default();
-            let rs = p.push(Op {
-                name: "rs".into(),
-                kind: OpKind::ReduceScatter { tag: 50, bytes: 2e9, group: vec![0, 1, 2, 3] },
-                stream: Stream::CommDp,
-                deps: vec![],
-            });
-            p.push(Op {
-                name: "ag".into(),
-                kind: OpKind::AllGather { tag: 51, bytes: 2e9, group: vec![0, 1, 2, 3] },
-                stream: Stream::CommDp,
-                deps: vec![(gpu, rs)],
-            });
-            p
-        };
-        let r = simulate(&m, &[mk(0), mk(1), mk(2), mk(3)]);
+        let mut t = T::new(&m);
+        for _ in 0..4 {
+            let b = t.rank();
+            let g = b.group(vec![0, 1, 2, 3]);
+            let rs = b.reduce_scatter(|| "rs".into(), 50, g, 2e9, Stream::CommDp, vec![]);
+            b.all_gather(|| "ag".into(), 51, g, 2e9, Stream::CommDp, vec![rs]);
+        }
+        let r = simulate(&m, &t.finish());
         let t_ar = m.allreduce_time(2e9, 4, 4);
         assert!((r.makespan - t_ar).abs() <= 1e-12 * t_ar, "{} vs {t_ar}", r.makespan);
         // wire accounting: each half moves (p-1)/p * bytes per GPU
@@ -595,14 +936,56 @@ mod tests {
     #[test]
     fn comm_bytes_accounting_matches_eq1() {
         let m = machine();
-        let mk = |_gpu: usize| {
-            let mut p = GpuProgram::default();
-            p.push(ar("ar", 20, 1000.0, vec![0, 1, 2, 3], vec![]));
-            p
-        };
-        let r = simulate(&m, &[mk(0), mk(1), mk(2), mk(3)]);
+        let mut t = T::new(&m);
+        for _ in 0..4 {
+            let b = t.rank();
+            ar(b, "ar", 20, 1000.0, vec![0, 1, 2, 3], vec![]);
+        }
+        let r = simulate(&m, &t.finish());
         for g in 0..4 {
             assert!((r.comm_bytes[g] - 2.0 * 0.75 * 1000.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn spmd_ranks_share_one_template() {
+        // 8 SPMD ranks declared under one class key: one template, one
+        // interned name set, per-rank bindings only.
+        let m = machine();
+        let mut b = ProgramSetBuilder::new(&m);
+        for rank in 0..8usize {
+            b.begin_rank(0);
+            let pair = vec![rank & !1, rank | 1];
+            let g = b.group(pair);
+            let c = b.compute(|| "mm".into(), 1e12, 1e9, vec![]);
+            b.all_reduce(|| "ar".into(), (rank / 2) as u64, g, 1e9, Stream::Comm, vec![c]);
+        }
+        let set = b.finish();
+        assert_eq!(set.classes.len(), 1);
+        assert_eq!(set.world(), 8);
+        assert_eq!(set.total_ops(), 16);
+        assert_eq!(set.names.len(), 2, "names are interned once per class");
+        assert_eq!(set.comm.len(), 4, "four distinct pair communicators");
+        for rank in 0..8 {
+            assert_eq!(set.bindings[rank].len(), 1);
+        }
+        let r = simulate(&m, &set);
+        let want = m.compute_time(1e12, 1e9) + m.allreduce_time(1e9, 2, 2);
+        assert!((r.makespan - want).abs() < 1e-12, "{} vs {want}", r.makespan);
+    }
+
+    #[test]
+    fn trace_spans_resolve_interned_names() {
+        let m = machine();
+        let mut t = T::new(&m);
+        let b = t.rank();
+        compute(b, "s0.mm", 1e12, vec![]);
+        let set = t.finish();
+        let r = simulate_with_trace(&m, &set, true);
+        assert_eq!(r.spans.len(), 1);
+        assert_eq!(r.spans[0].name, "s0.mm");
+        // span-free runs don't format anything
+        let r2 = simulate(&m, &set);
+        assert!(r2.spans.is_empty());
     }
 }

@@ -4,10 +4,14 @@
 //! Parameters follow §6: Perlmutter nodes have 4x A100-40GB and 4x
 //! Slingshot-11 NICs (200 Gb/s each); Polaris nodes have 4x A100-40GB and
 //! 2x Slingshot-10 NICs (100 Gb/s each).  A100 peak half-precision
-//! throughput is 312 Tflop/s.
+//! throughput is 312 Tflop/s.  The `frontier` preset models the OLCF
+//! Frontier nodes of the follow-up work scaling open-source LLM training
+//! to supercomputers (arXiv:2502.08145): 4x MI250X per node where each
+//! MI250X exposes two GCDs — so 8 addressable "GPUs" per node — plus 4x
+//! Slingshot-11 NICs.
 
 /// A homogeneous GPU cluster.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Machine {
     pub name: String,
     pub gpus_per_node: usize,
@@ -65,10 +69,31 @@ impl Machine {
         }
     }
 
+    /// OLCF Frontier (arXiv:2502.08145): 4x MI250X per node, each exposing
+    /// 2 GCDs that software addresses as independent GPUs (8 "GPUs"/node,
+    /// 64 GB HBM2e and ~191.5 Tflop/s peak fp16 each), linked in-node by
+    /// Infinity Fabric and across nodes by 4x Slingshot-11 (200 Gb/s).
+    pub fn frontier() -> Machine {
+        Machine {
+            name: "frontier".into(),
+            gpus_per_node: 8,
+            peak_flops: 191.5e12,
+            mem_bytes: 64e9,
+            intra_bw: 100e9, // Infinity Fabric GCD-to-GCD effective
+            intra_lat_s: 2e-6,
+            inter_bw_per_node: 4.0 * 25e9, // 4x Slingshot-11 @ 200 Gb/s
+            nic_bw: 25e9,
+            inter_lat_s: 4e-6,
+            gemm_eff_max: 0.55,
+            gemm_eff_halfdim: 96.0,
+        }
+    }
+
     pub fn by_name(name: &str) -> Option<Machine> {
         match name {
             "perlmutter" => Some(Machine::perlmutter()),
             "polaris" => Some(Machine::polaris()),
+            "frontier" => Some(Machine::frontier()),
             _ => None,
         }
     }
@@ -101,12 +126,20 @@ impl Machine {
     /// `inter_bw_per_node * per_node / gpus_per_node`.
     /// Latency term: `2(p-1)` hops.
     pub fn allreduce_time(&self, bytes: f64, p: usize, per_node: usize) -> f64 {
+        let (bw, lat) = self.ring_bw_lat(p, per_node);
+        Machine::allreduce_time_on(bytes, p, bw, lat)
+    }
+
+    /// [`Machine::allreduce_time`] with the ring parameters already in
+    /// hand — the engine calls this with the `(bw, lat)` a
+    /// [`super::CommWorld`] precomputed at group registration, so the two
+    /// paths are bit-for-bit identical by construction.
+    pub fn allreduce_time_on(bytes: f64, p: usize, bw: f64, lat: f64) -> f64 {
         if p <= 1 || bytes <= 0.0 {
             return 0.0;
         }
         let pf = p as f64;
         let ring_bytes = 2.0 * (pf - 1.0) / pf * bytes;
-        let (bw, lat) = self.ring_bw_lat(p, per_node);
         ring_bytes / bw + 2.0 * (pf - 1.0) * lat
     }
 
@@ -115,12 +148,18 @@ impl Machine {
     /// per GPU in `p-1` latency hops — exactly half an all-reduce, which
     /// is why the depth-sharded schedule can hide each half separately.
     pub fn allgather_time(&self, bytes: f64, p: usize, per_node: usize) -> f64 {
+        let (bw, lat) = self.ring_bw_lat(p, per_node);
+        Machine::allgather_time_on(bytes, p, bw, lat)
+    }
+
+    /// [`Machine::allgather_time`] on precomputed ring parameters (see
+    /// [`Machine::allreduce_time_on`]).
+    pub fn allgather_time_on(bytes: f64, p: usize, bw: f64, lat: f64) -> f64 {
         if p <= 1 || bytes <= 0.0 {
             return 0.0;
         }
         let pf = p as f64;
         let ring_bytes = (pf - 1.0) / pf * bytes;
-        let (bw, lat) = self.ring_bw_lat(p, per_node);
         ring_bytes / bw + (pf - 1.0) * lat
     }
 
@@ -131,10 +170,16 @@ impl Machine {
         self.allgather_time(bytes, p, per_node)
     }
 
+    /// [`Machine::reduce_scatter_time`] on precomputed ring parameters.
+    pub fn reduce_scatter_time_on(bytes: f64, p: usize, bw: f64, lat: f64) -> f64 {
+        Machine::allgather_time_on(bytes, p, bw, lat)
+    }
+
     /// Bottleneck bandwidth and per-hop latency of one ring over this
     /// group shape (see [`Machine::allreduce_time`] for the sharing
-    /// rationale).
-    fn ring_bw_lat(&self, p: usize, per_node: usize) -> (f64, f64) {
+    /// rationale).  Public so [`super::CommWorld`] can precompute it once
+    /// per communicator at registration.
+    pub fn ring_bw_lat(&self, p: usize, per_node: usize) -> (f64, f64) {
         if per_node >= p {
             (self.intra_bw, self.intra_lat_s)
         } else {
@@ -169,6 +214,51 @@ mod tests {
         let q = Machine::polaris();
         assert_eq!(q.inter_bw_per_node, 25e9);
         assert!(Machine::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn frontier_preset_models_mi250x_nodes() {
+        let f = Machine::by_name("frontier").unwrap();
+        // 4x MI250X = 8 GCDs addressed as GPUs, 64 GB HBM2e each
+        assert_eq!(f.gpus_per_node, 8);
+        assert_eq!(f.mem_bytes, 64e9);
+        assert_eq!(f.peak_flops, 191.5e12);
+        // 4x Slingshot-11: same injection bandwidth as Perlmutter, but
+        // shared by twice the GPUs — a node-local 8-group rides Infinity
+        // Fabric, while one 8-GCD-spanning ring per node is NIC-capped.
+        assert_eq!(f.inter_bw_per_node, 100e9);
+        let node_local = f.allreduce_time(1e9, 8, 8);
+        let cross_node = f.allreduce_time(1e9, 16, 8);
+        assert!(node_local < cross_node, "{node_local} vs {cross_node}");
+        // a strided group (one member per node) gets 1/8 of the injection
+        // bandwidth, capped below a single NIC
+        let (bw_strided, _) = f.ring_bw_lat(4, 1);
+        assert_eq!(bw_strided, 100e9 / 8.0);
+        // more memory per GCD than an A100-40GB: the planner can admit a
+        // smaller g_tensor for the same model
+        assert!(f.mem_bytes > Machine::perlmutter().mem_bytes);
+    }
+
+    #[test]
+    fn time_on_matches_time_with_per_node() {
+        // the precomputed-parameter entry points the engine uses must be
+        // bit-for-bit the member functions
+        let m = Machine::polaris();
+        for (bytes, p, per_node) in [(1e9, 4, 4), (1e9, 8, 4), (3e8, 16, 2), (1e9, 1, 1)] {
+            let (bw, lat) = m.ring_bw_lat(p, per_node);
+            assert_eq!(
+                m.allreduce_time(bytes, p, per_node).to_bits(),
+                Machine::allreduce_time_on(bytes, p, bw, lat).to_bits()
+            );
+            assert_eq!(
+                m.allgather_time(bytes, p, per_node).to_bits(),
+                Machine::allgather_time_on(bytes, p, bw, lat).to_bits()
+            );
+            assert_eq!(
+                m.reduce_scatter_time(bytes, p, per_node).to_bits(),
+                Machine::reduce_scatter_time_on(bytes, p, bw, lat).to_bits()
+            );
+        }
     }
 
     #[test]

@@ -1,16 +1,28 @@
 //! Discrete-event cluster simulator.
 //!
-//! Replays the paper's 32–256-GPU Perlmutter/Polaris experiments on a
-//! laptop: [`machine`] models the hardware (A100 flops, NVLink/Slingshot
-//! bandwidths, GEMM-efficiency curve), [`engine`] executes per-GPU op
-//! programs with CUDA-stream semantics and rendezvous collectives, and
-//! [`trace`] renders Chrome-trace JSON + the Fig.-4 ASCII timeline.
-//! Strategies (rust/src/strategies/) compile a (network, mesh, machine)
-//! triple into the per-GPU programs this module runs.
+//! Replays the paper's 32–1024-GPU Perlmutter/Polaris experiments on a
+//! laptop: [`machine`] models the hardware (A100/MI250X flops,
+//! NVLink/Slingshot bandwidths, GEMM-efficiency curve), [`comm_world`]
+//! interns every communicator group once with its ring cost parameters
+//! precomputed, [`engine`] executes deduplicated per-GPU op programs with
+//! CUDA-stream semantics and rendezvous collectives, and [`trace`]
+//! renders Chrome-trace JSON + the Fig.-4 ASCII timeline.  Strategies
+//! (rust/src/strategies/) compile a (network, mesh, machine) triple into
+//! the [`engine::ProgramSet`] this module runs.
+//!
+//! [`reference`] preserves the pre-refactor engine verbatim; the golden
+//! test (rust/tests/sim_golden.rs) pins the production engine against it
+//! bit for bit.
 
+pub mod comm_world;
 pub mod engine;
 pub mod machine;
+pub mod reference;
 pub mod trace;
 
-pub use engine::{simulate, simulate_with_trace, GpuProgram, Op, OpKind, SimResult, Stream};
+pub use comm_world::{CommWorld, GroupId, GroupInfo};
+pub use engine::{
+    simulate, simulate_permuted, simulate_with_trace, Op, OpKind, ProgramSet, ProgramSetBuilder,
+    SimResult, Stream,
+};
 pub use machine::Machine;

@@ -1,0 +1,344 @@
+//! The pre-refactor discrete-event engine, kept verbatim as a golden
+//! reference.
+//!
+//! This is the event loop exactly as it stood before the paper-scale
+//! refactor (interned communicators, array-indexed per-stream state, lazy
+//! names, deduplicated SPMD templates): per-op `Vec<usize>` communicator
+//! groups, `HashMap<Stream, _>` per-GPU state, `members_per_node`
+//! recomputed from scratch at every collective completion.  It is O(world
+//! × ops × group size) in memory and allocation count, which is why the
+//! hot path moved to [`super::engine`] — but it is *semantically* the
+//! specification: `rust/tests/sim_golden.rs` materializes every
+//! production [`super::engine::ProgramSet`] into this representation and
+//! asserts the two engines agree on makespans and per-GPU accounting
+//! **bit for bit**.
+//!
+//! Do not optimize this module; its value is that it does not change.
+
+use super::machine::Machine;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+pub use super::engine::Stream;
+
+/// Global op identifier: (gpu, index in that GPU's program).
+pub type OpRef = (usize, usize);
+
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    Compute { flops: f64, min_dim: f64 },
+    AllReduce { tag: u64, bytes: f64, group: Vec<usize> },
+    AllGather { tag: u64, bytes: f64, group: Vec<usize> },
+    ReduceScatter { tag: u64, bytes: f64, group: Vec<usize> },
+}
+
+impl OpKind {
+    pub fn collective(&self) -> Option<(u64, f64, &[usize])> {
+        match self {
+            OpKind::Compute { .. } => None,
+            OpKind::AllReduce { tag, bytes, group }
+            | OpKind::AllGather { tag, bytes, group }
+            | OpKind::ReduceScatter { tag, bytes, group } => Some((*tag, *bytes, group)),
+        }
+    }
+
+    pub fn wire_bytes(&self) -> f64 {
+        match self {
+            OpKind::Compute { .. } => 0.0,
+            OpKind::AllReduce { bytes, group, .. } => {
+                let p = group.len() as f64;
+                2.0 * (p - 1.0) / p * bytes
+            }
+            OpKind::AllGather { bytes, group, .. } | OpKind::ReduceScatter { bytes, group, .. } => {
+                let p = group.len() as f64;
+                (p - 1.0) / p * bytes
+            }
+        }
+    }
+
+    pub fn collective_time(&self, machine: &Machine, per_node: usize) -> f64 {
+        match self {
+            OpKind::Compute { .. } => 0.0,
+            OpKind::AllReduce { bytes, group, .. } => {
+                machine.allreduce_time(*bytes, group.len(), per_node)
+            }
+            OpKind::AllGather { bytes, group, .. } => {
+                machine.allgather_time(*bytes, group.len(), per_node)
+            }
+            OpKind::ReduceScatter { bytes, group, .. } => {
+                machine.reduce_scatter_time(*bytes, group.len(), per_node)
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+    pub stream: Stream,
+    pub deps: Vec<OpRef>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct GpuProgram {
+    pub ops: Vec<Op>,
+}
+
+/// Per-GPU execution summary of the reference engine (the accounting
+/// fields of [`super::engine::SimResult`], span-free).
+#[derive(Debug)]
+pub struct RefResult {
+    pub makespan: f64,
+    pub compute_busy: Vec<f64>,
+    pub comm_busy: Vec<f64>,
+    pub comm_bytes: Vec<f64>,
+}
+
+struct CollectiveState {
+    arrived: usize,
+    group_size: usize,
+    ready_time: f64,
+    members: Vec<OpRef>,
+}
+
+#[derive(PartialEq)]
+struct Event {
+    time: f64,
+    seq: u64,
+    what: EventKind,
+}
+
+#[derive(PartialEq)]
+enum EventKind {
+    OpDone(OpRef),
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Simulate one iteration of `programs` (one per GPU) on `machine` — the
+/// pre-refactor event loop, unmodified.
+pub fn simulate(machine: &Machine, programs: &[GpuProgram]) -> RefResult {
+    let n = programs.len();
+    let mut done: Vec<Vec<bool>> = programs.iter().map(|p| vec![false; p.ops.len()]).collect();
+    let mut done_time: Vec<Vec<f64>> = programs.iter().map(|p| vec![0.0; p.ops.len()]).collect();
+    // next op index per (gpu, stream)
+    let mut next: Vec<HashMap<Stream, usize>> = (0..n)
+        .map(|_| Stream::ALL.iter().map(|s| (*s, 0usize)).collect())
+        .collect();
+    // per-stream FIFO order: precompute each stream's op index list
+    let stream_ops: Vec<HashMap<Stream, Vec<usize>>> = programs
+        .iter()
+        .map(|p| {
+            let mut m: HashMap<Stream, Vec<usize>> =
+                Stream::ALL.iter().map(|s| (*s, Vec::new())).collect();
+            for (i, op) in p.ops.iter().enumerate() {
+                m.get_mut(&op.stream).unwrap().push(i);
+            }
+            m
+        })
+        .collect();
+    let mut stream_free: Vec<HashMap<Stream, f64>> = (0..n)
+        .map(|_| Stream::ALL.iter().map(|s| (*s, 0.0f64)).collect())
+        .collect();
+
+    let mut collectives: HashMap<u64, CollectiveState> = HashMap::new();
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut compute_busy = vec![0.0; n];
+    let mut comm_busy = vec![0.0; n];
+    let mut comm_bytes = vec![0.0; n];
+    let mut now = 0.0f64;
+
+    let mut worklist: Vec<usize> = (0..n).collect();
+    let mut queued: Vec<bool> = vec![true; n];
+
+    macro_rules! try_issue_gpu {
+        ($gpu:expr) => {{
+            let gpu = $gpu;
+            let mut progressed = true;
+            while progressed {
+                progressed = false;
+                for stream in Stream::ALL {
+                    let idx_pos = next[gpu][&stream];
+                    let ops_in_stream = &stream_ops[gpu][&stream];
+                    if idx_pos >= ops_in_stream.len() {
+                        continue;
+                    }
+                    let op_i = ops_in_stream[idx_pos];
+                    let op = &programs[gpu].ops[op_i];
+                    // deps satisfied?
+                    let mut ready_at = stream_free[gpu][&stream].max(now);
+                    let mut ok = true;
+                    for &(dg, di) in &op.deps {
+                        if !done[dg][di] {
+                            ok = false;
+                            break;
+                        }
+                        ready_at = ready_at.max(done_time[dg][di]);
+                    }
+                    if !ok {
+                        continue;
+                    }
+                    match &op.kind {
+                        OpKind::Compute { flops, min_dim } => {
+                            let dur = machine.compute_time(*flops, *min_dim);
+                            let start = ready_at;
+                            let end = start + dur;
+                            *next[gpu].get_mut(&stream).unwrap() += 1;
+                            *stream_free[gpu].get_mut(&stream).unwrap() = end;
+                            compute_busy[gpu] += dur;
+                            seq += 1;
+                            heap.push(Reverse(Event {
+                                time: end,
+                                seq,
+                                what: EventKind::OpDone((gpu, op_i)),
+                            }));
+                            progressed = true;
+                        }
+                        kind => {
+                            let (tag, _bytes, group) =
+                                kind.collective().expect("non-compute op must be a collective");
+                            let st = collectives.entry(tag).or_insert(CollectiveState {
+                                arrived: 0,
+                                group_size: group.len(),
+                                ready_time: 0.0,
+                                members: Vec::new(),
+                            });
+                            st.arrived += 1;
+                            st.ready_time = st.ready_time.max(ready_at);
+                            st.members.push((gpu, op_i));
+                            *next[gpu].get_mut(&stream).unwrap() += 1;
+                            comm_bytes[gpu] += kind.wire_bytes();
+                            if st.arrived == st.group_size {
+                                let per_node = machine.members_per_node(group);
+                                let dur = kind.collective_time(machine, per_node);
+                                let start = st.ready_time;
+                                let end = start + dur;
+                                for &(mg, mi) in &st.members.clone() {
+                                    let mstream = programs[mg].ops[mi].stream;
+                                    *stream_free[mg].get_mut(&mstream).unwrap() = end;
+                                    comm_busy[mg] += dur;
+                                    seq += 1;
+                                    heap.push(Reverse(Event {
+                                        time: end,
+                                        seq,
+                                        what: EventKind::OpDone((mg, mi)),
+                                    }));
+                                }
+                                collectives.remove(&tag);
+                            }
+                            progressed = true;
+                        }
+                    }
+                }
+            }
+        }};
+    }
+
+    while let Some(g) = worklist.pop() {
+        queued[g] = false;
+        try_issue_gpu!(g);
+    }
+    while let Some(Reverse(ev)) = heap.pop() {
+        now = ev.time;
+        match ev.what {
+            EventKind::OpDone((g, i)) => {
+                done[g][i] = true;
+                done_time[g][i] = now;
+                if !queued[g] {
+                    queued[g] = true;
+                    worklist.push(g);
+                }
+            }
+        }
+        while let Some(g) = worklist.pop() {
+            queued[g] = false;
+            try_issue_gpu!(g);
+        }
+    }
+
+    for (g, d) in done.iter().enumerate() {
+        for (i, ok) in d.iter().enumerate() {
+            assert!(
+                *ok,
+                "deadlock: gpu {g} op {i} ({}) never ran",
+                programs[g].ops[i].name
+            );
+        }
+    }
+
+    let makespan = done_time
+        .iter()
+        .flat_map(|v| v.iter().copied())
+        .fold(0.0f64, f64::max);
+
+    RefResult { makespan, compute_busy, comm_busy, comm_bytes }
+}
+
+/// Expand a deduplicated [`super::engine::ProgramSet`] into the per-rank,
+/// fully-materialized representation this reference engine consumes:
+/// every op gets its formatted name, its own `Vec<usize>` communicator
+/// copy, and `(gpu, idx)` dependency pairs — exactly what the pre-refactor
+/// program builder used to emit.
+pub fn materialize(set: &super::engine::ProgramSet) -> Vec<GpuProgram> {
+    use super::engine::OpKind as NewKind;
+    let mut out = Vec::with_capacity(set.world());
+    for rank in 0..set.world() {
+        let cls = set.class_of(rank);
+        let mut ops = Vec::with_capacity(cls.ops.len());
+        for op in &cls.ops {
+            let deps: Vec<OpRef> = op.deps.iter().map(|&d| (rank, d as usize)).collect();
+            let kind = match op.kind {
+                NewKind::Compute { flops, min_dim } => OpKind::Compute { flops, min_dim },
+                NewKind::AllReduce { bytes, slot } => {
+                    let b = set.binding(rank, slot);
+                    OpKind::AllReduce {
+                        tag: b.tag,
+                        bytes,
+                        group: set.comm.group(b.group).members.clone(),
+                    }
+                }
+                NewKind::AllGather { bytes, slot } => {
+                    let b = set.binding(rank, slot);
+                    OpKind::AllGather {
+                        tag: b.tag,
+                        bytes,
+                        group: set.comm.group(b.group).members.clone(),
+                    }
+                }
+                NewKind::ReduceScatter { bytes, slot } => {
+                    let b = set.binding(rank, slot);
+                    OpKind::ReduceScatter {
+                        tag: b.tag,
+                        bytes,
+                        group: set.comm.group(b.group).members.clone(),
+                    }
+                }
+            };
+            ops.push(Op {
+                name: set.names.get(op.name).to_string(),
+                kind,
+                stream: op.stream,
+                deps,
+            });
+        }
+        out.push(GpuProgram { ops });
+    }
+    out
+}

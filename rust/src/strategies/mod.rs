@@ -1,5 +1,5 @@
 //! Parallelization strategies: compile a (network, mesh, machine, batch)
-//! into per-GPU op programs for the simulator.
+//! into the simulator's deduplicated per-GPU op programs.
 //!
 //! * [`Strategy::Tensor3d`] — the paper's system: Algorithm-1 2-D tensor
 //!   parallelism inside each group, §4.1 transposed alternate layers
@@ -14,10 +14,20 @@
 //!
 //! Op tags encode (phase, layer, shard, communicator) so independently
 //! built per-rank programs rendezvous correctly.
+//!
+//! All strategies here are SPMD — every rank runs the same op sequence
+//! and differs only in which communicator each collective binds — so the
+//! whole world shares **one** op-template class
+//! ([`crate::sim::engine::ProgramSet`]): op construction and name
+//! formatting run once, each further rank contributes only its O(#ops)
+//! binding table, and communicator groups are interned once in the
+//! [`crate::sim::CommWorld`].  That keeps program build for the paper's
+//! gpt80b/1024 configuration at O(world) memory instead of
+//! O(world × ops × group size).
 
 use crate::mesh::{Coord, Mesh};
 use crate::models::NetworkDesc;
-use crate::sim::engine::{GpuProgram, Op, OpKind, OpRef, Stream};
+use crate::sim::engine::{ProgramSet, ProgramSetBuilder, Stream};
 use crate::sim::Machine;
 
 pub const BYTES_PER_ELEM: f64 = 2.0; // fp16 activations/gradients (§6.1)
@@ -107,7 +117,7 @@ pub fn build_programs(
     mesh_in: &Mesh,
     batch: usize,
     machine: &Machine,
-) -> Vec<GpuProgram> {
+) -> ProgramSet {
     build_programs_with(strategy, net, mesh_in, batch, machine, ScheduleOpts::default())
 }
 
@@ -119,13 +129,13 @@ pub fn build_programs_with(
     batch: usize,
     machine: &Machine,
     opts: ScheduleOpts,
-) -> Vec<GpuProgram> {
+) -> ProgramSet {
     let mesh = strategy.effective_mesh(mesh_in);
     match strategy {
         Strategy::Tensor3d { depth, transpose_opt } => {
-            build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts)
+            build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts, machine)
         }
-        Strategy::Megatron => build_tensor3d(net, &mesh, batch, 1, true, opts),
+        Strategy::Megatron => build_tensor3d(net, &mesh, batch, 1, true, opts, machine),
         Strategy::Colossal3d => {
             assert!(!opts.sharded_state, "sharded state is not modelled for Colossal-AI-3D");
             build_colossal(net, &mesh, batch, machine)
@@ -146,19 +156,30 @@ fn build_tensor3d(
     depth: usize,
     transpose_opt: bool,
     opts: ScheduleOpts,
-) -> Vec<GpuProgram> {
+    machine: &Machine,
+) -> ProgramSet {
     let world = mesh.world();
     let samples_per_exec = batch as f64 / (mesh.g_data * depth) as f64;
     // depth sharding is the identity when there is no data dimension
     let use_shard = opts.sharded_state && mesh.g_data > 1;
-    let mut programs: Vec<GpuProgram> = vec![GpuProgram::default(); world];
+    let mut b = ProgramSetBuilder::new(machine);
 
     for rank in 0..world {
         let Coord { d, i, j } = mesh.coord_of(rank);
-        let p = &mut programs[rank];
+        // one SPMD class: rank 0 builds the template, the rest only bind
+        b.begin_rank(0);
         let dp_gid = i * mesh.g_c + j;
+        // this rank's communicators, interned once
+        let col_g = b.group(mesh.col_group(rank));
+        let row_g = b.group(mesh.row_group(rank));
+        let data_g = b.group(mesh.data_group(rank));
+        let xpose_g = if !transpose_opt && mesh.g_tensor() > 1 {
+            Some(b.group((0..mesh.g_tensor()).map(|t| d * mesh.g_tensor() + t).collect()))
+        } else {
+            None
+        };
         // last op of each (shard, kind) for dependency chaining
-        let mut last_fwd: Vec<Option<usize>> = vec![None; depth];
+        let mut last_fwd: Vec<Option<u32>> = vec![None; depth];
 
         // ---------------- forward ----------------
         for (li, layer) in net.layers.iter().enumerate() {
@@ -170,24 +191,22 @@ fn build_tensor3d(
             // exposed), the ablation of the overlap claim.
             let wgather = if use_shard {
                 let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
-                let mut deps: Vec<OpRef> = Vec::new();
+                let mut deps: Vec<u32> = Vec::new();
                 if opts.dp_barrier {
                     for s in 0..depth {
                         if let Some(x) = last_fwd[s] {
-                            deps.push((rank, x));
+                            deps.push(x);
                         }
                     }
                 }
-                Some(p.push(Op {
-                    name: format!("wgather.{}", layer.name),
-                    kind: OpKind::AllGather {
-                        tag: tag(PH_WGATHER, li, 0, GK_DATA, dp_gid),
-                        bytes,
-                        group: mesh.data_group(rank),
-                    },
-                    stream: Stream::CommDp,
+                Some(b.all_gather(
+                    || format!("wgather.{}", layer.name),
+                    tag(PH_WGATHER, li, 0, GK_DATA, dp_gid),
+                    data_g,
+                    bytes,
+                    Stream::CommDp,
                     deps,
-                }))
+                ))
             } else {
                 None
             };
@@ -204,78 +223,62 @@ fn build_tensor3d(
                 .min(layer.n as f64 / g_c_eff as f64);
             // forward AR buffer: (m x n/g_c_eff) elements (Eq. 2)
             let ar_bytes = m_local * layer.n as f64 / g_c_eff as f64 * BYTES_PER_ELEM;
-            let fwd_group = if fwd_gk == GK_COL {
-                mesh.col_group(rank)
-            } else {
-                mesh.row_group(rank)
-            };
+            let fwd_group = if fwd_gk == GK_COL { col_g } else { row_g };
 
             for s in 0..depth {
                 let mut deps = Vec::new();
                 if let Some(prev) = last_fwd[s] {
-                    deps.push((rank, prev));
+                    deps.push(prev);
                 }
                 if let Some(wg) = wgather {
-                    deps.push((rank, wg));
+                    deps.push(wg);
                 }
-                let mm = p.push(Op {
-                    name: format!("s{s}.fwd.{}", layer.name),
-                    kind: OpKind::Compute { flops, min_dim },
-                    stream: Stream::Compute,
-                    deps,
-                });
-                let ar = p.push(Op {
-                    name: format!("s{s}.fwd-ar.{}", layer.name),
-                    kind: OpKind::AllReduce {
-                        tag: tag(PH_FWD, li, s, fwd_gk, fwd_gid),
-                        bytes: ar_bytes,
-                        group: fwd_group.clone(),
-                    },
-                    stream: Stream::Comm,
-                    deps: vec![(rank, mm)],
-                });
+                let mm = b.compute(|| format!("s{s}.fwd.{}", layer.name), flops, min_dim, deps);
+                let ar = b.all_reduce(
+                    || format!("s{s}.fwd-ar.{}", layer.name),
+                    tag(PH_FWD, li, s, fwd_gk, fwd_gid),
+                    fwd_group,
+                    ar_bytes,
+                    Stream::Comm,
+                    vec![mm],
+                );
                 let mut tail = ar;
                 // head-sharded local compute attached after this layer
                 // (attention core: replicated over rows, sharded over g_c)
                 for att in net.attached.iter().filter(|a| a.after_layer == li) {
-                    let aflops =
-                        att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
-                    tail = p.push(Op {
-                        name: format!("s{s}.fwd.{}", att.name),
-                        kind: OpKind::Compute { flops: aflops, min_dim: m_local },
-                        stream: Stream::Compute,
-                        deps: vec![(rank, tail)],
-                    });
+                    let aflops = att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
+                    tail = b.compute(
+                        || format!("s{s}.fwd.{}", att.name),
+                        aflops,
+                        m_local,
+                        vec![tail],
+                    );
                 }
                 if layer.transposed && !transpose_opt && mesh.g_tensor() > 1 {
                     // ablation: §4.1 disabled — activations must be
                     // redistributed ("transpose") at the layer boundary.
                     let xp_bytes =
                         m_local * layer.n as f64 / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
-                    tail = p.push(Op {
-                        name: format!("s{s}.xpose.{}", layer.name),
-                        kind: OpKind::AllReduce {
-                            tag: tag(PH_XPOSE, li, s, GK_COL, d),
-                            bytes: xp_bytes * mesh.g_tensor() as f64 / 2.0,
-                            group: (0..mesh.g_tensor())
-                                .map(|t| d * mesh.g_tensor() + t)
-                                .collect(),
-                        },
-                        stream: Stream::Comm,
-                        deps: vec![(rank, ar)],
-                    });
+                    tail = b.all_reduce(
+                        || format!("s{s}.xpose.{}", layer.name),
+                        tag(PH_XPOSE, li, s, GK_COL, d),
+                        xpose_g.expect("xpose group registered when §4.1 is off"),
+                        xp_bytes * mesh.g_tensor() as f64 / 2.0,
+                        Stream::Comm,
+                        vec![ar],
+                    );
                 }
                 last_fwd[s] = Some(tail);
             }
         }
 
         // ---------------- backward ----------------
-        let mut last_bwd: Vec<Option<usize>> = last_fwd.clone();
-        let mut last_dw: Vec<Option<usize>> = vec![None; depth];
+        let mut last_bwd: Vec<Option<u32>> = last_fwd.clone();
+        let mut last_dw: Vec<Option<u32>> = vec![None; depth];
         // sharded state: per-layer gradient reduce-scatters (and, in the
         // barrier ablation, the scatter each subsequent layer must wait on)
-        let mut gscatters: Vec<usize> = Vec::new();
-        let mut last_rs: Option<usize> = None;
+        let mut gscatters: Vec<u32> = Vec::new();
+        let mut last_rs: Option<u32> = None;
         for (li, layer) in net.layers.iter().enumerate().rev() {
             let (bwd_gk, bwd_gid, g_r_eff, g_c_eff) = if layer.transposed && transpose_opt {
                 // transposed layer: backward AR over the COLUMN comm
@@ -290,66 +293,55 @@ fn build_tensor3d(
                 .min(layer.k as f64 / g_r_eff as f64)
                 .min(layer.n as f64 / g_c_eff as f64);
             let ar_bytes = m_local * layer.k as f64 / g_r_eff as f64 * BYTES_PER_ELEM;
-            let bwd_group = if bwd_gk == GK_COL {
-                mesh.col_group(rank)
-            } else {
-                mesh.row_group(rank)
-            };
+            let bwd_group = if bwd_gk == GK_COL { col_g } else { row_g };
             for s in 0..depth {
                 let mut deps = Vec::new();
                 if let Some(prev) = last_bwd[s] {
-                    deps.push((rank, prev));
+                    deps.push(prev);
                 }
                 if opts.dp_barrier {
                     if let Some(rs) = last_rs {
-                        deps.push((rank, rs));
+                        deps.push(rs);
                     }
                 }
                 // activation checkpointing (§6.1): recompute this layer's
                 // forward before its backward
-                let rc = p.push(Op {
-                    name: format!("s{s}.recompute.{}", layer.name),
-                    kind: OpKind::Compute { flops, min_dim },
-                    stream: Stream::Compute,
-                    deps: deps.clone(),
-                });
-                let mut deps = vec![(rank, rc)];
+                let rc = b.compute(
+                    || format!("s{s}.recompute.{}", layer.name),
+                    flops,
+                    min_dim,
+                    deps,
+                );
+                let mut deps = vec![rc];
                 // attached compute backward (2x fwd) + recompute (1x fwd)
                 for att in net.attached.iter().filter(|a| a.after_layer == li) {
                     let aflops =
                         3.0 * att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
-                    let ab = p.push(Op {
-                        name: format!("s{s}.bwd.{}", att.name),
-                        kind: OpKind::Compute { flops: aflops, min_dim: m_local },
-                        stream: Stream::Compute,
-                        deps: deps.clone(),
-                    });
-                    deps = vec![(rank, ab)];
+                    let ab = b.compute(
+                        || format!("s{s}.bwd.{}", att.name),
+                        aflops,
+                        m_local,
+                        deps.clone(),
+                    );
+                    deps = vec![ab];
                 }
-                let dx = p.push(Op {
-                    name: format!("s{s}.bwd-dx.{}", layer.name),
-                    kind: OpKind::Compute { flops, min_dim },
-                    stream: Stream::Compute,
-                    deps: deps.clone(),
-                });
-                let ar = p.push(Op {
-                    name: format!("s{s}.bwd-ar.{}", layer.name),
-                    kind: OpKind::AllReduce {
-                        tag: tag(PH_BWD, li, s, bwd_gk, bwd_gid),
-                        bytes: ar_bytes,
-                        group: bwd_group.clone(),
-                    },
-                    stream: Stream::Comm,
-                    deps: vec![(rank, dx)],
-                });
+                let dx = b.compute(
+                    || format!("s{s}.bwd-dx.{}", layer.name),
+                    flops,
+                    min_dim,
+                    deps.clone(),
+                );
+                let ar = b.all_reduce(
+                    || format!("s{s}.bwd-ar.{}", layer.name),
+                    tag(PH_BWD, li, s, bwd_gk, bwd_gid),
+                    bwd_group,
+                    ar_bytes,
+                    Stream::Comm,
+                    vec![dx],
+                );
                 // dW is local and independent of the dX all-reduce — it
                 // naturally fills the bubble while the AR is in flight.
-                let dw = p.push(Op {
-                    name: format!("s{s}.bwd-dw.{}", layer.name),
-                    kind: OpKind::Compute { flops, min_dim },
-                    stream: Stream::Compute,
-                    deps,
-                });
+                let dw = b.compute(|| format!("s{s}.bwd-dw.{}", layer.name), flops, min_dim, deps);
                 last_bwd[s] = Some(ar);
                 last_dw[s] = Some(dw);
             }
@@ -358,18 +350,15 @@ fn build_tensor3d(
             // with the (earlier) layers still running backward.
             if use_shard {
                 let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
-                let deps: Vec<OpRef> =
-                    (0..depth).filter_map(|s| last_dw[s]).map(|x| (rank, x)).collect();
-                let rs = p.push(Op {
-                    name: format!("gscatter.{}", layer.name),
-                    kind: OpKind::ReduceScatter {
-                        tag: tag(PH_GSCATTER, li, 0, GK_DATA, dp_gid),
-                        bytes,
-                        group: mesh.data_group(rank),
-                    },
-                    stream: Stream::CommDp,
+                let deps: Vec<u32> = (0..depth).filter_map(|s| last_dw[s]).collect();
+                let rs = b.reduce_scatter(
+                    || format!("gscatter.{}", layer.name),
+                    tag(PH_GSCATTER, li, 0, GK_DATA, dp_gid),
+                    data_g,
+                    bytes,
+                    Stream::CommDp,
                     deps,
-                });
+                );
                 gscatters.push(rs);
                 last_rs = Some(rs);
             }
@@ -378,75 +367,83 @@ fn build_tensor3d(
         // ---------------- depth-sharded optimizer ---------------------
         if use_shard {
             // each rank steps only its 1/(G_tensor * G_data) slice
-            let deps: Vec<OpRef> = gscatters.iter().map(|&x| (rank, x)).collect();
-            p.push(Op {
-                name: "adamw-shard".into(),
-                kind: OpKind::Compute {
-                    flops: 12.0 * net.fc_params() / (mesh.g_tensor() * mesh.g_data) as f64,
-                    min_dim: 1e9,
-                },
-                stream: Stream::Compute,
+            let deps: Vec<u32> = gscatters.clone();
+            b.compute(
+                || "adamw-shard".into(),
+                12.0 * net.fc_params() / (mesh.g_tensor() * mesh.g_data) as f64,
+                1e9,
                 deps,
-            });
+            );
         }
 
         // ---------------- data-parallel gradient AR + optimizer --------
         if mesh.g_data > 1 && !use_shard {
             let grad_bytes = net.fc_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
-            let mut deps: Vec<(usize, usize)> = Vec::new();
+            let mut deps: Vec<u32> = Vec::new();
             for s in 0..depth {
                 if let Some(x) = last_dw[s] {
-                    deps.push((rank, x));
+                    deps.push(x);
                 }
                 if let Some(x) = last_bwd[s] {
-                    deps.push((rank, x));
+                    deps.push(x);
                 }
             }
-            let dp = p.push(Op {
-                name: "dp-grad-ar".into(),
-                kind: OpKind::AllReduce {
-                    tag: tag(PH_DP, 0, 0, GK_DATA, i * mesh.g_c + j),
-                    bytes: grad_bytes,
-                    group: mesh.data_group(rank),
-                },
-                stream: Stream::Comm,
+            let dp = b.all_reduce(
+                || "dp-grad-ar".into(),
+                tag(PH_DP, 0, 0, GK_DATA, i * mesh.g_c + j),
+                data_g,
+                grad_bytes,
+                Stream::Comm,
                 deps,
-            });
-            p.push(Op {
-                name: "adamw".into(),
+            );
+            b.compute(
+                || "adamw".into(),
                 // elementwise: ~12 flops per param shard element
-                kind: OpKind::Compute {
-                    flops: 12.0 * net.fc_params() / mesh.g_tensor() as f64,
-                    min_dim: 1e9,
-                },
-                stream: Stream::Compute,
-                deps: vec![(rank, dp)],
-            });
+                12.0 * net.fc_params() / mesh.g_tensor() as f64,
+                1e9,
+                vec![dp],
+            );
         }
     }
-    programs
+    b.finish()
 }
 
 /// Colossal-AI-3D (Agarwal): synchronous; per layer, one fused compute op
 /// and three face-movement collectives over q-sized groups.
-fn build_colossal(
-    net: &NetworkDesc,
-    mesh: &Mesh,
-    batch: usize,
-    _machine: &Machine,
-) -> Vec<GpuProgram> {
+fn build_colossal(net: &NetworkDesc, mesh: &Mesh, batch: usize, machine: &Machine) -> ProgramSet {
     let world = mesh.world();
     let gt = mesh.g_tensor();
     let q = (gt as f64).cbrt().round() as usize;
     assert_eq!(q * q * q, gt, "Colossal-AI-3D needs a perfect-cube G_tensor");
     let samples = batch as f64 / mesh.g_data as f64;
-    let mut programs: Vec<GpuProgram> = vec![GpuProgram::default(); world];
+    let mut b = ProgramSetBuilder::new(machine);
 
     for rank in 0..world {
         let d = rank / gt;
         let t = rank % gt; // position in the cube, flattened
-        let p = &mut programs[rank];
-        let mut last: Option<usize> = None;
+        b.begin_rank(0);
+        // cube coords of t: (a, b, c) with t = a + q*b + q^2*c
+        let (ca, cb, cc) = (t % q, (t / q) % q, t / (q * q));
+        // per-axis face-movement communicators and their tag group-ids
+        let mut axis_groups = [None; 3];
+        let mut axis_gids = [0usize; 3];
+        for axis in 0..3usize {
+            let stride = q.pow(axis as u32);
+            let base = match axis {
+                0 => cb * q + cc * q * q,
+                1 => ca + cc * q * q,
+                _ => ca + cb * q,
+            };
+            let group: Vec<usize> = (0..q).map(|x| d * gt + base + x * stride).collect();
+            axis_groups[axis] = Some(b.group(group));
+            axis_gids[axis] = (d * gt + base) * 4 + axis;
+        }
+        let dp_g = if mesh.g_data > 1 {
+            Some(b.group((0..mesh.g_data).map(|dd| dd * gt + t).collect()))
+        } else {
+            None
+        };
+        let mut last: Option<u32> = None;
         // fwd + bwd passes: 1 GEMM fwd, 2 bwd
         for (pass, gemms) in [(PH_FWD, 1usize), (PH_BWD, 2usize)] {
             let layer_iter: Vec<usize> = if pass == PH_FWD {
@@ -462,20 +459,19 @@ fn build_colossal(
                     let flops = layer.fwd_flops(samples) / gt as f64;
                     // local dims under the cube: each of m, k, n is /q
                     let min_dim = (m / q as f64).min(k / q as f64).min(n / q as f64);
-                    let mut deps = Vec::new();
-                    if let Some(prev) = last {
-                        deps.push((rank, prev));
-                    }
-                    let mm = p.push(Op {
-                        name: format!(
-                            "cai.{}.{}.g{gemm}",
-                            if pass == PH_FWD { "f" } else { "b" },
-                            layer.name
-                        ),
-                        kind: OpKind::Compute { flops, min_dim },
-                        stream: Stream::Compute,
+                    let deps = last.map(|prev| vec![prev]).unwrap_or_default();
+                    let mm = b.compute(
+                        || {
+                            format!(
+                                "cai.{}.{}.g{gemm}",
+                                if pass == PH_FWD { "f" } else { "b" },
+                                layer.name
+                            )
+                        },
+                        flops,
+                        min_dim,
                         deps,
-                    });
+                    );
                     // Agarwal 3-D matmul: each GEMM moves the A, B and C
                     // faces along the three cube axes — the axis-0 groups
                     // are rank-consecutive (node-local with 4 GPUs/node),
@@ -483,34 +479,23 @@ fn build_colossal(
                     // which is where Colossal-AI-3D's synchronous traffic
                     // hurts (Table 5).
                     let faces = [m * k, k * n, m * n];
-                    // cube coords of t: (a, b, c) with t = a + q*b + q^2*c
-                    let (a, b, c) = (t % q, (t / q) % q, t / (q * q));
                     let mut prev = mm;
                     for (axis, face) in faces.iter().enumerate() {
                         let vol = face / (q * q) as f64 * BYTES_PER_ELEM;
                         let buf = vol / 2.0; // AllReduce applies 2(p-1)/p
-                        let stride = q.pow(axis as u32);
-                        let base = match axis {
-                            0 => b * q + c * q * q,
-                            1 => a + c * q * q,
-                            _ => a + b * q,
-                        };
-                        let group: Vec<usize> =
-                            (0..q).map(|x| d * gt + base + x * stride).collect();
-                        let gid = (d * gt + base) * 4 + axis;
-                        let ar = p.push(Op {
-                            name: format!(
-                                "cai.ar{axis}.{}.{li}.g{gemm}",
-                                if pass == PH_FWD { "f" } else { "b" }
-                            ),
-                            kind: OpKind::AllReduce {
-                                tag: tag(pass, li * 16 + gemm * 4 + axis, 0, GK_COL, gid),
-                                bytes: buf,
-                                group,
+                        let ar = b.all_reduce(
+                            || {
+                                format!(
+                                    "cai.ar{axis}.{}.{li}.g{gemm}",
+                                    if pass == PH_FWD { "f" } else { "b" }
+                                )
                             },
-                            stream: Stream::Comm,
-                            deps: vec![(rank, prev)],
-                        });
+                            tag(pass, li * 16 + gemm * 4 + axis, 0, GK_COL, axis_gids[axis]),
+                            axis_groups[axis].expect("axis group registered above"),
+                            buf,
+                            Stream::Comm,
+                            vec![prev],
+                        );
                         prev = ar;
                     }
                     last = Some(prev);
@@ -519,20 +504,18 @@ fn build_colossal(
         }
         if mesh.g_data > 1 {
             let grad_bytes = net.fc_params() / gt as f64 * BYTES_PER_ELEM;
-            let deps = last.map(|x| vec![(rank, x)]).unwrap_or_default();
-            p.push(Op {
-                name: "dp-grad-ar".into(),
-                kind: OpKind::AllReduce {
-                    tag: tag(PH_DP, 0, 0, GK_DATA, t),
-                    bytes: grad_bytes,
-                    group: (0..mesh.g_data).map(|dd| dd * gt + t).collect(),
-                },
-                stream: Stream::Comm,
+            let deps = last.map(|x| vec![x]).unwrap_or_default();
+            b.all_reduce(
+                || "dp-grad-ar".into(),
+                tag(PH_DP, 0, 0, GK_DATA, t),
+                dp_g.expect("data group registered when g_data > 1"),
+                grad_bytes,
+                Stream::Comm,
                 deps,
-            });
+            );
         }
     }
-    programs
+    b.finish()
 }
 
 /// Convenience: simulate one iteration and return (time_s, comm GB/gpu).
@@ -555,8 +538,8 @@ pub fn iterate_with(
     machine: &Machine,
     opts: ScheduleOpts,
 ) -> (f64, f64) {
-    let programs = build_programs_with(strategy, net, mesh, batch, machine, opts);
-    let r = crate::sim::simulate(machine, &programs);
+    let set = build_programs_with(strategy, net, mesh, batch, machine, opts);
+    let r = crate::sim::simulate(machine, &set);
     let gb = r.comm_bytes.iter().sum::<f64>() / r.comm_bytes.len() as f64 / 1e9;
     (r.makespan, gb)
 }
@@ -793,5 +776,33 @@ mod tests {
         );
         let u = mfu(&net, row.batch, row.gpus, t, &machine);
         assert!(u > 0.05 && u < 0.62, "mfu {u}");
+    }
+
+    #[test]
+    fn build_dedupes_spmd_programs_and_groups() {
+        // the paper-scale representation: one class for the whole world,
+        // O(#communicators) interned groups, names formatted once
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(4, 2, 4, 1); // 32 ranks
+        let set = build_programs_with(
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            &net,
+            &mesh,
+            64,
+            &machine,
+            ScheduleOpts { sharded_state: true, dp_barrier: false },
+        );
+        assert_eq!(set.world(), 32);
+        assert_eq!(set.classes.len(), 1, "SPMD ranks must share one template");
+        // distinct communicators: g_data*g_c = 16 col, g_data*g_r = 8 row,
+        // g_r*g_c = 8 data groups
+        assert_eq!(set.comm.len(), 32);
+        // every rank binds the same number of collective slots
+        let slots = set.bindings[0].len();
+        assert!(slots > 0);
+        assert!(set.bindings.iter().all(|b| b.len() == slots));
+        // names are shared: far fewer than total ops
+        assert!(set.names.len() * 8 < set.total_ops());
     }
 }
