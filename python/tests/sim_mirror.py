@@ -11,6 +11,16 @@ empirically pinned Rust tests are diagnosable without a Rust toolchain:
   GPT-9B / 16 Polaris GPUs (replicated state).  Run this file to see the
   full candidate ranking the Rust test relies on (at authoring time:
   Eq.-4 base (2,2,4) at ~6.42 s vs sim winner (2,4,2) at ~5.86 s).
+* The pipeline axis (PR 3): ``build_t3d_pipeline`` mirrors
+  ``strategies::build_tensor3d_pipeline`` (1F1B schedule, Send/Recv
+  rendezvous on the P2p channel-pool stream), ``bubble_fraction`` /
+  ``pipelined_score`` mirror the planner's bubble-adjusted Eq.-4 term,
+  and ``refine_pipelined`` mirrors ``planner::plan_refined_pipelined``.
+  ``__main__`` asserts the pinned Rust facts: the simulated 1F1B idle
+  fraction matches the analytic bubble ``(p-1)/(m+p-1)`` within 5% on a
+  compute-dominated config, the refined pipelined recommendation is
+  never slower than the pipeline-free Eq.-4 winner on GPT-9B/16, and the
+  frontier gpt80b/1024 plan matches the CI golden.
 * The issue-order permutation-invariance property of
   ``rust/tests/sim_golden.rs`` can be spot-checked here with
   ``simulate(..., order=...)``.
@@ -27,7 +37,7 @@ No dependencies beyond the standard library.  Usage::
 import heapq
 
 BYTES_PER_ELEM = 2.0
-COMPUTE, AR, AG, RS = 0, 1, 2, 3
+COMPUTE, AR, AG, RS, SEND, RECV = 0, 1, 2, 3, 4, 5
 STATE_BUDGET = 0.6
 
 
@@ -79,6 +89,12 @@ class Machine:
 
     def reduce_scatter_time(self, b, p, pn):
         return self.allgather_time(b, p, pn)
+
+    def p2p_time(self, bytes_, per_node):
+        if bytes_ <= 0:
+            return 0.0
+        bw, lat = self.ring_bw_lat(2, per_node)
+        return bytes_ / bw + lat
 
     def members_per_node(self, group):
         per = {}
@@ -342,18 +358,25 @@ def build_t3d(net, mesh_in, batch, depth, machine, sharded=False, barrier=False)
 
 
 def simulate(machine, programs, order=None):
-    """Mirror of sim::engine::simulate / simulate_permuted: returns makespan."""
+    """Mirror of sim::engine::simulate / simulate_permuted.
+
+    Returns ``(makespan, compute_busy)``.  Stream 3 (P2p) mirrors the
+    engine's channel-pool semantics: an in-flight Send/Recv transfer
+    never updates ``stream_free``, so the next P2p op's start is governed
+    solely by deps and partner readiness.
+    """
     n = len(programs)
     done = [[False] * len(p) for p in programs]
     done_time = [[0.0] * len(p) for p in programs]
-    nxt = [[0, 0, 0] for _ in range(n)]
+    nxt = [[0, 0, 0, 0] for _ in range(n)]
     stream_ops = []
     for p in programs:
-        m = [[], [], []]
+        m = [[], [], [], []]
         for idx, op in enumerate(p):
             m[op[5]].append(idx)
         stream_ops.append(m)
-    stream_free = [[0.0, 0.0, 0.0] for _ in range(n)]
+    stream_free = [[0.0, 0.0, 0.0, 0.0] for _ in range(n)]
+    compute_busy = [0.0] * n
     collectives = {}
     heap = []
     state = {"seq": 0, "now": 0.0}
@@ -370,7 +393,7 @@ def simulate(machine, programs, order=None):
         progressed = True
         while progressed:
             progressed = False
-            for st in range(3):
+            for st in range(4):
                 ip, sl = nxt[gpu][st], stream_ops[gpu][st]
                 if ip >= len(sl):
                     continue
@@ -387,9 +410,11 @@ def simulate(machine, programs, order=None):
                     continue
                 kind = op[0]
                 if kind == COMPUTE:
-                    end = ready + machine.compute_time(op[1], op[2])
+                    dur = machine.compute_time(op[1], op[2])
+                    end = ready + dur
                     nxt[gpu][st] += 1
                     stream_free[gpu][st] = end
+                    compute_busy[gpu] += dur
                     state["seq"] += 1
                     heapq.heappush(heap, (end, state["seq"], gpu, oi))
                     progressed = True
@@ -409,11 +434,16 @@ def simulate(machine, programs, order=None):
                             dur = machine.allreduce_time(op[1], p, pn)
                         elif kind == AG:
                             dur = machine.allgather_time(op[1], p, pn)
+                        elif kind in (SEND, RECV):
+                            dur = machine.p2p_time(op[1], pn)
                         else:
                             dur = machine.reduce_scatter_time(op[1], p, pn)
                         end = stt[2] + dur
                         for (mg, mi) in stt[3]:
-                            stream_free[mg][programs[mg][mi][5]] = end
+                            # P2p (stream 3) is a channel pool: completion
+                            # never serializes the stream
+                            if programs[mg][mi][5] != 3:
+                                stream_free[mg][programs[mg][mi][5]] = end
                             state["seq"] += 1
                             heapq.heappush(heap, (end, state["seq"], mg, mi))
                         del collectives[tg]
@@ -430,7 +460,242 @@ def simulate(machine, programs, order=None):
         try_issue(g)
     for g in range(n):
         assert all(done[g]), f"deadlock on gpu {g}"
-    return max(max(v) if v else 0.0 for v in done_time)
+    return max(max(v) if v else 0.0 for v in done_time), compute_busy
+
+
+def pipeline_steps(stage, stages, m):
+    """Mirror of pipeline::steps (OneFOneB): [('F'|'B', microbatch), ...]."""
+    warmup = min(stages - 1 - stage, m)
+    out = [("F", i) for i in range(warmup)]
+    for k in range(m - warmup):
+        out.append(("F", warmup + k))
+        out.append(("B", k))
+    out.extend(("B", k) for k in range(m - warmup, m))
+    return out
+
+
+def partition_layers(costs, stages):
+    """Mirror of pipeline::partition_layers: list of (start, end) ranges."""
+    n = len(costs)
+    assert 1 <= stages <= n
+    cum = [0.0]
+    for c in costs:
+        cum.append(cum[-1] + c)
+    total = cum[n]
+    cuts = [0]
+    for s in range(1, stages):
+        target = total * s / stages
+        cut = next(i for i in range(n + 1) if cum[i] >= target)
+        cuts.append(max(cuts[s - 1] + 1, min(cut, n - (stages - s))))
+    cuts.append(n)
+    return [(cuts[i], cuts[i + 1]) for i in range(stages)]
+
+
+def ptag(phase, mb, layer, shard, gk, gid):
+    """Mirror of strategies::ptag (pipelined tag packing)."""
+    return (phase << 58) | (mb << 44) | (layer << 30) | (shard << 24) | (gk << 21) | gid
+
+
+def build_t3d_pipeline(net, mesh_in, batch, depth, stages, microbatches, machine,
+                       sharded=False):
+    """Mirror of strategies::build_tensor3d_pipeline (transpose_opt on)."""
+    del machine
+    assert stages >= 2
+    mesh = Mesh(mesh_in.g_data, mesh_in.g_r, mesh_in.g_c, depth)
+    inner = mesh.world()
+    world = stages * inner
+    gt = mesh.g_tensor()
+    spe = batch / (mesh.g_data * microbatches * depth)
+    use_shard = sharded and mesh.g_data > 1
+    GK_COL, GK_ROW, GK_DATA, GK_P2P = 0, 1, 2, 3
+    PH_FWD, PH_BWD, PH_DP, PH_WG, PH_GS, PH_PF, PH_PB = 1, 2, 4, 5, 6, 7, 8
+    costs = []
+    for li, l in enumerate(net.layers):
+        att = sum(af for (al, af) in net.attached if al == li)
+        costs.append(l.fwd_flops(1.0) + att)
+    ranges = partition_layers(costs, stages)
+
+    programs = []
+    for rank in range(world):
+        stage, inner_rank = rank // inner, rank % inner
+        d, j, i = mesh.coord_of(inner_rank)
+        lo, hi = ranges[stage]
+        stage_params = sum(net.layers[li].weight_params() for li in range(lo, hi))
+        ops = []
+
+        def push(kind, a, bb, tg, grp, stream, deps):
+            ops.append((kind, a, bb, tg, grp, stream, tuple(deps)))
+            return len(ops) - 1
+
+        def lift(grp):
+            return tuple(r + stage * inner for r in grp)
+
+        dp_gid = i * mesh.g_c + j
+        col = lift(mesh.col_group(inner_rank))
+        row = lift(mesh.row_group(inner_rank))
+        datag = lift(mesh.data_group(inner_rank))
+        prev_g = (rank - inner, rank) if stage > 0 else None
+        next_g = (rank, rank + inner) if stage + 1 < stages else None
+
+        def boundary_bytes(bl):
+            l = net.layers[bl]
+            gce = mesh.g_r if l.transposed else mesh.g_c
+            return spe * l.rows * l.n / gce * BYTES_PER_ELEM
+
+        fwd_in_bytes = boundary_bytes(lo - 1) if stage > 0 else None
+        fwd_out_bytes = boundary_bytes(hi - 1) if stage + 1 < stages else None
+
+        wgather = [None] * len(net.layers)
+        if use_shard:
+            for li in range(lo, hi):
+                byts = net.layers[li].weight_params() / gt * BYTES_PER_ELEM
+                wgather[li] = push(AG, byts, 0, ptag(PH_WG, 0, li, 0, GK_DATA, dp_gid),
+                                   datag, 2, [])
+
+        fwd_tail = [[None] * depth for _ in range(microbatches)]
+        final_dw = [[] for _ in range(len(net.layers))]
+        last_dw = [None] * depth
+        last_bwd = [None] * depth
+
+        for (what, mb) in pipeline_steps(stage, stages, microbatches):
+            if what == "F":
+                cur = [None] * depth
+                if prev_g is not None:
+                    for s in range(depth):
+                        cur[s] = push(RECV, fwd_in_bytes, 0,
+                                      ptag(PH_PF, mb, stage, s, GK_P2P, inner_rank),
+                                      prev_g, 3, [])
+                for li in range(lo, hi):
+                    layer = net.layers[li]
+                    if layer.transposed:
+                        gre, gce, fgk, fgid, fgrp = mesh.g_c, mesh.g_r, GK_ROW, d * mesh.g_r + i, row
+                    else:
+                        gre, gce, fgk, fgid, fgrp = mesh.g_r, mesh.g_c, GK_COL, d * mesh.g_c + j, col
+                    m_local = spe * layer.rows
+                    flops = layer.fwd_flops(spe) / gt
+                    md = min(m_local, layer.k / gre, layer.n / gce)
+                    ar_bytes = m_local * layer.n / gce * BYTES_PER_ELEM
+                    for s in range(depth):
+                        deps = []
+                        if cur[s] is not None:
+                            deps.append(cur[s])
+                        if wgather[li] is not None:
+                            deps.append(wgather[li])
+                        mm = push(COMPUTE, flops, md, 0, None, 0, deps)
+                        tail = push(AR, ar_bytes, 0, ptag(PH_FWD, mb, li, s, fgk, fgid),
+                                    fgrp, 1, [mm])
+                        for (al, af) in net.attached:
+                            if al == li:
+                                tail = push(COMPUTE, af * spe / mesh.g_c, m_local, 0, None,
+                                            0, [tail])
+                        cur[s] = tail
+                if next_g is not None:
+                    for s in range(depth):
+                        push(SEND, fwd_out_bytes, 0,
+                             ptag(PH_PF, mb, stage + 1, s, GK_P2P, inner_rank),
+                             next_g, 3, [cur[s]])
+                fwd_tail[mb] = cur
+            else:
+                rx = [None] * depth
+                if next_g is not None:
+                    for s in range(depth):
+                        rx[s] = push(RECV, fwd_out_bytes, 0,
+                                     ptag(PH_PB, mb, stage + 1, s, GK_P2P, inner_rank),
+                                     next_g, 3, [])
+                cur = [None] * depth
+                for li in range(hi - 1, lo - 1, -1):
+                    layer = net.layers[li]
+                    if layer.transposed:
+                        gre, gce, bgk, bgid, bgrp = mesh.g_c, mesh.g_r, GK_COL, d * mesh.g_c + j, col
+                    else:
+                        gre, gce, bgk, bgid, bgrp = mesh.g_r, mesh.g_c, GK_ROW, d * mesh.g_r + i, row
+                    m_local = spe * layer.rows
+                    flops = layer.fwd_flops(spe) / gt
+                    md = min(m_local, layer.k / gre, layer.n / gce)
+                    ar_bytes = m_local * layer.k / gre * BYTES_PER_ELEM
+                    for s in range(depth):
+                        deps = []
+                        if cur[s] is not None:
+                            deps.append(cur[s])
+                        else:
+                            if fwd_tail[mb][s] is not None:
+                                deps.append(fwd_tail[mb][s])
+                            if rx[s] is not None:
+                                deps.append(rx[s])
+                        rc = push(COMPUTE, flops, md, 0, None, 0, deps)
+                        deps = [rc]
+                        for (al, af) in net.attached:
+                            if al == li:
+                                ab = push(COMPUTE, 3.0 * af * spe / mesh.g_c, m_local, 0,
+                                          None, 0, deps)
+                                deps = [ab]
+                        dx = push(COMPUTE, flops, md, 0, None, 0, deps)
+                        ar = push(AR, ar_bytes, 0, ptag(PH_BWD, mb, li, s, bgk, bgid),
+                                  bgrp, 1, [dx])
+                        dw = push(COMPUTE, flops, md, 0, None, 0, deps)
+                        cur[s] = ar
+                        last_bwd[s] = ar
+                        last_dw[s] = dw
+                        if mb == microbatches - 1:
+                            final_dw[li].append(dw)
+                if prev_g is not None:
+                    for s in range(depth):
+                        push(SEND, fwd_in_bytes, 0,
+                             ptag(PH_PB, mb, stage, s, GK_P2P, inner_rank),
+                             prev_g, 3, [cur[s]])
+
+        if use_shard:
+            gscatters = []
+            for li in range(hi - 1, lo - 1, -1):
+                byts = net.layers[li].weight_params() / gt * BYTES_PER_ELEM
+                rs = push(RS, byts, 0, ptag(PH_GS, 0, li, 0, GK_DATA, dp_gid), datag, 2,
+                          final_dw[li])
+                gscatters.append(rs)
+            push(COMPUTE, 12.0 * stage_params / (gt * mesh.g_data), 1e9, 0, None, 0,
+                 gscatters)
+        if mesh.g_data > 1 and not use_shard:
+            gb = stage_params / gt * BYTES_PER_ELEM
+            deps = []
+            for s in range(depth):
+                if last_dw[s] is not None:
+                    deps.append(last_dw[s])
+                if last_bwd[s] is not None:
+                    deps.append(last_bwd[s])
+            dp = push(AR, gb, 0, ptag(PH_DP, 0, lo, 0, GK_DATA, dp_gid), datag, 1, deps)
+            push(COMPUTE, 12.0 * stage_params / gt, 1e9, 0, None, 0, [dp])
+        programs.append(ops)
+    return programs
+
+
+def bubble_fraction(p, m):
+    """Mirror of comm_model::pipeline_bubble_fraction: (p-1)/(m+p-1)."""
+    return 0.0 if p <= 1 else (p - 1) / (m + p - 1)
+
+
+def pipelined_score(net, batch, mesh, p, m):
+    """Mirror of comm_model::pipelined_volume_score."""
+    return t3d_volume(net, batch, mesh) / p / (1.0 - bubble_fraction(p, m))
+
+
+def pipelined_candidates(net, batch, world, machine, mode, pipes, m, k):
+    """Mirror of planner::pipelined_candidates."""
+    budget = machine.mem_bytes * STATE_BUDGET
+    out = []
+    for p in pipes:
+        if p == 0 or world % p or len(net.layers) < p:
+            continue
+        feas = []
+        for mm in factorizations(world // p):
+            st = (state_bytes(net, mm.g_tensor()) if mode == "rep"
+                  else state_bytes_sharded(net, mm.g_tensor(), mm.g_data))
+            if st / p <= budget:
+                feas.append((mm, pipelined_score(net, batch, mm, p, m)))
+        feas.sort(key=lambda x: x[1])
+        gdmax = max((mm.g_data for mm, _ in feas), default=1)
+        top = [x for x in feas if x[0].g_data == gdmax][:max(k, 1)]
+        out.extend((p, mm, v) for mm, v in top)
+    out.sort(key=lambda x: x[2])
+    return out
 
 
 def refine(net, batch, world, machine, mode, k=6, depth=2):
@@ -443,9 +708,29 @@ def refine(net, batch, world, machine, mode, k=6, depth=2):
     scored = []
     for m in top:
         progs = build_t3d(net, m, batch, depth, machine, sharded=(mode == "sh"))
-        scored.append((m, simulate(machine, progs)))
+        scored.append((m, simulate(machine, progs)[0]))
     scored.sort(key=lambda x: x[1])
     basemk = [mk for m, mk in scored if m.key() == base.key()][0]
+    return base, basemk, scored
+
+
+def refine_pipelined(net, batch, world, machine, mode, k, depth, pipes, m):
+    """Mirror of planner::plan_refined_pipelined."""
+    base, base_vol = base_plan(candidates(net, batch, world, machine, mode))
+    cands = pipelined_candidates(net, batch, world, machine, mode, pipes, m, k)
+    if not any(p == 1 and mm.key() == base.key() for p, mm, _ in cands):
+        cands.append((1, base, base_vol))
+    scored = []
+    for p, mm, score in cands:
+        if p <= 1:
+            progs = build_t3d(net, mm, batch, depth, machine, sharded=(mode == "sh"))
+        else:
+            progs = build_t3d_pipeline(net, mm, batch, depth, p, m, machine,
+                                       sharded=(mode == "sh"))
+        mk, _ = simulate(machine, progs)
+        scored.append((p, mm, score, mk))
+    scored.sort(key=lambda x: (x[3], x[2]))
+    basemk = next(mk for p, mm, _, mk in scored if p == 1 and mm.key() == base.key())
     return base, basemk, scored
 
 
@@ -461,3 +746,50 @@ if __name__ == "__main__":
     assert scored[0][0].key() != base.key(), "expected the sim-refined choice to differ"
     assert scored[0][1] < basemk, "expected the sim-refined choice to be faster"
     print("ok: sim-refined choice differs from the Eq.-4 choice (as the Rust test pins)")
+
+    # The 1F1B bubble acceptance pinned by strategies::tests::
+    # pipelined_1f1b_idle_matches_analytic_bubble: compute-dominated
+    # uniform stages -> idle fraction == (p-1)/(m+p-1) within 5%.
+    class _L:
+        def __init__(self, k, n, rows):
+            self.name, self.k, self.n, self.rows, self.transposed = "l", k, n, rows, False
+
+        def fwd_flops(self, samples):
+            return 2.0 * samples * self.rows * self.k * self.n
+
+        def weight_params(self):
+            return float(self.k * self.n)
+
+    uniform = Net([_L(4096, 4096, 128) for _ in range(8)], [], 8 * 4096 * 4096)
+    stages, mb = 4, 8
+    progs = build_t3d_pipeline(uniform, Mesh(1, 1, 1), 64, 1, stages, mb, polaris())
+    mk, busy = simulate(polaris(), progs)
+    idle = 1.0 - (sum(busy) / len(busy)) / mk
+    bub = bubble_fraction(stages, mb)
+    print(f"1f1b p={stages} m={mb}: idle {idle:.4f} vs analytic bubble {bub:.4f}")
+    assert abs(idle / bub - 1.0) < 0.05, "1F1B idle fraction drifted from (p-1)/(m+p-1)"
+    print("ok: simulated 1F1B bubble matches the analytic fraction (as the Rust test pins)")
+
+    # The pipelined-refine acceptance pinned by planner::tests::
+    # refined_pipelined_never_slower_than_pipeline_free_on_gpt9b_16.
+    base, basemk, scored = refine_pipelined(gpt9b, 64, 16, polaris(), "rep",
+                                            k=2, depth=2, pipes=[1, 2, 4], m=8)
+    print(f"gpt9b/16 polaris replicated, G_pipe in {{1,2,4}}: "
+          f"pipeline-free Eq.-4 base {base.key()} at {basemk:.4f}s")
+    for p, mm, score, mk in scored:
+        mark = " <- winner" if (p, mm, score, mk) == scored[0] else ""
+        print(f"  G_pipe={p} {mm.key()}: {mk:.4f}s{mark}")
+    assert scored[0][3] <= basemk, "pipelined refine must never lose to the Eq.-4 winner"
+    print("ok: refined pipelined plan is never slower than the pipeline-free Eq.-4 winner")
+
+    # The frontier golden plan pinned by planner::tests::
+    # gpt80b_1024_frontier_plan_matches_ci_golden and diffed by the CI
+    # bench-smoke job against ci/golden_plan_gpt80b_1024_frontier.json.
+    gpt80b = gpt_network(51200, 16384, 24, 128, 2048)
+    fbase, _ = base_plan(candidates(gpt80b, 1024, 1024, frontier(), "rep"))
+    print(f"gpt80b/1024 frontier replicated plan: {fbase.key()} "
+          f"(g_tensor {fbase.g_tensor()})")
+    assert fbase.key() == (16, 4, 16), "frontier golden plan drifted"
+    pbase, _ = base_plan(candidates(gpt80b, 1024, 1024, polaris(), "rep"))
+    assert pbase.key() == (16, 4, 16), "polaris golden plan drifted"
+    print("ok: gpt80b/1024 plans match the CI goldens (polaris + frontier)")

@@ -131,6 +131,36 @@ pub fn colossal3d_network_volume(net: &NetworkDesc, batch: f64, mesh: &Mesh) -> 
         .sum()
 }
 
+/// Pipeline bubble fraction of the 1F1B (and GPipe) schedule: with `p`
+/// stages and `m` microbatches, `(p-1)` of the `(m+p-1)` steady-state
+/// step slots are idle on every rank, so the idle fraction of a
+/// compute-dominated, stage-balanced pipeline is `(p-1)/(m+p-1)`.
+pub fn pipeline_bubble_fraction(p: usize, m: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p - 1) as f64 / (m + p - 1) as f64
+}
+
+/// Bubble-adjusted Eq.-4 score of a pipelined candidate `(G_pipe = p,
+/// inner mesh)`: each rank owns `1/p` of the layers (so `1/p` of the
+/// per-GPU tensor-parallel volume — microbatching does not change volume,
+/// only splits the buffers), inflated by `1/(1-bubble) = (m+p-1)/m` for
+/// the 1F1B idle slots.  Comparable against the plain Eq.-4 volume at
+/// `p = 1`, where it degenerates to [`tensor3d_network_volume`]; like
+/// Eq. 4 itself it is a volume proxy — `plan --refine` re-ranks the
+/// survivors by simulated makespan.
+pub fn pipelined_volume_score(
+    net: &NetworkDesc,
+    batch: f64,
+    inner_mesh: &Mesh,
+    p: usize,
+    m: usize,
+) -> f64 {
+    tensor3d_network_volume(net, batch, inner_mesh) / p as f64
+        / (1.0 - pipeline_bubble_fraction(p, m))
+}
+
 /// Eq. 5 lower bound on the Tensor3D volume as a function of g_data (used
 /// to justify "maximize G_data").
 pub fn eq5_lower_bound(k: f64, n: f64, batch: f64, world: usize, g_data: usize) -> f64 {
@@ -232,6 +262,29 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn bubble_fraction_matches_1f1b_analytics() {
+        assert_eq!(pipeline_bubble_fraction(1, 8), 0.0);
+        assert!((pipeline_bubble_fraction(4, 8) - 3.0 / 11.0).abs() < 1e-12);
+        assert!((pipeline_bubble_fraction(2, 1) - 0.5).abs() < 1e-12);
+        // more microbatches amortize the bubble away
+        assert!(pipeline_bubble_fraction(4, 64) < pipeline_bubble_fraction(4, 8));
+        assert!(pipeline_bubble_fraction(4, 4096) < 0.001);
+    }
+
+    #[test]
+    fn pipelined_score_degenerates_to_eq4_at_p1() {
+        let net = GptDims { vocab: 512, hidden: 256, layers: 2, heads: 4, seq: 8 }.network();
+        let mesh = Mesh::new(2, 2, 2, 1);
+        let eq4 = tensor3d_network_volume(&net, 64.0, &mesh);
+        let s1 = pipelined_volume_score(&net, 64.0, &mesh, 1, 8);
+        assert_eq!(eq4.to_bits(), s1.to_bits());
+        // p > 1: the per-stage volume shrinks by p but the bubble inflates
+        // it back by (m+p-1)/m
+        let s2 = pipelined_volume_score(&net, 64.0, &mesh, 2, 8);
+        assert!((s2 - eq4 / 2.0 * 9.0 / 8.0).abs() < 1e-9 * eq4);
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod layout;
 pub mod collectives;
 pub mod comm_model;
 pub mod models;
+pub mod pipeline;
 pub mod sim;
 pub mod strategies;
 pub mod runtime;

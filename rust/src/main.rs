@@ -4,8 +4,10 @@
 //!   train      live training on AOT artifacts (the real three-layer stack)
 //!   plan       §5 planner: recommend (G_data, G_r, G_c) for a model+cluster
 //!              (--refine K re-ranks the K best Eq.-4 candidates by
-//!              simulated full-world makespan)
+//!              simulated full-world makespan; --pipeline P adds the 1F1B
+//!              pipeline axis G_pipe with its bubble-fraction term)
 //!   simulate   one iteration of a strategy on the cluster simulator
+//!              (--pipeline P --microbatches M runs tensor3d under 1F1B)
 //!   bench-sim  paper-scale simulator benchmark: build + simulate a full
 //!              gpt80b iteration on the 1024-GPU Polaris mesh and write
 //!              BENCH_sim.json (schema documented in ROADMAP.md)
@@ -49,15 +51,35 @@ fn model_by_name(name: &str) -> Result<(NetworkDesc, NetKind, usize, usize)> {
     Ok(hit)
 }
 
-fn strategy_by_name(name: &str, depth: usize) -> Result<Strategy> {
-    Ok(match name {
+fn strategy_by_name(
+    name: &str,
+    depth: usize,
+    pipeline: usize,
+    microbatches: usize,
+) -> Result<Strategy> {
+    let strat = match name {
         "tensor3d" => Strategy::Tensor3d { depth, transpose_opt: true },
         "tensor3d-sync" => Strategy::Tensor3d { depth: 1, transpose_opt: true },
         "tensor3d-noxpose" => Strategy::Tensor3d { depth, transpose_opt: false },
         "megatron" => Strategy::Megatron,
         "colossal3d" => Strategy::Colossal3d,
         other => bail!("unknown strategy {other:?}"),
-    })
+    };
+    if pipeline > 1 {
+        if name != "tensor3d" {
+            bail!("--pipeline > 1 is only modelled for the tensor3d strategy");
+        }
+        if microbatches == 0 {
+            bail!("--pipeline needs --microbatches >= 1");
+        }
+        return Ok(Strategy::Tensor3dPipeline {
+            depth,
+            transpose_opt: true,
+            stages: pipeline,
+            microbatches,
+        });
+    }
+    Ok(strat)
 }
 
 fn machine_by_name(name: &str) -> Result<Machine> {
@@ -125,6 +147,13 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
                  makespan (0 = volume-only, the paper's §5 rules)",
             ),
             opt("depth", "2", "overdecomposition degree used by --refine simulations"),
+            opt(
+                "pipeline",
+                "1",
+                "max pipeline depth: search G_pipe over the divisors of this value \
+                 with the 1F1B bubble term (1 = no pipelining)",
+            ),
+            opt("microbatches", "8", "1F1B microbatches per iteration (with --pipeline > 1)"),
             flag("sharded-state", "depth-shard optimizer state (ZeRO-style memory rule)"),
             flag("json", "emit the recommendation as one-line JSON (CI golden diff)"),
         ],
@@ -145,6 +174,134 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         planner::StateMode::Replicated
     };
     let refine = a.usize("refine")?;
+    let pipeline = a.usize("pipeline")?;
+    let microbatches = a.usize("microbatches")?;
+    if pipeline > 1 {
+        if microbatches == 0 {
+            bail!("--pipeline needs --microbatches >= 1");
+        }
+        let pipes = tensor3d::mesh::divisors(pipeline);
+        if refine > 0 {
+            let r = planner::plan_refined_pipelined(
+                &net,
+                kind,
+                batch,
+                gpus,
+                &machine,
+                mode,
+                refine,
+                a.usize("depth")?,
+                &pipes,
+                microbatches,
+            );
+            if a.flag("json") {
+                use tensor3d::util::json::Json;
+                let j = Json::obj(vec![
+                    ("model", Json::str(&model_name)),
+                    ("gpus", Json::num(gpus as f64)),
+                    ("machine", Json::str(&machine.name)),
+                    ("pipeline", Json::num(r.pipeline as f64)),
+                    ("microbatches", Json::num(r.microbatches as f64)),
+                    (
+                        "bubble_fraction",
+                        Json::num(comm_model::pipeline_bubble_fraction(
+                            r.pipeline,
+                            r.microbatches,
+                        )),
+                    ),
+                    ("world", Json::num((r.pipeline * r.mesh.world()) as f64)),
+                    ("g_data", Json::num(r.mesh.g_data as f64)),
+                    ("g_r", Json::num(r.mesh.g_r as f64)),
+                    ("g_c", Json::num(r.mesh.g_c as f64)),
+                    ("g_tensor", Json::num(r.mesh.g_tensor() as f64)),
+                    ("makespan_s", Json::num(r.makespan_s)),
+                    ("eq4_makespan_s", Json::num(r.base_makespan_s)),
+                ]);
+                println!("{j}");
+                return Ok(());
+            }
+            println!(
+                "model {} ({} params), batch {batch}, {gpus}x {}: sim-refined pipelined plan \
+                 (G_pipe over {pipes:?}, {microbatches} microbatches, top {refine} per depth)",
+                net.name,
+                fmt_bytes(net.params),
+                machine.name
+            );
+            for (p, m, _, mk) in &r.candidates {
+                let marker = if (*p, *m) == (r.pipeline, r.mesh) { " <- recommended" } else { "" };
+                let base = if *p == 1 && *m == r.base.mesh { " [Eq.-4 winner]" } else { "" };
+                println!(
+                    "  G_pipe={p} g_data={} g_r={} g_c={}  simulated {mk:.3} s/iter{base}{marker}",
+                    m.g_data, m.g_r, m.g_c
+                );
+            }
+            println!(
+                "  refined: G_pipe={} g_data={} g_r={} g_c={} at {:.3} s/iter \
+                 ({:.1}% vs the pipeline-free Eq.-4 pick)",
+                r.pipeline,
+                r.mesh.g_data,
+                r.mesh.g_r,
+                r.mesh.g_c,
+                r.makespan_s,
+                (1.0 - r.makespan_s / r.base_makespan_s) * 100.0
+            );
+            return Ok(());
+        }
+        let r = planner::plan_pipelined(
+            &net,
+            kind,
+            batch,
+            gpus,
+            &machine,
+            mode,
+            &pipes,
+            microbatches,
+        );
+        if a.flag("json") {
+            use tensor3d::util::json::Json;
+            let j = Json::obj(vec![
+                ("model", Json::str(&model_name)),
+                ("gpus", Json::num(gpus as f64)),
+                ("machine", Json::str(&machine.name)),
+                ("pipeline", Json::num(r.pipeline as f64)),
+                ("microbatches", Json::num(r.microbatches as f64)),
+                ("bubble_fraction", Json::num(r.bubble_fraction)),
+                ("world", Json::num((r.pipeline * r.mesh.world()) as f64)),
+                ("g_data", Json::num(r.mesh.g_data as f64)),
+                ("g_r", Json::num(r.mesh.g_r as f64)),
+                ("g_c", Json::num(r.mesh.g_c as f64)),
+                ("g_tensor", Json::num(r.mesh.g_tensor() as f64)),
+            ]);
+            println!("{j}");
+            return Ok(());
+        }
+        println!(
+            "model {} ({} params), batch {batch}, {gpus}x {}: pipelined Eq.-4 plan \
+             (G_pipe over {pipes:?}, {microbatches} microbatches)",
+            net.name,
+            fmt_bytes(net.params),
+            machine.name
+        );
+        for (p, m, score) in &r.candidates {
+            let marker = if (*p, *m) == (r.pipeline, r.mesh) { " <- recommended" } else { "" };
+            println!(
+                "  G_pipe={p} g_data={} g_r={} g_c={}  bubble-adjusted volume {}{marker}",
+                m.g_data,
+                m.g_r,
+                m.g_c,
+                fmt_bytes(score * strategies::BYTES_PER_ELEM)
+            );
+        }
+        println!(
+            "  recommended: G_pipe={} g_data={} g_r={} g_c={} (1F1B bubble {:.1}%)",
+            r.pipeline,
+            r.mesh.g_data,
+            r.mesh.g_r,
+            r.mesh.g_c,
+            r.bubble_fraction * 100.0
+        );
+        return Ok(());
+    }
     if refine > 0 {
         let r = planner::plan_refined(
             &net,
@@ -207,6 +364,7 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         let j = Json::obj(vec![
             ("model", Json::str(&model_name)),
             ("gpus", Json::num(gpus as f64)),
+            ("machine", Json::str(&machine.name)),
             ("world", Json::num(p.mesh.world() as f64)),
             ("g_data", Json::num(p.mesh.g_data as f64)),
             ("g_r", Json::num(p.mesh.g_r as f64)),
@@ -263,11 +421,13 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
                 "tensor3d",
                 "tensor3d|tensor3d-sync|tensor3d-noxpose|megatron|colossal3d",
             ),
-            opt("mesh", "", "g_data,g_rxg_c e.g. 8,2x4 (empty = planner)"),
+            opt("mesh", "", "inner tensor mesh g_data,g_rxg_c e.g. 8,2x4 (empty = planner)"),
             opt("depth", "2", "overdecomposition degree"),
-            opt("gpus", "64", "GPU count (when mesh empty)"),
+            opt("gpus", "64", "GPU count (when mesh empty; includes pipeline stages)"),
             opt("machine", "polaris", "perlmutter|polaris|frontier"),
             opt("batch", "0", "global batch (0 = default)"),
+            opt("pipeline", "1", "1F1B pipeline stages (tensor3d only; 1 = no pipelining)"),
+            opt("microbatches", "8", "1F1B microbatches per iteration (with --pipeline > 1)"),
             flag("sharded-state", "depth-shard parameter/optimizer state (overlapped RS/AG)"),
             flag("dp-barrier", "ablation: serialize the sharded-state collectives"),
         ],
@@ -281,15 +441,24 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         b => b,
     };
     let depth = a.usize("depth")?;
-    let strat = strategy_by_name(&a.str("strategy")?, depth)?;
+    let pipeline = a.usize("pipeline")?;
+    let microbatches = a.usize("microbatches")?;
+    let strat = strategy_by_name(&a.str("strategy")?, depth, pipeline, microbatches)?;
+    if pipeline > 1 && a.flag("dp-barrier") {
+        bail!("the --dp-barrier ablation is not modelled for pipelined schedules");
+    }
     let mesh_spec = a.str("mesh")?;
     let mesh = if mesh_spec.is_empty() {
         let gpus = a.usize("gpus")?;
         let _ = kind;
-        comm_model::optimal_meshes(&net, batch as f64, gpus, g_tensor)
+        if gpus % pipeline.max(1) != 0 {
+            bail!("--gpus {gpus} is not divisible by --pipeline {pipeline}");
+        }
+        let inner_gpus = gpus / pipeline.max(1);
+        comm_model::optimal_meshes(&net, batch as f64, inner_gpus, g_tensor.min(inner_gpus))
             .first()
             .map(|(m, _)| *m)
-            .ok_or_else(|| anyhow!("no valid mesh for {gpus} GPUs"))?
+            .ok_or_else(|| anyhow!("no valid mesh for {inner_gpus} GPUs per stage"))?
     } else {
         let (dpart, grid) = mesh_spec
             .split_once(',')
@@ -307,11 +476,12 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         bail!("--sharded-state is not modelled for colossal3d");
     }
     let (time, gb) = strategies::iterate_with(strat, &net, &mesh, batch, &machine, opts);
-    let u = strategies::mfu(&net, batch, mesh.world(), time, &machine);
+    let world = strat.world(&mesh);
+    let u = strategies::mfu(&net, batch, world, time, &machine);
     println!(
         "{} on {} GPUs ({}): strategy {}  mesh g_data={} g_r={} g_c={}{}",
         net.name,
-        mesh.world(),
+        world,
         machine.name,
         strat.label(),
         mesh.g_data,
@@ -327,6 +497,13 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             ""
         }
     );
+    if pipeline > 1 {
+        println!(
+            "  pipeline: {pipeline} stages x {microbatches} microbatches (1F1B, analytic \
+             bubble {:.1}%)",
+            comm_model::pipeline_bubble_fraction(pipeline, microbatches) * 100.0
+        );
+    }
     println!(
         "  time/iter: {time:.3}s   comm volume: {} per GPU   MFU {:.1}%",
         fmt_bytes(gb * 1e9),
@@ -350,6 +527,8 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
             opt("machine", "polaris", "perlmutter|polaris|frontier"),
             opt("depth", "2", "overdecomposition degree"),
             opt("batch", "0", "global batch (0 = model default)"),
+            opt("pipeline", "1", "1F1B pipeline stages (1 = no pipelining)"),
+            opt("microbatches", "8", "1F1B microbatches per iteration (with --pipeline > 1)"),
             opt("out", "BENCH_sim.json", "result file (schema documented in ROADMAP.md)"),
             opt(
                 "budget-s",
@@ -371,15 +550,43 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     };
     let gpus = a.usize("gpus")?;
     let depth = a.usize("depth")?;
+    let pipeline = a.usize("pipeline")?.max(1);
+    let microbatches = a.usize("microbatches")?;
+    if pipeline > 1 && microbatches == 0 {
+        bail!("--pipeline needs --microbatches >= 1");
+    }
     let sharded = !a.flag("replicated");
     let mode = if sharded {
         planner::StateMode::DepthSharded
     } else {
         planner::StateMode::Replicated
     };
-    let plan = planner::plan_mode(&net, kind, batch, gpus, &machine, mode);
-    let mesh = plan.mesh;
-    let strat = Strategy::Tensor3d { depth, transpose_opt: true };
+    let (mesh, strat) = if pipeline > 1 {
+        let p = planner::plan_pipelined(
+            &net,
+            kind,
+            batch,
+            gpus,
+            &machine,
+            mode,
+            &[pipeline],
+            microbatches,
+        );
+        if p.pipeline != pipeline {
+            bail!("G_pipe={pipeline} is not admissible for {gpus} GPUs on this model");
+        }
+        let strat = Strategy::Tensor3dPipeline {
+            depth,
+            transpose_opt: true,
+            stages: pipeline,
+            microbatches,
+        };
+        (p.mesh, strat)
+    } else {
+        let plan = planner::plan_mode(&net, kind, batch, gpus, &machine, mode);
+        (plan.mesh, Strategy::Tensor3d { depth, transpose_opt: true })
+    };
+    let bubble = comm_model::pipeline_bubble_fraction(pipeline, microbatches);
     let opts = strategies::ScheduleOpts { sharded_state: sharded, dp_barrier: false };
 
     let sw = Stopwatch::start();
@@ -394,13 +601,16 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     let sim_s = sw.secs();
     let total_s = build_s + sim_s;
     let ops_per_sec = ops as f64 / sim_s.max(1e-12);
-    let u = strategies::mfu(&net, batch, mesh.world(), r.makespan, &machine);
+    let u = strategies::mfu(&net, batch, strat.world(&mesh), r.makespan, &machine);
 
     let j = Json::obj(vec![
         ("model", Json::str(&model_name)),
         ("gpus", Json::num(gpus as f64)),
         ("machine", Json::str(&machine.name)),
         ("depth", Json::num(depth as f64)),
+        ("pipeline", Json::num(pipeline as f64)),
+        ("microbatches", Json::num(microbatches as f64)),
+        ("bubble_fraction", Json::num(bubble)),
         ("sharded_state", Json::Bool(sharded)),
         ("g_data", Json::num(mesh.g_data as f64)),
         ("g_r", Json::num(mesh.g_r as f64)),
@@ -419,12 +629,17 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     let out = a.str("out")?;
     std::fs::write(&out, format!("{j}\n"))?;
     println!(
-        "bench-sim: {} on {gpus}x {} (g_data={} g_r={} g_c={}, depth {depth}, {} state)",
+        "bench-sim: {} on {gpus}x {} (g_data={} g_r={} g_c={}, depth {depth}{}, {} state)",
         net.name,
         machine.name,
         mesh.g_data,
         mesh.g_r,
         mesh.g_c,
+        if pipeline > 1 {
+            format!(", pipeline {pipeline}x{microbatches} (bubble {:.1}%)", bubble * 100.0)
+        } else {
+            String::new()
+        },
         if sharded { "depth-sharded" } else { "replicated" }
     );
     println!(

@@ -1,0 +1,271 @@
+//! Pipeline parallelism: stage-to-layer partitioning and microbatch
+//! schedules — the fourth decomposition axis (`G_pipe`) on top of the
+//! paper's `(G_data, G_r, G_c)` tensor mesh.
+//!
+//! AxoNN's lineage (arXiv:2110.13005) composes the 3-D tensor-parallel
+//! algorithm with asynchronous inter-layer pipelining, and real
+//! deployments of the stack (arXiv:2502.08145) tune the pipeline depth
+//! together with the tensor mesh.  This module holds the *schedule*
+//! algebra: which microbatch each stage runs forward or backward at each
+//! step, and which contiguous slice of the layer list each stage owns.
+//! The simulator-facing compilation (Send/Recv ops between stage
+//! neighbors, per-layer FWD/BWD templates within a stage) lives in
+//! `strategies::build_tensor3d_pipeline`; the analytic bubble-fraction
+//! term the planner scores with lives in
+//! [`crate::comm_model::pipeline_bubble_fraction`].
+
+use std::ops::Range;
+
+/// Which microbatch schedule a pipeline stage runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineSchedule {
+    /// GPipe: all `M` forwards, then all `M` backwards.  Same bubble as
+    /// 1F1B (`(p-1)/(m+p-1)` of the steady-state step count) but peak
+    /// activation memory grows with `M`.
+    GPipe,
+    /// One-forward-one-backward (PipeDream-Flush): each stage runs a
+    /// short warmup of forwards, then strictly alternates F/B, then
+    /// drains the remaining backwards.  In-flight microbatches are
+    /// bounded by the stage's distance to the end of the pipeline.
+    OneFOneB,
+}
+
+/// One schedule step of a stage: run the forward or backward pass of the
+/// given microbatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    Fwd(usize),
+    Bwd(usize),
+}
+
+/// The step sequence stage `stage` (of `stages`) executes for
+/// `microbatches` microbatches under `schedule`.
+///
+/// Every stage runs each microbatch's forward exactly once and its
+/// backward exactly once, forwards and backwards each in microbatch
+/// order; the schedules differ only in how the two interleave.
+pub fn steps(
+    schedule: PipelineSchedule,
+    stage: usize,
+    stages: usize,
+    microbatches: usize,
+) -> Vec<Step> {
+    assert!(stages >= 1 && stage < stages, "stage {stage} out of range for {stages} stages");
+    assert!(microbatches >= 1, "need at least one microbatch");
+    let m = microbatches;
+    let mut out = Vec::with_capacity(2 * m);
+    match schedule {
+        PipelineSchedule::GPipe => {
+            out.extend((0..m).map(Step::Fwd));
+            out.extend((0..m).map(Step::Bwd));
+        }
+        PipelineSchedule::OneFOneB => {
+            // stages closer to the head keep more microbatches in flight
+            let warmup = (stages - 1 - stage).min(m);
+            out.extend((0..warmup).map(Step::Fwd));
+            for k in 0..(m - warmup) {
+                out.push(Step::Fwd(warmup + k));
+                out.push(Step::Bwd(k));
+            }
+            out.extend(((m - warmup)..m).map(Step::Bwd));
+        }
+    }
+    out
+}
+
+/// Partition `costs.len()` layers into `stages` contiguous, non-empty
+/// slices balancing cumulative cost: stage `s` ends at the first layer
+/// where the running cost reaches `total * (s+1) / stages`.
+///
+/// `costs` is any per-layer weight proportional to the stage work (the
+/// strategies pass forward flops per sample, attached compute included);
+/// with uniform costs and `stages | costs.len()` the split is exactly
+/// even.
+pub fn partition_layers(costs: &[f64], stages: usize) -> Vec<Range<usize>> {
+    let n = costs.len();
+    assert!(stages >= 1, "need at least one stage");
+    assert!(stages <= n, "cannot split {n} layers into {stages} non-empty stages");
+    let mut cum = Vec::with_capacity(n + 1);
+    cum.push(0.0);
+    for &c in costs {
+        let last = *cum.last().expect("cum is non-empty");
+        cum.push(last + c);
+    }
+    let total = cum[n];
+    let mut cuts = Vec::with_capacity(stages + 1);
+    cuts.push(0usize);
+    for s in 1..stages {
+        let target = total * s as f64 / stages as f64;
+        // first boundary whose cumulative cost reaches the target,
+        // clamped so every stage (including the remaining ones) keeps at
+        // least one layer
+        let cut = cum.partition_point(|&c| c < target);
+        cuts.push(cut.clamp(cuts[s - 1] + 1, n - (stages - s)));
+    }
+    cuts.push(n);
+    cuts.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(steps: &[Step]) -> (Vec<usize>, Vec<usize>) {
+        let mut f = Vec::new();
+        let mut b = Vec::new();
+        for s in steps {
+            match s {
+                Step::Fwd(m) => f.push(*m),
+                Step::Bwd(m) => b.push(*m),
+            }
+        }
+        (f, b)
+    }
+
+    #[test]
+    fn one_f_one_b_runs_every_microbatch_once_in_order() {
+        for stages in 1..=6usize {
+            for m in 1..=10usize {
+                for stage in 0..stages {
+                    let s = steps(PipelineSchedule::OneFOneB, stage, stages, m);
+                    assert_eq!(s.len(), 2 * m);
+                    let (f, b) = counts(&s);
+                    let want: Vec<usize> = (0..m).collect();
+                    assert_eq!(f, want, "fwd order, stage {stage}/{stages} m {m}");
+                    assert_eq!(b, want, "bwd order, stage {stage}/{stages} m {m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_bounds_in_flight_microbatches() {
+        // at any prefix, forwards minus backwards never exceeds the
+        // stage's pipeline distance + 1 — the 1F1B memory bound that
+        // distinguishes it from GPipe
+        for stages in 2..=5usize {
+            for stage in 0..stages {
+                let s = steps(PipelineSchedule::OneFOneB, stage, stages, 12);
+                let mut in_flight = 0i64;
+                let bound = (stages - stage) as i64;
+                for step in s {
+                    match step {
+                        Step::Fwd(_) => in_flight += 1,
+                        Step::Bwd(_) => in_flight -= 1,
+                    }
+                    assert!(in_flight <= bound, "stage {stage}/{stages}: {in_flight} in flight");
+                    assert!(in_flight >= 0);
+                }
+                assert_eq!(in_flight, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn last_stage_alternates_strictly() {
+        let s = steps(PipelineSchedule::OneFOneB, 3, 4, 5);
+        let want = vec![
+            Step::Fwd(0),
+            Step::Bwd(0),
+            Step::Fwd(1),
+            Step::Bwd(1),
+            Step::Fwd(2),
+            Step::Bwd(2),
+            Step::Fwd(3),
+            Step::Bwd(3),
+            Step::Fwd(4),
+            Step::Bwd(4),
+        ];
+        assert_eq!(s, want);
+    }
+
+    #[test]
+    fn first_stage_warms_up_then_alternates() {
+        let s = steps(PipelineSchedule::OneFOneB, 0, 4, 5);
+        let want = vec![
+            Step::Fwd(0),
+            Step::Fwd(1),
+            Step::Fwd(2),
+            Step::Fwd(3),
+            Step::Bwd(0),
+            Step::Fwd(4),
+            Step::Bwd(1),
+            Step::Bwd(2),
+            Step::Bwd(3),
+            Step::Bwd(4),
+        ];
+        assert_eq!(s, want);
+    }
+
+    #[test]
+    fn warmup_clamps_when_microbatches_scarce() {
+        // m = 2 < stages - 1 = 3: the schedule degenerates to GPipe
+        let s = steps(PipelineSchedule::OneFOneB, 0, 4, 2);
+        assert_eq!(s, steps(PipelineSchedule::GPipe, 0, 4, 2));
+    }
+
+    #[test]
+    fn gpipe_is_all_forward_all_backward() {
+        let s = steps(PipelineSchedule::GPipe, 1, 4, 3);
+        let (f, b) = counts(&s);
+        assert_eq!(f, vec![0, 1, 2]);
+        assert_eq!(b, vec![0, 1, 2]);
+        assert!(matches!(s[2], Step::Fwd(2)) && matches!(s[3], Step::Bwd(0)));
+    }
+
+    #[test]
+    fn single_stage_pipeline_is_one_f_one_b_per_microbatch() {
+        let s = steps(PipelineSchedule::OneFOneB, 0, 1, 3);
+        assert_eq!(
+            s,
+            vec![
+                Step::Fwd(0),
+                Step::Bwd(0),
+                Step::Fwd(1),
+                Step::Bwd(1),
+                Step::Fwd(2),
+                Step::Bwd(2)
+            ]
+        );
+    }
+
+    #[test]
+    fn partition_uniform_costs_evenly() {
+        let costs = vec![1.0; 8];
+        let r = partition_layers(&costs, 4);
+        assert_eq!(r, vec![0..2, 2..4, 4..6, 6..8]);
+        let r1 = partition_layers(&costs, 1);
+        assert_eq!(r1, vec![0..8]);
+    }
+
+    #[test]
+    fn partition_balances_skewed_costs() {
+        // one heavy head layer: the first stage should hold it alone
+        let costs = vec![4.0, 1.0, 1.0, 1.0, 1.0];
+        let r = partition_layers(&costs, 2);
+        assert_eq!(r, vec![0..1, 1..5]);
+    }
+
+    #[test]
+    fn partition_covers_all_layers_nonempty() {
+        for n in 1..=12usize {
+            for stages in 1..=n {
+                let costs: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+                let r = partition_layers(&costs, stages);
+                assert_eq!(r.len(), stages);
+                assert_eq!(r[0].start, 0);
+                assert_eq!(r[stages - 1].end, n);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+                assert!(r.iter().all(|x| !x.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty stages")]
+    fn partition_rejects_more_stages_than_layers() {
+        partition_layers(&[1.0, 1.0], 3);
+    }
+}

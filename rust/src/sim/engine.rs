@@ -25,9 +25,29 @@
 //!   not O(world × ops × group size);
 //! * op names are interned ([`NameId`]) and resolved only when
 //!   `keep_spans` asks for a trace;
-//! * per-GPU per-stream state is fixed `[T; 3]` arrays indexed by
+//! * per-GPU per-stream state is fixed `[T; 4]` arrays indexed by
 //!   [`Stream`], and collective member lists are pooled, so the hot loop
 //!   performs no hashing of stream keys and no mid-loop `Vec` clones.
+//!
+//! ## Point-to-point ops
+//!
+//! Pipeline parallelism adds cross-rank edges: [`OpKind::Send`] /
+//! [`OpKind::Recv`] pairs rendezvous by tag exactly like a 2-member
+//! collective — the transfer starts when *both* endpoints are ready and
+//! completes on both simultaneously — timed by the pair communicator's
+//! precomputed link parameters ([`Machine::p2p_time_on`]).  They live on
+//! the dedicated [`Stream::P2p`], which models a NCCL-style *channel
+//! pool* rather than a FIFO stream: ops still arrive (join their
+//! rendezvous) in enqueue order, but an in-flight transfer does not
+//! delay the start of the next one — start times are governed solely by
+//! explicit deps and partner readiness, which also keeps results
+//! invariant under the op-issue permutations `rust/tests/sim_golden.rs`
+//! shuffles.
+//!
+//! A program whose rendezvous never completes (an unmatched `Recv`, a
+//! dependency cycle) stalls the event loop with ops outstanding;
+//! [`try_simulate`] reports that as a [`StallError`] naming the stuck
+//! rank/op instead of returning a silently truncated makespan.
 //!
 //! `rust/tests/sim_golden.rs` pins this engine bit-for-bit against the
 //! pre-refactor event loop kept in [`super::reference`].
@@ -36,6 +56,7 @@ use super::comm_world::{CommWorld, GroupId};
 use super::machine::Machine;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::fmt;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Stream {
@@ -47,12 +68,17 @@ pub enum Stream {
     /// overlap both compute *and* the tensor-parallel collectives, exactly
     /// like a dedicated NCCL communicator stream.
     CommDp,
+    /// Point-to-point pipeline transfers ([`OpKind::Send`] /
+    /// [`OpKind::Recv`]).  Modelled as a channel *pool*, not a FIFO
+    /// stream: ops arrive in enqueue order but an in-flight transfer
+    /// never delays the start of the next one (see the module docs).
+    P2p,
 }
 
 impl Stream {
-    pub const ALL: [Stream; 3] = [Stream::Compute, Stream::Comm, Stream::CommDp];
+    pub const ALL: [Stream; 4] = [Stream::Compute, Stream::Comm, Stream::CommDp, Stream::P2p];
 
-    /// Dense index for `[T; 3]` per-stream state tables.
+    /// Dense index for `[T; 4]` per-stream state tables.
     #[inline]
     pub const fn index(self) -> usize {
         self as usize
@@ -112,18 +138,34 @@ pub enum OpKind {
     /// member keeps `bytes / p`).  Replaces the data-parallel gradient
     /// all-reduce under depth sharding.
     ReduceScatter { bytes: f64, slot: u32 },
+    /// Point-to-point send of `bytes` to the other member of a 2-rank
+    /// pair communicator (pipeline stage boundary).  Completion is
+    /// matched cross-rank: the peer's [`OpKind::Recv`] carrying the same
+    /// tag rendezvouses with this op, and the transfer spans both ranks.
+    Send { bytes: f64, slot: u32 },
+    /// Point-to-point receive; see [`OpKind::Send`].
+    Recv { bytes: f64, slot: u32 },
 }
 
 impl OpKind {
-    /// `(bytes, slot)` when this op is a collective.
+    /// `(bytes, slot)` when this op participates in a cross-rank
+    /// rendezvous (collectives and point-to-point transfers alike).
     #[inline]
     pub fn collective(&self) -> Option<(f64, u32)> {
         match *self {
             OpKind::Compute { .. } => None,
             OpKind::AllReduce { bytes, slot }
             | OpKind::AllGather { bytes, slot }
-            | OpKind::ReduceScatter { bytes, slot } => Some((bytes, slot)),
+            | OpKind::ReduceScatter { bytes, slot }
+            | OpKind::Send { bytes, slot }
+            | OpKind::Recv { bytes, slot } => Some((bytes, slot)),
         }
+    }
+
+    /// Whether this is a point-to-point transfer endpoint.
+    #[inline]
+    pub fn is_p2p(&self) -> bool {
+        matches!(self, OpKind::Send { .. } | OpKind::Recv { .. })
     }
 
     /// Per-GPU wire traffic (sent+received bytes) of one participation in
@@ -140,6 +182,8 @@ impl OpKind {
                 let p = p as f64;
                 (p - 1.0) / p * bytes
             }
+            // the full buffer crosses each endpoint's link exactly once
+            OpKind::Send { bytes, .. } | OpKind::Recv { bytes, .. } => bytes,
         }
     }
 
@@ -154,6 +198,9 @@ impl OpKind {
             OpKind::AllGather { bytes, .. } => Machine::allgather_time_on(bytes, p, bw, lat),
             OpKind::ReduceScatter { bytes, .. } => {
                 Machine::reduce_scatter_time_on(bytes, p, bw, lat)
+            }
+            OpKind::Send { bytes, .. } | OpKind::Recv { bytes, .. } => {
+                Machine::p2p_time_on(bytes, bw, lat)
             }
         }
     }
@@ -181,7 +228,7 @@ pub struct Binding {
 pub struct ClassProgram {
     pub ops: Vec<Op>,
     /// Per-stream FIFO issue order (indices into `ops`), precomputed.
-    pub stream_ops: [Vec<u32>; 3],
+    pub stream_ops: [Vec<u32>; 4],
     /// Number of collective slots (length of every member rank's binding
     /// table).
     pub n_slots: u32,
@@ -443,6 +490,37 @@ impl ProgramSetBuilder {
         self.collective(name, kind, tag, group, bytes, stream, deps)
     }
 
+    /// Append a point-to-point send on [`Stream::P2p`].  `group` must be
+    /// the interned 2-member pair `{self, peer}` (both endpoints must
+    /// register the *same* member order so the pair interns once); the
+    /// peer's [`ProgramSetBuilder::recv`] with the same `tag` completes
+    /// the rendezvous.
+    pub fn send(
+        &mut self,
+        name: impl FnOnce() -> String,
+        tag: u64,
+        group: GroupId,
+        bytes: f64,
+        deps: Vec<u32>,
+    ) -> u32 {
+        let kind = |bytes, slot| OpKind::Send { bytes, slot };
+        self.collective(name, kind, tag, group, bytes, Stream::P2p, deps)
+    }
+
+    /// Append a point-to-point receive on [`Stream::P2p`]; see
+    /// [`ProgramSetBuilder::send`].
+    pub fn recv(
+        &mut self,
+        name: impl FnOnce() -> String,
+        tag: u64,
+        group: GroupId,
+        bytes: f64,
+        deps: Vec<u32>,
+    ) -> u32 {
+        let kind = |bytes, slot| OpKind::Recv { bytes, slot };
+        self.collective(name, kind, tag, group, bytes, Stream::P2p, deps)
+    }
+
     pub fn finish(mut self) -> ProgramSet {
         self.end_rank();
         self.set
@@ -492,6 +570,39 @@ impl SimResult {
     }
 }
 
+/// The event loop drained with ops still outstanding: an unmatched
+/// [`OpKind::Send`]/[`OpKind::Recv`], a dependency cycle, or a stream
+/// blocked behind either.  Returned by [`try_simulate`] so callers get a
+/// diagnostic naming the stuck rank/op instead of a silently truncated
+/// makespan; the panicking entry points ([`simulate`] etc.) panic with
+/// this message under a `deadlock:` prefix.
+#[derive(Debug, Clone)]
+pub struct StallError {
+    /// Rank of the first (lowest `(gpu, op)`) op that never ran.
+    pub gpu: usize,
+    /// Op index within that rank's program.
+    pub op: usize,
+    /// Resolved label of the stuck op.
+    pub name: String,
+    /// Total ops across all ranks that never ran.
+    pub stuck_ops: usize,
+    /// Human-readable cause: the pending rendezvous state or the
+    /// unfinished dependency blocking the op.
+    pub detail: String,
+}
+
+impl fmt::Display for StallError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "event loop stalled with {} unissued op(s): gpu {} op {} ({}) never ran — {}",
+            self.stuck_ops, self.gpu, self.op, self.name, self.detail
+        )
+    }
+}
+
+impl std::error::Error for StallError {}
+
 struct CollectiveState {
     arrived: usize,
     group_size: usize,
@@ -526,14 +637,27 @@ impl Ord for Event {
     }
 }
 
-/// Simulate one iteration of `set` on `machine`.
+/// Simulate one iteration of `set` on `machine`.  Panics (with a
+/// `deadlock:` message) if the program cannot run to completion — use
+/// [`try_simulate`] to get the diagnostic as an error instead.
 pub fn simulate(machine: &Machine, set: &ProgramSet) -> SimResult {
     simulate_with_trace(machine, set, false)
 }
 
+/// [`simulate`] returning the stall diagnostic as a [`StallError`]
+/// instead of panicking — for programs that may deadlock by construction
+/// (an unmatched `Recv`, a dependency cycle).
+pub fn try_simulate(machine: &Machine, set: &ProgramSet) -> Result<SimResult, StallError> {
+    let order: Vec<usize> = (0..set.world()).collect();
+    simulate_impl(machine, set, false, &order)
+}
+
 pub fn simulate_with_trace(machine: &Machine, set: &ProgramSet, keep_spans: bool) -> SimResult {
     let order: Vec<usize> = (0..set.world()).collect();
-    simulate_impl(machine, set, keep_spans, &order)
+    match simulate_impl(machine, set, keep_spans, &order) {
+        Ok(r) => r,
+        Err(e) => panic!("deadlock: {e}"),
+    }
 }
 
 /// [`simulate`] with an explicit initial issue order over the GPUs (a
@@ -555,7 +679,10 @@ pub fn simulate_permuted(machine: &Machine, set: &ProgramSet, order: &[usize]) -
         assert!(g < seen.len() && !seen[g], "order must be a permutation of 0..world");
         seen[g] = true;
     }
-    simulate_impl(machine, set, false, order)
+    match simulate_impl(machine, set, false, order) {
+        Ok(r) => r,
+        Err(e) => panic!("deadlock: {e}"),
+    }
 }
 
 fn simulate_impl(
@@ -563,7 +690,7 @@ fn simulate_impl(
     set: &ProgramSet,
     keep_spans: bool,
     initial_order: &[usize],
-) -> SimResult {
+) -> Result<SimResult, StallError> {
     assert_eq!(
         *machine, set.machine,
         "ProgramSet was built for machine {:?} (parameters included): its interned ring \
@@ -577,8 +704,8 @@ fn simulate_impl(
     let mut done_time: Vec<Vec<f64>> = classes.iter().map(|c| vec![0.0; c.ops.len()]).collect();
     // next op position and free time per (gpu, stream): flat arrays, no
     // hashing in the hot loop
-    let mut next: Vec<[usize; 3]> = vec![[0; 3]; n];
-    let mut stream_free: Vec<[f64; 3]> = vec![[0.0f64; 3]; n];
+    let mut next: Vec<[usize; 4]> = vec![[0; 4]; n];
+    let mut stream_free: Vec<[f64; 4]> = vec![[0.0f64; 4]; n];
 
     let mut collectives: HashMap<u64, CollectiveState> = HashMap::new();
     // recycled member lists: completing a collective returns its Vec here
@@ -682,7 +809,12 @@ fn simulate_impl(
                                 for &(mg, mi) in &st.members {
                                     let mgu = mg as usize;
                                     let mop = &classes[mgu].ops[mi as usize];
-                                    stream_free[mgu][mop.stream.index()] = end;
+                                    // Stream::P2p is a channel pool: an
+                                    // in-flight transfer never delays the
+                                    // next op's start (see module docs)
+                                    if mop.stream != Stream::P2p {
+                                        stream_free[mgu][mop.stream.index()] = end;
+                                    }
                                     comm_busy[mgu] += dur;
                                     if keep_spans {
                                         spans.push(Span {
@@ -727,11 +859,53 @@ fn simulate_impl(
         }
     }
 
-    // sanity: everything must have run (deadlock check)
+    // everything must have run; otherwise diagnose the stall instead of
+    // returning a truncated makespan
+    let mut stuck_ops = 0usize;
+    let mut first: Option<(usize, usize)> = None;
     for (g, d) in done.iter().enumerate() {
         for (i, ok) in d.iter().enumerate() {
-            assert!(*ok, "deadlock: gpu {g} op {i} ({}) never ran", set.op_name(g, i));
+            if !*ok {
+                stuck_ops += 1;
+                if first.is_none() {
+                    first = Some((g, i));
+                }
+            }
         }
+    }
+    if let Some((g, i)) = first {
+        // why: the op joined a rendezvous that never filled, it waits on
+        // an unfinished dependency, or its stream head never cleared
+        let mut detail = String::new();
+        for (tag, st) in &collectives {
+            if st.members.iter().any(|&(mg, mi)| mg as usize == g && mi as usize == i) {
+                detail = format!(
+                    "it joined rendezvous tag {tag} but only {}/{} member(s) arrived \
+                     (unmatched Send/Recv, or a peer blocked upstream)",
+                    st.arrived, st.group_size
+                );
+                break;
+            }
+        }
+        if detail.is_empty() {
+            let op = &classes[g].ops[i];
+            if let Some(&d) = op.deps.iter().find(|&&d| !done[g][d as usize]) {
+                detail = format!(
+                    "it waits on unfinished dependency op {d} ({}) — dependency cycle?",
+                    set.op_name(g, d as usize)
+                );
+            } else {
+                detail =
+                    "its stream head never cleared (blocked behind an earlier stalled op)".into();
+            }
+        }
+        return Err(StallError {
+            gpu: g,
+            op: i,
+            name: set.op_name(g, i).to_string(),
+            stuck_ops,
+            detail,
+        });
     }
 
     let makespan = done_time
@@ -743,7 +917,7 @@ fn simulate_impl(
     // compute bound.
     let exposed_wait: Vec<f64> = compute_busy.iter().map(|b| (makespan - b).max(0.0)).collect();
 
-    SimResult { makespan, spans, compute_busy, comm_busy, comm_bytes, exposed_wait }
+    Ok(SimResult { makespan, spans, compute_busy, comm_busy, comm_bytes, exposed_wait })
 }
 
 #[cfg(test)]
@@ -972,6 +1146,118 @@ mod tests {
         let r = simulate(&m, &set);
         let want = m.compute_time(1e12, 1e9) + m.allreduce_time(1e9, 2, 2);
         assert!((r.makespan - want).abs() < 1e-12, "{} vs {want}", r.makespan);
+    }
+
+    #[test]
+    fn send_recv_rendezvous_matches_across_ranks() {
+        // rank 0 computes then sends; rank 1 receives and computes on the
+        // result: makespan = compute + transfer + compute
+        let m = machine();
+        let mut t = T::new(&m);
+        {
+            let b = t.rank();
+            let g = b.group(vec![0, 1]);
+            let c = b.compute(|| "produce".into(), 1e13, 1e9, vec![]);
+            b.send(|| "tx".into(), 70, g, 1e9, vec![c]);
+        }
+        {
+            let b = t.rank();
+            let g = b.group(vec![0, 1]);
+            let r = b.recv(|| "rx".into(), 70, g, 1e9, vec![]);
+            b.compute(|| "consume".into(), 1e13, 1e9, vec![r]);
+        }
+        let r = simulate(&m, &t.finish());
+        let t_c = m.compute_time(1e13, 1e9);
+        let (bw, lat) = m.ring_bw_lat(2, 2);
+        let t_tx = Machine::p2p_time_on(1e9, bw, lat);
+        assert!((r.makespan - (2.0 * t_c + t_tx)).abs() < 1e-12, "{}", r.makespan);
+        // each endpoint moves the full buffer once
+        assert!((r.comm_bytes[0] - 1e9).abs() < 1e-9);
+        assert!((r.comm_bytes[1] - 1e9).abs() < 1e-9);
+        assert!((r.comm_busy[0] - t_tx).abs() < 1e-15);
+    }
+
+    #[test]
+    fn p2p_transfer_overlaps_collectives_and_compute() {
+        // a transfer on the P2p stream and an all-reduce on the Comm
+        // stream, both ready at t=0, run concurrently
+        let m = machine();
+        let mut t = T::new(&m);
+        for rank in 0..2usize {
+            let b = t.rank();
+            ar(b, "ar", 80, 1e9, vec![0, 1], vec![]);
+            let g = b.group(vec![0, 1]);
+            if rank == 0 {
+                b.send(|| "tx".into(), 81, g, 1e9, vec![]);
+            } else {
+                b.recv(|| "rx".into(), 81, g, 1e9, vec![]);
+            }
+        }
+        let r = simulate(&m, &t.finish());
+        let t_ar = m.allreduce_time(1e9, 2, 4);
+        let (bw, lat) = m.ring_bw_lat(2, 2);
+        let t_tx = Machine::p2p_time_on(1e9, bw, lat);
+        assert!((r.makespan - t_ar.max(t_tx)).abs() < 1e-12, "{}", r.makespan);
+    }
+
+    #[test]
+    fn p2p_stream_is_a_channel_pool_not_a_fifo() {
+        // two dependency-free transfers between the same pair complete
+        // concurrently (makespan = one transfer, not two): an in-flight
+        // transfer never delays the next one's start
+        let m = machine();
+        let mut t = T::new(&m);
+        for rank in 0..2usize {
+            let b = t.rank();
+            let g = b.group(vec![0, 1]);
+            for tag in [90u64, 91] {
+                if rank == 0 {
+                    b.send(|| format!("tx{tag}"), tag, g, 1e9, vec![]);
+                } else {
+                    b.recv(|| format!("rx{tag}"), tag, g, 1e9, vec![]);
+                }
+            }
+        }
+        let r = simulate(&m, &t.finish());
+        let (bw, lat) = m.ring_bw_lat(2, 2);
+        let t_tx = Machine::p2p_time_on(1e9, bw, lat);
+        assert!((r.makespan - t_tx).abs() < 1e-12, "{} vs {t_tx}", r.makespan);
+    }
+
+    #[test]
+    fn unmatched_recv_reports_the_stuck_rank_and_op() {
+        // satellite: a Recv whose peer never sends must surface a
+        // diagnostic naming the stuck rank/op, not a truncated makespan
+        let m = machine();
+        let mut t = T::new(&m);
+        {
+            let b = t.rank();
+            let g = b.group(vec![0, 1]);
+            b.recv(|| "rx-orphan".into(), 99, g, 1e9, vec![]);
+        }
+        {
+            let b = t.rank();
+            compute(b, "busy", 1e12, vec![]);
+        }
+        let err = try_simulate(&m, &t.finish()).expect_err("must stall");
+        assert_eq!((err.gpu, err.op), (0, 0));
+        assert_eq!(err.name, "rx-orphan");
+        assert_eq!(err.stuck_ops, 1);
+        assert!(err.detail.contains("1/2"), "{}", err.detail);
+        let msg = err.to_string();
+        assert!(msg.contains("gpu 0") && msg.contains("rx-orphan"), "{msg}");
+    }
+
+    #[test]
+    fn dependency_cycle_reports_stall_without_panicking() {
+        let m = machine();
+        let mut t = T::new(&m);
+        let b = t.rank();
+        compute(b, "x", 1.0, vec![1]);
+        compute(b, "y", 1.0, vec![0]);
+        let err = try_simulate(&m, &t.finish()).expect_err("must stall");
+        assert_eq!(err.stuck_ops, 2);
+        assert!(err.detail.contains("dependency"), "{}", err.detail);
     }
 
     #[test]

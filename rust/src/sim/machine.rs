@@ -175,6 +175,26 @@ impl Machine {
         Machine::allgather_time_on(bytes, p, bw, lat)
     }
 
+    /// Point-to-point transfer time between the two ranks of a pair
+    /// communicator (pipeline stage boundaries): the full buffer crosses
+    /// one link once, plus one hop of latency.  `per_node` is the pair's
+    /// co-residency (2 = same node over NVLink, 1 = cross-node over the
+    /// NIC share), exactly as the pair's [`super::CommWorld`] registration
+    /// precomputes it.
+    pub fn p2p_time(&self, bytes: f64, per_node: usize) -> f64 {
+        let (bw, lat) = self.ring_bw_lat(2, per_node);
+        Machine::p2p_time_on(bytes, bw, lat)
+    }
+
+    /// [`Machine::p2p_time`] on precomputed link parameters (the entry
+    /// point the engine uses; see [`Machine::allreduce_time_on`]).
+    pub fn p2p_time_on(bytes: f64, bw: f64, lat: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / bw + lat
+    }
+
     /// Bottleneck bandwidth and per-hop latency of one ring over this
     /// group shape (see [`Machine::allreduce_time`] for the sharing
     /// rationale).  Public so [`super::CommWorld`] can precompute it once
@@ -291,6 +311,24 @@ mod tests {
             assert!((rs + ag - ar).abs() <= 1e-12 * ar.max(1.0), "p={p}: {rs}+{ag} != {ar}");
         }
         assert_eq!(m.allgather_time(1e9, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn p2p_time_uses_pair_link() {
+        let m = Machine::polaris();
+        // same node: NVLink; cross-node: NIC share — and the _on entry
+        // point matches the member function bit for bit
+        let local = m.p2p_time(1e9, 2);
+        let remote = m.p2p_time(1e9, 1);
+        assert!(local < remote, "{local} vs {remote}");
+        for per_node in [1usize, 2] {
+            let (bw, lat) = m.ring_bw_lat(2, per_node);
+            assert_eq!(
+                m.p2p_time(1e9, per_node).to_bits(),
+                Machine::p2p_time_on(1e9, bw, lat).to_bits()
+            );
+        }
+        assert_eq!(Machine::p2p_time_on(0.0, 1e9, 1e-6), 0.0);
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub mod trace;
 
 pub use comm_world::{CommWorld, GroupId, GroupInfo};
 pub use engine::{
-    simulate, simulate_permuted, simulate_with_trace, Op, OpKind, ProgramSet, ProgramSetBuilder,
-    SimResult, Stream,
+    simulate, simulate_permuted, simulate_with_trace, try_simulate, Op, OpKind, ProgramSet,
+    ProgramSetBuilder, SimResult, StallError, Stream,
 };
 pub use machine::Machine;

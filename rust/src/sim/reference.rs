@@ -330,6 +330,13 @@ pub fn materialize(set: &super::engine::ProgramSet) -> Vec<GpuProgram> {
                         group: set.comm.group(b.group).members.clone(),
                     }
                 }
+                // the pre-refactor engine predates pipeline parallelism:
+                // pipelined programs are pinned by the permutation
+                // property test and the Python mirror instead
+                NewKind::Send { .. } | NewKind::Recv { .. } => panic!(
+                    "pipelined programs (Send/Recv ops) are not representable in the \
+                     pre-refactor reference engine"
+                ),
             };
             ops.push(Op {
                 name: set.names.get(op.name).to_string(),

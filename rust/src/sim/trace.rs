@@ -22,6 +22,7 @@ pub fn chrome_trace(spans: &[Span]) -> String {
                         Stream::Compute => 0.0,
                         Stream::Comm => 1.0,
                         Stream::CommDp => 2.0,
+                        Stream::P2p => 3.0,
                     }),
                 ),
                 (
@@ -46,12 +47,13 @@ pub fn ascii_timeline(spans: &[Span], gpu: usize, width: usize) -> String {
     let t_end = gspans.iter().map(|s| s.end).fold(0.0, f64::max);
     let t0 = 0.0;
     let scale = width as f64 / (t_end - t0).max(1e-12);
-    let mut rows = vec![vec![' '; width]; 3];
+    let mut rows = vec![vec![' '; width]; 4];
     for s in &gspans {
         let row = match s.stream {
             Stream::Compute => 0,
             Stream::Comm => 1,
             Stream::CommDp => 2,
+            Stream::P2p => 3,
         };
         let shard_b = s.name.starts_with("s1.");
         let ch = match (s.is_comm, shard_b) {
@@ -80,6 +82,12 @@ pub fn ascii_timeline(spans: &[Span], gpu: usize, width: usize) -> String {
     if rows[2].iter().any(|c| *c != ' ') {
         out.push_str("  comm-dp |");
         out.extend(rows[2].iter());
+        out.push_str("|\n");
+    }
+    // pipeline point-to-point channel pool, only present when pipelined
+    if rows[3].iter().any(|c| *c != ' ') {
+        out.push_str("  p2p     |");
+        out.extend(rows[3].iter());
         out.push_str("|\n");
     }
     out

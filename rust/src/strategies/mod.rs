@@ -11,15 +11,26 @@
 //!   §7.2 notes.
 //! * [`Strategy::Colossal3d`] — Agarwal 3-D matmul tensor parallelism on a
 //!   `q^3` cube, synchronous.
+//! * [`Strategy::Tensor3dPipeline`] — Tensor3D composed with inter-layer
+//!   pipelining (the AxoNN-lineage fourth axis, arXiv:2110.13005): the
+//!   world is `G_pipe` copies of the tensor mesh, each stage owns a
+//!   flops-balanced contiguous layer slice, microbatches flow under the
+//!   1F1B schedule ([`crate::pipeline`]), and stage boundaries exchange
+//!   activations/gradients with matched `Send`/`Recv` pairs on the
+//!   engine's P2p channel pool.
 //!
 //! Op tags encode (phase, layer, shard, communicator) so independently
-//! built per-rank programs rendezvous correctly.
+//! built per-rank programs rendezvous correctly; pipelined programs
+//! additionally fold the microbatch index into every tag (two
+//! microbatches' collectives over the same communicator can be in flight
+//! concurrently).
 //!
-//! All strategies here are SPMD — every rank runs the same op sequence
-//! and differs only in which communicator each collective binds — so the
-//! whole world shares **one** op-template class
-//! ([`crate::sim::engine::ProgramSet`]): op construction and name
-//! formatting run once, each further rank contributes only its O(#ops)
+//! All strategies here are SPMD per stage — every rank of a stage runs
+//! the same op sequence and differs only in which communicator each
+//! collective binds — so the world shares one op-template class per
+//! stage ([`crate::sim::engine::ProgramSet`]; the non-pipelined
+//! strategies have exactly one): op construction and name formatting run
+//! once per class, each further rank contributes only its O(#ops)
 //! binding table, and communicator groups are interned once in the
 //! [`crate::sim::CommWorld`].  That keeps program build for the paper's
 //! gpt80b/1024 configuration at O(world) memory instead of
@@ -27,6 +38,7 @@
 
 use crate::mesh::{Coord, Mesh};
 use crate::models::NetworkDesc;
+use crate::pipeline::{self, PipelineSchedule, Step};
 use crate::sim::engine::{ProgramSet, ProgramSetBuilder, Stream};
 use crate::sim::Machine;
 
@@ -43,6 +55,20 @@ pub enum Strategy {
     },
     Megatron,
     Colossal3d,
+    /// Tensor3D composed with `stages`-deep 1F1B pipelining over
+    /// `microbatches` microbatches.  The mesh argument everywhere is the
+    /// *inner* tensor mesh of one stage; the simulated world is
+    /// `stages * mesh.world()`.  `stages = 1` is definitionally the
+    /// non-pipelined schedule and routes through the exact
+    /// [`Strategy::Tensor3d`] builder (bit-for-bit identical results;
+    /// `microbatches` is ignored there — overdecomposition within a
+    /// batch shard is what `depth` models).
+    Tensor3dPipeline {
+        depth: usize,
+        transpose_opt: bool,
+        stages: usize,
+        microbatches: usize,
+    },
 }
 
 impl Strategy {
@@ -53,16 +79,33 @@ impl Strategy {
             }
             Strategy::Megatron => "megatron-lm".into(),
             Strategy::Colossal3d => "colossal-ai-3d".into(),
+            Strategy::Tensor3dPipeline { depth, stages, microbatches, .. } => {
+                format!("tensor3d-pipe(p={stages},m={microbatches},d={depth})")
+            }
         }
     }
 
     /// The effective mesh the strategy runs on (Megatron flattens the
-    /// tensor grid to 1 x G_tensor; Colossal needs a cube).
+    /// tensor grid to 1 x G_tensor; Colossal needs a cube).  For the
+    /// pipelined strategy this is the *inner* mesh of one stage — see
+    /// [`Strategy::world`] for the full rank count.
     pub fn effective_mesh(&self, mesh: &Mesh) -> Mesh {
         match self {
-            Strategy::Tensor3d { depth, .. } => Mesh::new(mesh.g_data, mesh.g_r, mesh.g_c, *depth),
+            Strategy::Tensor3d { depth, .. } | Strategy::Tensor3dPipeline { depth, .. } => {
+                Mesh::new(mesh.g_data, mesh.g_r, mesh.g_c, *depth)
+            }
             Strategy::Megatron => Mesh::new(mesh.g_data, 1, mesh.g_tensor(), 1),
             Strategy::Colossal3d => *mesh,
+        }
+    }
+
+    /// Number of simulated ranks the strategy builds on `mesh` (pipeline
+    /// stages multiply the tensor mesh's world).
+    pub fn world(&self, mesh: &Mesh) -> usize {
+        let inner = self.effective_mesh(mesh).world();
+        match self {
+            Strategy::Tensor3dPipeline { stages, .. } => inner * stages,
+            _ => inner,
         }
     }
 }
@@ -80,6 +123,7 @@ fn tag(phase: u64, layer: usize, shard: usize, group_kind: u64, group_id: usize)
 const GK_COL: u64 = 0;
 const GK_ROW: u64 = 1;
 const GK_DATA: u64 = 2;
+const GK_P2P: u64 = 3;
 
 const PH_FWD: u64 = 1;
 const PH_BWD: u64 = 2;
@@ -87,6 +131,33 @@ const PH_XPOSE: u64 = 3;
 const PH_DP: u64 = 4;
 const PH_WGATHER: u64 = 5;
 const PH_GSCATTER: u64 = 6;
+const PH_P2P_FWD: u64 = 7;
+const PH_P2P_BWD: u64 = 8;
+
+/// Tag packing for pipelined programs.  Unlike [`tag`], the microbatch
+/// index is part of every tag: collectives of two microbatches over the
+/// same communicator can be in flight concurrently and must not merge.
+/// Layout: 6-bit phase | 14-bit microbatch | 14-bit layer | 6-bit shard |
+/// 3-bit group kind | 21-bit group id.
+fn ptag(
+    phase: u64,
+    mb: usize,
+    layer: usize,
+    shard: usize,
+    group_kind: u64,
+    group_id: usize,
+) -> u64 {
+    debug_assert!(
+        mb < (1 << 14) && layer < (1 << 14) && shard < (1 << 6) && group_id < (1 << 21),
+        "pipelined tag field overflow"
+    );
+    (phase << 58)
+        | ((mb as u64) << 44)
+        | ((layer as u64) << 30)
+        | ((shard as u64) << 24)
+        | (group_kind << 21)
+        | group_id as u64
+}
 
 /// Options orthogonal to the [`Strategy`] enum.
 ///
@@ -139,6 +210,27 @@ pub fn build_programs_with(
         Strategy::Colossal3d => {
             assert!(!opts.sharded_state, "sharded state is not modelled for Colossal-AI-3D");
             build_colossal(net, &mesh, batch, machine)
+        }
+        Strategy::Tensor3dPipeline { depth, transpose_opt, stages, microbatches } => {
+            if stages <= 1 {
+                // G_pipe = 1 is definitionally the non-pipelined schedule;
+                // routing through the same builder keeps the results
+                // bit-for-bit identical to Strategy::Tensor3d (pinned by
+                // rust/tests/sim_golden.rs)
+                build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts, machine)
+            } else {
+                build_tensor3d_pipeline(
+                    net,
+                    &mesh,
+                    batch,
+                    depth,
+                    transpose_opt,
+                    stages,
+                    microbatches,
+                    opts,
+                    machine,
+                )
+            }
         }
     }
 }
@@ -400,6 +492,395 @@ fn build_tensor3d(
                 || "adamw".into(),
                 // elementwise: ~12 flops per param shard element
                 12.0 * net.fc_params() / mesh.g_tensor() as f64,
+                1e9,
+                vec![dp],
+            );
+        }
+    }
+    b.finish()
+}
+
+/// Tensor3D composed with inter-layer 1F1B pipelining.
+///
+/// The world is `stages` copies of the tensor mesh
+/// (`rank = stage * mesh.world() + inner_rank`); stage `p` owns a
+/// contiguous, flops-balanced slice of the layer list
+/// ([`pipeline::partition_layers`], attached compute weighted with its
+/// host layer) and executes the [`PipelineSchedule::OneFOneB`] step
+/// sequence over `microbatches` microbatches.  Within a microbatch each
+/// stage reuses the per-layer FWD/BWD templates of [`build_tensor3d`]
+/// (including §4.1 transposed layers, §4.2 depth sub-shards and the
+/// attached attention compute); stage boundaries exchange the boundary
+/// activation shard (`m_local x n/g_c_eff`) — and its gradient on the way
+/// back — as matched `Send`/`Recv` pairs between same-coordinate ranks of
+/// neighboring stages on the engine's P2p channel pool.
+///
+/// Gradients accumulate locally across microbatches; the data-parallel
+/// synchronization (replicated all-reduce, or the sharded-state per-layer
+/// reduce-scatter with its forward weight all-gathers) runs once per
+/// iteration over each stage's own layers, exactly as in the
+/// non-pipelined schedule.
+///
+/// Every rank of a stage shares one op-template class (`class_key =
+/// stage`), so SPMD dedup applies per (stage, coordinate) class and
+/// program build stays O(world).
+fn build_tensor3d_pipeline(
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    depth: usize,
+    transpose_opt: bool,
+    stages: usize,
+    microbatches: usize,
+    opts: ScheduleOpts,
+    machine: &Machine,
+) -> ProgramSet {
+    assert!(stages >= 2, "build_tensor3d_pipeline wants stages >= 2 (1 routes to build_tensor3d)");
+    assert!(microbatches >= 1, "pipelining needs at least one microbatch");
+    assert!(
+        net.layers.len() >= stages,
+        "cannot split {} layers into {stages} pipeline stages",
+        net.layers.len()
+    );
+    assert!(!opts.dp_barrier, "the dp-barrier ablation is not modelled for pipelined schedules");
+    let inner = mesh.world();
+    let world = stages * inner;
+    // flops-balanced contiguous stage partition (attached compute counted
+    // with its host layer)
+    let costs: Vec<f64> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| {
+            l.fwd_flops(1.0)
+                + net
+                    .attached
+                    .iter()
+                    .filter(|a| a.after_layer == li)
+                    .map(|a| a.fwd_flops_per_sample)
+                    .sum::<f64>()
+        })
+        .collect();
+    let ranges = pipeline::partition_layers(&costs, stages);
+    let samples_per_exec = batch as f64 / (mesh.g_data * microbatches * depth) as f64;
+    let use_shard = opts.sharded_state && mesh.g_data > 1;
+    let mut b = ProgramSetBuilder::new(machine);
+
+    for rank in 0..world {
+        let stage = rank / inner;
+        let inner_rank = rank % inner;
+        let Coord { d, i, j } = mesh.coord_of(inner_rank);
+        // one SPMD class per stage: the first rank of each stage builds
+        // the templates, its peers only bind
+        b.begin_rank(stage as u64);
+        let range = ranges[stage].clone();
+        let stage_params: f64 = net.layers[range.clone()].iter().map(|l| l.weight_params()).sum();
+        let lift =
+            |g: Vec<usize>| -> Vec<usize> { g.into_iter().map(|r| r + stage * inner).collect() };
+        let dp_gid = i * mesh.g_c + j;
+        let col_g = b.group(lift(mesh.col_group(inner_rank)));
+        let row_g = b.group(lift(mesh.row_group(inner_rank)));
+        let data_g = b.group(lift(mesh.data_group(inner_rank)));
+        let xpose_g = if !transpose_opt && mesh.g_tensor() > 1 {
+            Some(b.group(
+                (0..mesh.g_tensor()).map(|t| stage * inner + d * mesh.g_tensor() + t).collect(),
+            ))
+        } else {
+            None
+        };
+        // pair communicators to the same-coordinate ranks of the
+        // neighboring stages (both endpoints register the same pair)
+        let prev_g = (stage > 0).then(|| b.group(vec![rank - inner, rank]));
+        let next_g = (stage + 1 < stages).then(|| b.group(vec![rank, rank + inner]));
+        // boundary activation shard after `bl`: (m_local x n/g_c_eff)
+        let boundary_bytes = |bl: usize| -> f64 {
+            let layer = &net.layers[bl];
+            let g_c_eff = if layer.transposed && transpose_opt { mesh.g_r } else { mesh.g_c };
+            samples_per_exec * layer.rows_per_sample as f64 * layer.n as f64 / g_c_eff as f64
+                * BYTES_PER_ELEM
+        };
+        let fwd_in_bytes = (stage > 0).then(|| boundary_bytes(range.start - 1));
+        let fwd_out_bytes = (stage + 1 < stages).then(|| boundary_bytes(range.end - 1));
+
+        // sharded state: prefetch this stage's weight all-gathers from
+        // t=0 on the dedicated dp stream (the overlapped schedule)
+        let mut wgather: Vec<Option<u32>> = vec![None; net.layers.len()];
+        if use_shard {
+            for li in range.clone() {
+                let layer = &net.layers[li];
+                let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                wgather[li] = Some(b.all_gather(
+                    || format!("wgather.{}", layer.name),
+                    ptag(PH_WGATHER, 0, li, 0, GK_DATA, dp_gid),
+                    data_g,
+                    bytes,
+                    Stream::CommDp,
+                    Vec::new(),
+                ));
+            }
+        }
+
+        // per-microbatch forward tails (per depth sub-shard): the
+        // backward's recompute dependency
+        let mut fwd_tail: Vec<Vec<Option<u32>>> = vec![vec![None; depth]; microbatches];
+        // per-layer dW ops of the final microbatch (gradient-sync deps)
+        let mut final_dw: Vec<Vec<u32>> = vec![Vec::new(); net.layers.len()];
+        let mut last_dw: Vec<Option<u32>> = vec![None; depth];
+        let mut last_bwd: Vec<Option<u32>> = vec![None; depth];
+
+        for step in pipeline::steps(PipelineSchedule::OneFOneB, stage, stages, microbatches) {
+            match step {
+                Step::Fwd(mb) => {
+                    // stage input: boundary activations from the previous
+                    // stage, one transfer per depth sub-shard
+                    let mut cur: Vec<Option<u32>> = vec![None; depth];
+                    if let (Some(pg), Some(bytes)) = (prev_g, fwd_in_bytes) {
+                        for (s, c) in cur.iter_mut().enumerate() {
+                            *c = Some(b.recv(
+                                || format!("s{s}.p2p-fwd-in"),
+                                ptag(PH_P2P_FWD, mb, stage, s, GK_P2P, inner_rank),
+                                pg,
+                                bytes,
+                                Vec::new(),
+                            ));
+                        }
+                    }
+                    for li in range.clone() {
+                        let layer = &net.layers[li];
+                        let (fwd_gk, fwd_gid, g_r_eff, g_c_eff) =
+                            if layer.transposed && transpose_opt {
+                                (GK_ROW, d * mesh.g_r + i, mesh.g_c, mesh.g_r)
+                            } else {
+                                (GK_COL, d * mesh.g_c + j, mesh.g_r, mesh.g_c)
+                            };
+                        let m_local = samples_per_exec * layer.rows_per_sample as f64;
+                        let flops = layer.fwd_flops(samples_per_exec) / mesh.g_tensor() as f64;
+                        let min_dim = m_local
+                            .min(layer.k as f64 / g_r_eff as f64)
+                            .min(layer.n as f64 / g_c_eff as f64);
+                        let ar_bytes = m_local * layer.n as f64 / g_c_eff as f64 * BYTES_PER_ELEM;
+                        let fwd_group = if fwd_gk == GK_COL { col_g } else { row_g };
+                        for s in 0..depth {
+                            let mut deps = Vec::new();
+                            if let Some(prev) = cur[s] {
+                                deps.push(prev);
+                            }
+                            if let Some(wg) = wgather[li] {
+                                deps.push(wg);
+                            }
+                            let mm = b.compute(
+                                || format!("s{s}.fwd.{}", layer.name),
+                                flops,
+                                min_dim,
+                                deps,
+                            );
+                            let ar = b.all_reduce(
+                                || format!("s{s}.fwd-ar.{}", layer.name),
+                                ptag(PH_FWD, mb, li, s, fwd_gk, fwd_gid),
+                                fwd_group,
+                                ar_bytes,
+                                Stream::Comm,
+                                vec![mm],
+                            );
+                            let mut tail = ar;
+                            for att in net.attached.iter().filter(|a| a.after_layer == li) {
+                                let aflops =
+                                    att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
+                                tail = b.compute(
+                                    || format!("s{s}.fwd.{}", att.name),
+                                    aflops,
+                                    m_local,
+                                    vec![tail],
+                                );
+                            }
+                            if layer.transposed && !transpose_opt && mesh.g_tensor() > 1 {
+                                let xp_bytes = m_local * layer.n as f64
+                                    / mesh.g_tensor() as f64
+                                    * BYTES_PER_ELEM;
+                                tail = b.all_reduce(
+                                    || format!("s{s}.xpose.{}", layer.name),
+                                    ptag(PH_XPOSE, mb, li, s, GK_COL, d),
+                                    xpose_g.expect("xpose group registered when §4.1 is off"),
+                                    xp_bytes * mesh.g_tensor() as f64 / 2.0,
+                                    Stream::Comm,
+                                    vec![ar],
+                                );
+                            }
+                            cur[s] = Some(tail);
+                        }
+                    }
+                    // hand the boundary activations to the next stage
+                    if let (Some(ng), Some(bytes)) = (next_g, fwd_out_bytes) {
+                        for (s, c) in cur.iter().enumerate() {
+                            b.send(
+                                || format!("s{s}.p2p-fwd-out"),
+                                ptag(PH_P2P_FWD, mb, stage + 1, s, GK_P2P, inner_rank),
+                                ng,
+                                bytes,
+                                vec![c.expect("stage owns at least one layer")],
+                            );
+                        }
+                    }
+                    fwd_tail[mb] = cur;
+                }
+                Step::Bwd(mb) => {
+                    // incoming gradient of the stage output (none on the
+                    // last stage: the loss lives there)
+                    let mut rx: Vec<Option<u32>> = vec![None; depth];
+                    if let (Some(ng), Some(bytes)) = (next_g, fwd_out_bytes) {
+                        for (s, r) in rx.iter_mut().enumerate() {
+                            *r = Some(b.recv(
+                                || format!("s{s}.p2p-bwd-in"),
+                                ptag(PH_P2P_BWD, mb, stage + 1, s, GK_P2P, inner_rank),
+                                ng,
+                                bytes,
+                                Vec::new(),
+                            ));
+                        }
+                    }
+                    let mut cur: Vec<Option<u32>> = vec![None; depth];
+                    for li in range.clone().rev() {
+                        let layer = &net.layers[li];
+                        let (bwd_gk, bwd_gid, g_r_eff, g_c_eff) =
+                            if layer.transposed && transpose_opt {
+                                (GK_COL, d * mesh.g_c + j, mesh.g_c, mesh.g_r)
+                            } else {
+                                (GK_ROW, d * mesh.g_r + i, mesh.g_r, mesh.g_c)
+                            };
+                        let m_local = samples_per_exec * layer.rows_per_sample as f64;
+                        let flops = layer.fwd_flops(samples_per_exec) / mesh.g_tensor() as f64;
+                        let min_dim = m_local
+                            .min(layer.k as f64 / g_r_eff as f64)
+                            .min(layer.n as f64 / g_c_eff as f64);
+                        let ar_bytes = m_local * layer.k as f64 / g_r_eff as f64 * BYTES_PER_ELEM;
+                        let bwd_group = if bwd_gk == GK_COL { col_g } else { row_g };
+                        for s in 0..depth {
+                            let mut deps = Vec::new();
+                            if let Some(prev) = cur[s] {
+                                deps.push(prev);
+                            } else {
+                                // first layer of the reverse sweep: wait
+                                // for this microbatch's forward tail and
+                                // the incoming boundary gradient
+                                if let Some(ft) = fwd_tail[mb][s] {
+                                    deps.push(ft);
+                                }
+                                if let Some(r) = rx[s] {
+                                    deps.push(r);
+                                }
+                            }
+                            let rc = b.compute(
+                                || format!("s{s}.recompute.{}", layer.name),
+                                flops,
+                                min_dim,
+                                deps,
+                            );
+                            let mut deps = vec![rc];
+                            for att in net.attached.iter().filter(|a| a.after_layer == li) {
+                                let aflops = 3.0 * att.fwd_flops_per_sample * samples_per_exec
+                                    / mesh.g_c as f64;
+                                let ab = b.compute(
+                                    || format!("s{s}.bwd.{}", att.name),
+                                    aflops,
+                                    m_local,
+                                    deps.clone(),
+                                );
+                                deps = vec![ab];
+                            }
+                            let dx = b.compute(
+                                || format!("s{s}.bwd-dx.{}", layer.name),
+                                flops,
+                                min_dim,
+                                deps.clone(),
+                            );
+                            let ar = b.all_reduce(
+                                || format!("s{s}.bwd-ar.{}", layer.name),
+                                ptag(PH_BWD, mb, li, s, bwd_gk, bwd_gid),
+                                bwd_group,
+                                ar_bytes,
+                                Stream::Comm,
+                                vec![dx],
+                            );
+                            let dw = b.compute(
+                                || format!("s{s}.bwd-dw.{}", layer.name),
+                                flops,
+                                min_dim,
+                                deps,
+                            );
+                            cur[s] = Some(ar);
+                            last_bwd[s] = Some(ar);
+                            last_dw[s] = Some(dw);
+                            if mb == microbatches - 1 {
+                                final_dw[li].push(dw);
+                            }
+                        }
+                    }
+                    // hand the boundary gradient to the previous stage
+                    if let (Some(pg), Some(bytes)) = (prev_g, fwd_in_bytes) {
+                        for (s, c) in cur.iter().enumerate() {
+                            b.send(
+                                || format!("s{s}.p2p-bwd-out"),
+                                ptag(PH_P2P_BWD, mb, stage, s, GK_P2P, inner_rank),
+                                pg,
+                                bytes,
+                                vec![c.expect("stage owns at least one layer")],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // ------- gradient sync + optimizer over this stage's layers -----
+        if use_shard {
+            // per-layer reduce-scatters, emitted in gradient-availability
+            // order; compute-stream FIFO makes the final microbatch's dW
+            // the completion frontier for the accumulated gradient
+            let mut gscatters: Vec<u32> = Vec::new();
+            for li in range.clone().rev() {
+                let layer = &net.layers[li];
+                let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                let rs = b.reduce_scatter(
+                    || format!("gscatter.{}", layer.name),
+                    ptag(PH_GSCATTER, 0, li, 0, GK_DATA, dp_gid),
+                    data_g,
+                    bytes,
+                    Stream::CommDp,
+                    final_dw[li].clone(),
+                );
+                gscatters.push(rs);
+            }
+            b.compute(
+                || "adamw-shard".into(),
+                12.0 * stage_params / (mesh.g_tensor() * mesh.g_data) as f64,
+                1e9,
+                gscatters,
+            );
+        }
+        if mesh.g_data > 1 && !use_shard {
+            let grad_bytes = stage_params / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+            let mut deps: Vec<u32> = Vec::new();
+            for s in 0..depth {
+                if let Some(x) = last_dw[s] {
+                    deps.push(x);
+                }
+                if let Some(x) = last_bwd[s] {
+                    deps.push(x);
+                }
+            }
+            let dp = b.all_reduce(
+                || "dp-grad-ar".into(),
+                // layer field = the stage's first layer: stages must not
+                // share this tag (the data-group gid repeats per stage)
+                ptag(PH_DP, 0, range.start, 0, GK_DATA, dp_gid),
+                data_g,
+                grad_bytes,
+                Stream::Comm,
+                deps,
+            );
+            b.compute(
+                || "adamw".into(),
+                12.0 * stage_params / mesh.g_tensor() as f64,
                 1e9,
                 vec![dp],
             );
@@ -776,6 +1257,176 @@ mod tests {
         );
         let u = mfu(&net, row.batch, row.gpus, t, &machine);
         assert!(u > 0.05 && u < 0.62, "mfu {u}");
+    }
+
+    fn uniform_net(layers: usize, dim: usize, rows: usize) -> NetworkDesc {
+        use crate::models::FcLayer;
+        NetworkDesc {
+            name: "uniform".into(),
+            layers: (0..layers)
+                .map(|l| FcLayer {
+                    name: format!("l{l}"),
+                    k: dim,
+                    n: dim,
+                    rows_per_sample: rows,
+                    transposed: false,
+                    flop_mult: 1.0,
+                })
+                .collect(),
+            attached: vec![],
+            params: (layers * dim * dim) as f64,
+            train_flops_per_sample: 0.0,
+        }
+    }
+
+    #[test]
+    fn pipeline_stage1_routes_to_the_nonpipelined_builder() {
+        // --pipeline 1 must be bit-for-bit the plain Tensor3D schedule
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(2, 2, 4, 1);
+        let plain = build_programs(
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            &net,
+            &mesh,
+            64,
+            &machine,
+        );
+        let piped = build_programs(
+            Strategy::Tensor3dPipeline {
+                depth: 2,
+                transpose_opt: true,
+                stages: 1,
+                microbatches: 8,
+            },
+            &net,
+            &mesh,
+            64,
+            &machine,
+        );
+        assert_eq!(plain.total_ops(), piped.total_ops());
+        let a = crate::sim::simulate(&machine, &plain);
+        let b = crate::sim::simulate(&machine, &piped);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for g in 0..plain.world() {
+            assert_eq!(a.comm_bytes[g].to_bits(), b.comm_bytes[g].to_bits());
+        }
+    }
+
+    #[test]
+    fn pipelined_1f1b_idle_matches_analytic_bubble() {
+        // Acceptance criterion: on a compute-dominated, stage-balanced
+        // config the simulated 1F1B idle fraction matches the analytic
+        // bubble (p-1)/(m+p-1) within 5%.  Uniform layers, no tensor
+        // parallelism (all collectives degenerate), boundary transfers
+        // ~2% of a stage's compute.
+        let net = uniform_net(8, 4096, 128);
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(1, 1, 1, 1);
+        let (stages, microbatches) = (4usize, 8usize);
+        let set = build_programs(
+            Strategy::Tensor3dPipeline {
+                depth: 1,
+                transpose_opt: true,
+                stages,
+                microbatches,
+            },
+            &net,
+            &mesh,
+            64,
+            &machine,
+        );
+        assert_eq!(set.world(), stages);
+        let r = crate::sim::simulate(&machine, &set);
+        let mean_busy: f64 = r.compute_busy.iter().sum::<f64>() / r.compute_busy.len() as f64;
+        let idle = 1.0 - mean_busy / r.makespan;
+        let bubble = crate::comm_model::pipeline_bubble_fraction(stages, microbatches);
+        assert!(
+            (idle / bubble - 1.0).abs() < 0.05,
+            "idle {idle:.4} vs analytic bubble {bubble:.4}"
+        );
+    }
+
+    #[test]
+    fn pipelined_program_shape_stage_classes_and_p2p() {
+        let net = small_net(); // 17 layers
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(2, 2, 2, 1); // inner world 8
+        let (stages, microbatches) = (4usize, 4usize);
+        let set = build_programs(
+            Strategy::Tensor3dPipeline {
+                depth: 2,
+                transpose_opt: true,
+                stages,
+                microbatches,
+            },
+            &net,
+            &mesh,
+            64,
+            &machine,
+        );
+        assert_eq!(set.world(), stages * mesh.world());
+        // SPMD dedup per (stage, coordinate) class: one template per stage
+        assert_eq!(set.classes.len(), stages);
+        // every interior boundary has matched Send/Recv ops
+        use crate::sim::OpKind;
+        let mut sends = 0usize;
+        let mut recvs = 0usize;
+        for g in 0..set.world() {
+            for op in &set.class_of(g).ops {
+                match op.kind {
+                    OpKind::Send { .. } => sends += 1,
+                    OpKind::Recv { .. } => recvs += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(sends, recvs, "every send has a matching recv");
+        // (stages-1) boundaries x 2 directions x microbatches x depth x
+        // inner ranks
+        assert_eq!(sends, (stages - 1) * 2 * microbatches * 2 * mesh.world());
+        let r = crate::sim::simulate(&machine, &set);
+        assert!(r.makespan.is_finite() && r.makespan > 0.0);
+    }
+
+    #[test]
+    fn pipelined_sharded_state_moves_the_replicated_volume() {
+        // AR = RS + AG holds per stage: the pipelined depth-sharded
+        // schedule moves exactly the bytes of the per-stage data-parallel
+        // all-reduce it replaces
+        let net = small_net();
+        let machine = Machine::polaris();
+        let mesh = Mesh::new(4, 1, 2, 1);
+        let strat = Strategy::Tensor3dPipeline {
+            depth: 1,
+            transpose_opt: true,
+            stages: 2,
+            microbatches: 4,
+        };
+        let (t_rep, v_rep) = iterate(strat, &net, &mesh, 64, &machine);
+        let (t_sh, v_sh) = iterate_with(
+            strat,
+            &net,
+            &mesh,
+            64,
+            &machine,
+            ScheduleOpts { sharded_state: true, dp_barrier: false },
+        );
+        assert!((v_sh / v_rep - 1.0).abs() < 1e-9, "sharded {v_sh} vs replicated {v_rep}");
+        assert!(t_rep > 0.0 && t_sh > 0.0);
+    }
+
+    #[test]
+    fn strategy_world_accounts_for_stages() {
+        let mesh = Mesh::new(2, 2, 2, 1);
+        let p = Strategy::Tensor3dPipeline {
+            depth: 1,
+            transpose_opt: true,
+            stages: 4,
+            microbatches: 8,
+        };
+        assert_eq!(p.world(&mesh), 32);
+        assert_eq!(Strategy::Megatron.world(&mesh), 8);
     }
 
     #[test]

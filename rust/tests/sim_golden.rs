@@ -13,7 +13,16 @@
 //!    accounting are invariant under permuting the initial op-issue
 //!    worklist (seeded shuffles via `util::rng`) — collective start
 //!    times are maxima over member readiness and per-GPU streams are
-//!    FIFO, so no issue-order race can leak into results.
+//!    FIFO, so no issue-order race can leak into results.  Pipelined
+//!    programs (Send/Recv rendezvous on the P2p channel pool) are in the
+//!    property-test set too: P2p start times are governed solely by deps
+//!    and partner readiness, so the same argument applies.
+//!
+//! The pre-refactor reference engine predates pipeline parallelism, so
+//! the bit-for-bit `cases()` stay Send/Recv-free — but they do include a
+//! `Tensor3dPipeline { stages: 1 }` case, pinning the acceptance
+//! criterion that `--pipeline 1` is bit-for-bit the non-pipelined
+//! schedule.
 
 use tensor3d::mesh::Mesh;
 use tensor3d::models::{gpt, unet, NetworkDesc};
@@ -97,6 +106,34 @@ fn cases() -> Vec<Case> {
             batch: 64,
             machine: Machine::polaris(),
             opts: barrier,
+        },
+        Case {
+            name: "t3d-pipe1-d2-2x2x4-polaris",
+            strategy: Strategy::Tensor3dPipeline {
+                depth: 2,
+                transpose_opt: true,
+                stages: 1,
+                microbatches: 8,
+            },
+            net: small_net(),
+            mesh: Mesh::new(2, 2, 4, 1),
+            batch: 64,
+            machine: Machine::polaris(),
+            opts: none,
+        },
+        Case {
+            name: "t3d-pipe1-d2-sharded-4x2x4-polaris",
+            strategy: Strategy::Tensor3dPipeline {
+                depth: 2,
+                transpose_opt: true,
+                stages: 1,
+                microbatches: 4,
+            },
+            net: small_net(),
+            mesh: Mesh::new(4, 2, 4, 1),
+            batch: 64,
+            machine: Machine::polaris(),
+            opts: sharded,
         },
         Case {
             name: "megatron-2x2x4-polaris",
@@ -263,11 +300,22 @@ fn simulation_invariant_under_issue_order_permutation() {
     let machine = Machine::polaris();
     let sharded = ScheduleOpts { sharded_state: true, dp_barrier: false };
     let t3d = Strategy::Tensor3d { depth: 2, transpose_opt: true };
+    let pipe = |stages, microbatches, depth| Strategy::Tensor3dPipeline {
+        depth,
+        transpose_opt: true,
+        stages,
+        microbatches,
+    };
     let configs: Vec<(Strategy, Mesh, ScheduleOpts)> = vec![
         (t3d, Mesh::new(2, 2, 4, 1), ScheduleOpts::default()),
         (t3d, Mesh::new(4, 2, 4, 1), sharded),
         (Strategy::Megatron, Mesh::new(2, 2, 4, 1), ScheduleOpts::default()),
         (Strategy::Colossal3d, Mesh::new(1, 2, 4, 1), ScheduleOpts::default()),
+        // pipelined programs: Send/Recv rendezvous included in the
+        // shuffle set (makespan and wire accounting must stay invariant)
+        (pipe(2, 4, 1), Mesh::new(2, 1, 2, 1), ScheduleOpts::default()),
+        (pipe(4, 6, 2), Mesh::new(1, 2, 2, 1), ScheduleOpts::default()),
+        (pipe(2, 4, 2), Mesh::new(4, 1, 2, 1), sharded),
     ];
     let net = small_net();
     for (strategy, mesh, opts) in configs {
