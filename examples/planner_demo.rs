@@ -33,19 +33,22 @@ fn main() {
 
     for (label, net, kind, batch, gpus, machine) in cases {
         let floor = planner::min_g_tensor(&net, &machine, gpus);
-        let plan = planner::plan(&net, kind, batch, gpus, &machine);
-        let meg_mesh = Mesh::new(plan.mesh.g_data, 1, plan.mesh.g_tensor(), 1);
+        let report =
+            planner::PlanRequest::new(&net, &machine, gpus).kind(kind).batch(batch).run();
+        let mesh = report.mesh();
+        let vol = report.best().score;
+        let meg_mesh = Mesh::new(mesh.g_data, 1, mesh.g_tensor(), 1);
         let meg_vol = comm_model::tensor3d_network_volume(&net, batch as f64, &meg_mesh);
         t.row(vec![
             label,
             gpus.to_string(),
             machine.name.clone(),
             floor.to_string(),
-            format!("({},{},{})", plan.mesh.g_data, plan.mesh.g_r, plan.mesh.g_c),
-            format!("{:.2}", plan.gc_closed_form),
-            fmt_bytes(plan.volume_elems * strategies::BYTES_PER_ELEM),
+            format!("({},{},{})", mesh.g_data, mesh.g_r, mesh.g_c),
+            format!("{:.2}", report.gc_closed_form),
+            fmt_bytes(vol * strategies::BYTES_PER_ELEM),
             fmt_bytes(meg_vol * strategies::BYTES_PER_ELEM),
-            format!("{:.0}%", (1.0 - plan.volume_elems / meg_vol) * 100.0),
+            format!("{:.0}%", (1.0 - vol / meg_vol) * 100.0),
         ]);
     }
     println!("{}", t.render());

@@ -17,16 +17,20 @@ fn main() {
     let net = row.dims.network();
 
     println!("=== 1. plan the 4-D decomposition (paper §5) ===");
-    let plan = planner::plan(&net, NetKind::Transformer, row.batch, row.gpus, &machine);
+    let report = planner::PlanRequest::new(&net, &machine, row.gpus)
+        .kind(NetKind::Transformer)
+        .batch(row.batch)
+        .run();
+    let mesh = report.mesh();
     println!(
         "{} on {} x {}: recommended g_data={} g_r={} g_c={} (closed-form G_c = {:.2})",
-        net.name, row.gpus, machine.name, plan.mesh.g_data, plan.mesh.g_r, plan.mesh.g_c,
-        plan.gc_closed_form
+        net.name, row.gpus, machine.name, mesh.g_data, mesh.g_r, mesh.g_c,
+        report.gc_closed_form
     );
     println!(
         "  state/GPU {}  modelled volume/GPU {}",
-        fmt_bytes(plan.state_bytes),
-        fmt_bytes(plan.volume_elems * strategies::BYTES_PER_ELEM)
+        fmt_bytes(report.state_bytes),
+        fmt_bytes(report.best().score * strategies::BYTES_PER_ELEM)
     );
 
     println!("\n=== 2. simulate one iteration (Fig. 8 point) ===");
@@ -35,7 +39,7 @@ fn main() {
         ("tensor3d (sync)", Strategy::Tensor3d { depth: 1, transpose_opt: true }),
         ("megatron-lm", Strategy::Megatron),
     ] {
-        let (time, gb) = strategies::iterate(strat, &net, &plan.mesh, row.batch, &machine);
+        let (time, gb) = strategies::iterate(strat, &net, &mesh, row.batch, &machine);
         let mfu = strategies::mfu(&net, row.batch, row.gpus, time, &machine);
         println!(
             "  {label:<22} {time:>7.2} s/iter   {:>10}/GPU   MFU {:>5.1}%",

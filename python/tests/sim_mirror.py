@@ -15,12 +15,23 @@ empirically pinned Rust tests are diagnosable without a Rust toolchain:
   ``strategies::build_tensor3d_pipeline`` (1F1B schedule, Send/Recv
   rendezvous on the P2p channel-pool stream), ``bubble_fraction`` /
   ``pipelined_score`` mirror the planner's bubble-adjusted Eq.-4 term,
-  and ``refine_pipelined`` mirrors ``planner::plan_refined_pipelined``.
+  and ``refine_pipelined`` mirrors the pipelined refined search of
+  ``planner::PlanRequest`` (column-major placements).
   ``__main__`` asserts the pinned Rust facts: the simulated 1F1B idle
   fraction matches the analytic bubble ``(p-1)/(m+p-1)`` within 5% on a
   compute-dominated config, the refined pipelined recommendation is
   never slower than the pipeline-free Eq.-4 winner on GPT-9B/16, and the
   frontier gpt80b/1024 plan matches the CI golden.
+* The placement axis (PR 4): ``placement_perm`` / ``placement_search_set``
+  mirror ``spec::Placement`` (physical_ranks / search_set),
+  ``place_programs`` mirrors the placed ``CommWorld`` registration
+  (group member lists mapped logical->physical so ``members_per_node``
+  prices the placed ranks), and ``refine_placed`` mirrors the refined
+  ``planner::PlanRequest`` search over placements.  ``__main__`` asserts
+  the pinned placement facts: on gpt80b/128 Polaris (replicated) the
+  refined search recommends the (2, 4, 16) mesh under the ``blocked2``
+  node tiling, decisively faster than the column-major default, and the
+  same placement wins the paper-scale gpt80b/1024 headline mesh.
 * The issue-order permutation-invariance property of
   ``rust/tests/sim_golden.rs`` can be spot-checked here with
   ``simulate(..., order=...)``.
@@ -241,7 +252,8 @@ def candidates(net, batch, world, machine, mode):
 
 
 def base_plan(cands):
-    """Rule 1 (max g_data) + rule 2 (min volume) — planner::plan_mode."""
+    """Rule 1 (max g_data) + rule 2 (min volume) — the volume stage of
+    planner::PlanRequest::run."""
     gdmax = max(m.g_data for m, _ in cands)
     return min(((m, v) for m, v in cands if m.g_data == gdmax), key=lambda x: x[1])
 
@@ -678,7 +690,10 @@ def pipelined_score(net, batch, mesh, p, m):
 
 
 def pipelined_candidates(net, batch, world, machine, mode, pipes, m, k):
-    """Mirror of planner::pipelined_candidates."""
+    """Mirror of the refined planner::PlanRequest's per-G_pipe
+    shortlists: the k best by bubble-adjusted score, rule-blind (the
+    §5 g_data rule only picks the volume-stage winner — re-ranking
+    exists because that rule ignores NIC sharing and latency)."""
     budget = machine.mem_bytes * STATE_BUDGET
     out = []
     for p in pipes:
@@ -691,18 +706,18 @@ def pipelined_candidates(net, batch, world, machine, mode, pipes, m, k):
             if st / p <= budget:
                 feas.append((mm, pipelined_score(net, batch, mm, p, m)))
         feas.sort(key=lambda x: x[1])
-        gdmax = max((mm.g_data for mm, _ in feas), default=1)
-        top = [x for x in feas if x[0].g_data == gdmax][:max(k, 1)]
-        out.extend((p, mm, v) for mm, v in top)
+        out.extend((p, mm, v) for mm, v in feas[:max(k, 1)])
     out.sort(key=lambda x: x[2])
     return out
 
 
 def refine(net, batch, world, machine, mode, k=6, depth=2):
-    """Mirror of planner::plan_refined (Tensor3D, transpose_opt on)."""
+    """Mirror of the refined planner::PlanRequest at G_pipe = 1 with
+    column-major placement (Tensor3D, transpose_opt on): the shortlist
+    is the rule-blind top-k by volume, plus the §5 base anchor."""
     cands = candidates(net, batch, world, machine, mode)
     base, _ = base_plan(cands)
-    top = [m for m, _ in cands[:k]]
+    top = [m for m, _ in cands[:max(k, 1)]]
     if base.key() not in [m.key() for m in top]:
         top.append(base)
     scored = []
@@ -714,8 +729,122 @@ def refine(net, batch, world, machine, mode, k=6, depth=2):
     return base, basemk, scored
 
 
+def placement_perm(label, g_pipe, gd, gr, gc, gpn):
+    """Mirror of spec::Placement::physical_ranks (label form)."""
+    gt = gr * gc
+    inner = gd * gt
+    world = g_pipe * inner
+    out = [0] * world
+    for rank in range(world):
+        stage, ir = rank // inner, rank % inner
+        d, t = ir // gt, ir % gt
+        j, i = t // gr, t % gr
+        if label == "column-major":
+            phys = rank
+        elif label == "row-major":
+            phys = stage * inner + d * gt + i * gc + j
+        elif label == "depth-outer":
+            phys = (d * g_pipe + stage) * gt + j * gr + i
+        elif label.startswith("blocked"):
+            rows = int(label[len("blocked"):])
+            cols = gpn // rows
+            assert gpn % rows == 0 and gr % rows == 0 and gc % cols == 0
+            bi, ii = i // rows, i % rows
+            bj, jj = j // cols, j % cols
+            g = (bj * (gr // rows) + bi) * (rows * cols) + jj * rows + ii
+            phys = stage * inner + d * gt + g
+        else:
+            raise ValueError(label)
+        out[rank] = phys
+    assert sorted(out) == list(range(world))
+    return out
+
+
+def placement_admissible(label, g_pipe, gd, gr, gc, gpn):
+    """Mirror of spec::Placement::admissible (label form)."""
+    del g_pipe, gd
+    if label.startswith("blocked"):
+        rows = int(label[len("blocked"):])
+        return rows >= 1 and gpn % rows == 0 and gr % rows == 0 and gc % (gpn // rows) == 0
+    return True
+
+
+def placement_search_set(g_pipe, gd, gr, gc, gpn):
+    """Mirror of spec::Placement::search_set (column-major first, named
+    variants deduped by permutation)."""
+    world = g_pipe * gd * gr * gc
+    out, seen = ["column-major"], [list(range(world))]
+    cands = ["row-major", "depth-outer"] + [f"blocked{r}" for r in divisors(gpn)]
+    for c in cands:
+        if not placement_admissible(c, g_pipe, gd, gr, gc, gpn):
+            continue
+        p = placement_perm(c, g_pipe, gd, gr, gc, gpn)
+        if p in seen:
+            continue
+        seen.append(p)
+        out.append(c)
+    return out
+
+
+def place_programs(progs, perm):
+    """Mirror of the placed CommWorld registration: group member lists
+    are mapped logical->physical so ``members_per_node`` (and from it
+    the ring bandwidth share and P2p link selection) prices the placed
+    ranks; group sizes, tags and rendezvous identity are untouched."""
+    out = []
+    for ops in progs:
+        nops = []
+        for (kind, a, b, tg, grp, stream, deps) in ops:
+            if grp is not None:
+                grp = tuple(perm[r] for r in grp)
+            nops.append((kind, a, b, tg, grp, stream, deps))
+        out.append(nops)
+    return out
+
+
+def refine_placed(net, batch, world, machine, mode, k, depth, pipes, m,
+                  placements=None):
+    """Mirror of the refined planner::PlanRequest search: per-G_pipe
+    gd-max shortlists x admissible placements, ranked by simulated
+    makespan.  Returns (base, base_makespan, [(p, mesh, placement,
+    score, makespan)]) sorted best-first."""
+    gpn = machine.gpus_per_node
+    base, base_vol = base_plan(candidates(net, batch, world, machine, mode))
+    cands = pipelined_candidates(net, batch, world, machine, mode, pipes, m, k)
+    if not any(p == 1 and mm.key() == base.key() for p, mm, _ in cands):
+        cands.append((1, base, base_vol))
+    scored = []
+    for p, mm, score in cands:
+        pls = (placements if placements is not None
+               else placement_search_set(p, mm.g_data, mm.g_r, mm.g_c, gpn))
+        for pl in pls:
+            if not placement_admissible(pl, p, mm.g_data, mm.g_r, mm.g_c, gpn):
+                continue
+            if p <= 1:
+                progs = build_t3d(net, mm, batch, depth, machine, sharded=(mode == "sh"))
+            else:
+                progs = build_t3d_pipeline(net, mm, batch, depth, p, m, machine,
+                                           sharded=(mode == "sh"))
+            progs = place_programs(
+                progs, placement_perm(pl, p, mm.g_data, mm.g_r, mm.g_c, gpn))
+            mk, _ = simulate(machine, progs)
+            scored.append((p, mm, pl, score, mk))
+    if not any(p == 1 and mm.key() == base.key() and pl == "column-major"
+               for p, mm, pl, _, mk in scored):
+        # an explicit placement list without column-major still anchors
+        # the never-slower guarantee on the §5 answer (as in Rust)
+        progs = build_t3d(net, base, batch, depth, machine, sharded=(mode == "sh"))
+        mk, _ = simulate(machine, progs)
+        scored.append((1, base, "column-major", base_vol, mk))
+    scored.sort(key=lambda x: (x[4], x[3]))
+    basemk = next(mk for p, mm, pl, _, mk in scored
+                  if p == 1 and mm.key() == base.key() and pl == "column-major")
+    return base, basemk, scored
+
+
 def refine_pipelined(net, batch, world, machine, mode, k, depth, pipes, m):
-    """Mirror of planner::plan_refined_pipelined."""
+    """Mirror of the refined planner::PlanRequest over pipeline depths
+    with column-major placement."""
     base, base_vol = base_plan(candidates(net, batch, world, machine, mode))
     cands = pipelined_candidates(net, batch, world, machine, mode, pipes, m, k)
     if not any(p == 1 and mm.key() == base.key() for p, mm, _ in cands):
@@ -793,3 +922,35 @@ if __name__ == "__main__":
     pbase, _ = base_plan(candidates(gpt80b, 1024, 1024, polaris(), "rep"))
     assert pbase.key() == (16, 4, 16), "polaris golden plan drifted"
     print("ok: gpt80b/1024 plans match the CI goldens (polaris + frontier)")
+
+    # The placement pin: planner::tests::
+    # placement_search_beats_column_major_on_gpt80b_128.  gpt80b on 128
+    # Polaris GPUs (replicated): the Eq.-4 winner (2, 4, 16) leaves the
+    # 16-member row rings strided at a 1/4 NIC share; the blocked2 node
+    # tiling halves the column ring to the single-NIC cap but doubles
+    # the dominant row share — ~26% faster, and the refined search
+    # recommends it.
+    base, basemk, scored = refine_placed(gpt80b, 1024, 128, polaris(), "rep",
+                                         k=2, depth=2, pipes=[1], m=8)
+    print(f"gpt80b/128 polaris rep, placement search: Eq.-4 base {base.key()} "
+          f"column-major at {basemk:.4f}s")
+    for p, mm, pl, score, mk in scored:
+        mark = " <- winner" if (p, mm, pl, score, mk) == scored[0] else ""
+        print(f"  G_pipe={p} {mm.key()} {pl}: {mk:.4f}s{mark}")
+    wp, wm, wpl, _, wmk = scored[0]
+    assert (wp, wm.key(), wpl) == (1, (2, 4, 16), "blocked2"), "placement winner drifted"
+    assert wmk < basemk * 0.85, "blocked2 must beat column-major decisively"
+    print("ok: blocked2 placement beats the column-major default on gpt80b/128 "
+          "(as the Rust test pins)")
+
+    # The headline mesh: the same tiling wins the paper-scale
+    # gpt80b/1024 configuration (16, 4, 16) by >20%.
+    mesh1024 = Mesh(16, 4, 16)
+    mk_cm, _ = simulate(polaris(), build_t3d(gpt80b, mesh1024, 1024, 2, polaris()))
+    progs = place_programs(build_t3d(gpt80b, mesh1024, 1024, 2, polaris()),
+                           placement_perm("blocked2", 1, 16, 4, 16, 4))
+    mk_b2, _ = simulate(polaris(), progs)
+    print(f"gpt80b/1024 polaris (16,4,16): column-major {mk_cm:.2f}s "
+          f"vs blocked2 {mk_b2:.2f}s")
+    assert mk_b2 < mk_cm * 0.8, "the 1024-GPU blocked2 win drifted"
+    print("ok: blocked2 wins the gpt80b/1024 headline mesh by >20%")

@@ -90,21 +90,19 @@ fn hot_paths() {
     // simulated iteration, depth-sharded state
     {
         let net80 = gpt::gpt_80b().network();
-        let p = tensor3d::planner::plan_mode(
-            &net80,
-            NetKind::Transformer,
-            1024,
-            1024,
-            &machine,
-            tensor3d::planner::StateMode::DepthSharded,
-        );
+        let p = tensor3d::planner::PlanRequest::new(&net80, &machine, 1024)
+            .kind(NetKind::Transformer)
+            .batch(1024)
+            .state(tensor3d::planner::StateMode::DepthSharded)
+            .run();
+        let mesh80 = p.mesh();
         let opts = ScheduleOpts { sharded_state: true, dp_barrier: false };
         let strat = Strategy::Tensor3d { depth: 2, transpose_opt: true };
         let rb = bench("sim build: GPT-80B/1024gpu program set", 3, || {
-            build_programs_with(strat, &net80, &p.mesh, 1024, &machine, opts).total_ops()
+            build_programs_with(strat, &net80, &mesh80, 1024, &machine, opts).total_ops()
         });
         println!("{}", rb.report());
-        let set = build_programs_with(strat, &net80, &p.mesh, 1024, &machine, opts);
+        let set = build_programs_with(strat, &net80, &mesh80, 1024, &machine, opts);
         let big_ops = set.total_ops();
         let rs = bench("sim engine: GPT-80B/1024gpu iteration", 3, || {
             simulate(&machine, &set).makespan

@@ -39,6 +39,7 @@ pub mod xla;
 
 pub mod util;
 pub mod mesh;
+pub mod spec;
 pub mod layout;
 pub mod collectives;
 pub mod comm_model;

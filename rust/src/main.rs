@@ -23,6 +23,7 @@ use tensor3d::models::{gpt, unet, NetworkDesc};
 use tensor3d::planner::{self, NetKind};
 use tensor3d::repro;
 use tensor3d::sim::Machine;
+use tensor3d::spec::Placement;
 use tensor3d::strategies::{self, Strategy};
 use tensor3d::trainer::{self, optimizer::AdamWConfig, TrainConfig};
 use tensor3d::util::cli::{flag, opt, Args};
@@ -132,6 +133,26 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse one placement label, with the CLI's canonical error message.
+fn placement_by_name(label: &str) -> Result<Placement> {
+    Placement::parse(label).ok_or_else(|| {
+        anyhow!("unknown placement {label:?} (column-major|row-major|depth-outer|blockedN)")
+    })
+}
+
+/// Parse a `--placements` spec: `auto` (the planner's named search set
+/// per candidate shape) or a comma list of placement labels.
+fn placements_by_spec(spec: &str) -> Result<Option<Vec<Placement>>> {
+    if spec == "auto" {
+        return Ok(None);
+    }
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        out.push(placement_by_name(tok.trim())?);
+    }
+    Ok(Some(out))
+}
+
 fn cmd_plan(argv: &[String]) -> Result<()> {
     let a = Args::new(
         "tensor3d plan",
@@ -143,8 +164,9 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
             opt(
                 "refine",
                 "0",
-                "re-rank the K best Eq.-4 candidates by simulated full-world \
-                 makespan (0 = volume-only, the paper's §5 rules)",
+                "re-rank the K best Eq.-4 candidates per pipeline depth by simulated \
+                 full-world makespan, searching rank->node placements \
+                 (0 = volume-only, the paper's §5 rules)",
             ),
             opt("depth", "2", "overdecomposition degree used by --refine simulations"),
             opt(
@@ -154,6 +176,12 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
                  with the 1F1B bubble term (1 = no pipelining)",
             ),
             opt("microbatches", "8", "1F1B microbatches per iteration (with --pipeline > 1)"),
+            opt(
+                "placements",
+                "auto",
+                "placement search set for --refine: auto (the named set per candidate \
+                 shape) or a comma list of column-major|row-major|depth-outer|blockedN",
+            ),
             flag("sharded-state", "depth-shard optimizer state (ZeRO-style memory rule)"),
             flag("json", "emit the recommendation as one-line JSON (CI golden diff)"),
         ],
@@ -176,202 +204,91 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     let refine = a.usize("refine")?;
     let pipeline = a.usize("pipeline")?;
     let microbatches = a.usize("microbatches")?;
-    if pipeline > 1 {
-        if microbatches == 0 {
-            bail!("--pipeline needs --microbatches >= 1");
-        }
-        let pipes = tensor3d::mesh::divisors(pipeline);
-        if refine > 0 {
-            let r = planner::plan_refined_pipelined(
-                &net,
-                kind,
-                batch,
-                gpus,
-                &machine,
-                mode,
-                refine,
-                a.usize("depth")?,
-                &pipes,
-                microbatches,
-            );
-            if a.flag("json") {
-                use tensor3d::util::json::Json;
-                let j = Json::obj(vec![
-                    ("model", Json::str(&model_name)),
-                    ("gpus", Json::num(gpus as f64)),
-                    ("machine", Json::str(&machine.name)),
-                    ("pipeline", Json::num(r.pipeline as f64)),
-                    ("microbatches", Json::num(r.microbatches as f64)),
-                    (
-                        "bubble_fraction",
-                        Json::num(comm_model::pipeline_bubble_fraction(
-                            r.pipeline,
-                            r.microbatches,
-                        )),
-                    ),
-                    ("world", Json::num((r.pipeline * r.mesh.world()) as f64)),
-                    ("g_data", Json::num(r.mesh.g_data as f64)),
-                    ("g_r", Json::num(r.mesh.g_r as f64)),
-                    ("g_c", Json::num(r.mesh.g_c as f64)),
-                    ("g_tensor", Json::num(r.mesh.g_tensor() as f64)),
-                    ("makespan_s", Json::num(r.makespan_s)),
-                    ("eq4_makespan_s", Json::num(r.base_makespan_s)),
-                ]);
-                println!("{j}");
-                return Ok(());
-            }
-            println!(
-                "model {} ({} params), batch {batch}, {gpus}x {}: sim-refined pipelined plan \
-                 (G_pipe over {pipes:?}, {microbatches} microbatches, top {refine} per depth)",
-                net.name,
-                fmt_bytes(net.params),
-                machine.name
-            );
-            for (p, m, _, mk) in &r.candidates {
-                let marker = if (*p, *m) == (r.pipeline, r.mesh) { " <- recommended" } else { "" };
-                let base = if *p == 1 && *m == r.base.mesh { " [Eq.-4 winner]" } else { "" };
-                println!(
-                    "  G_pipe={p} g_data={} g_r={} g_c={}  simulated {mk:.3} s/iter{base}{marker}",
-                    m.g_data, m.g_r, m.g_c
-                );
-            }
-            println!(
-                "  refined: G_pipe={} g_data={} g_r={} g_c={} at {:.3} s/iter \
-                 ({:.1}% vs the pipeline-free Eq.-4 pick)",
-                r.pipeline,
-                r.mesh.g_data,
-                r.mesh.g_r,
-                r.mesh.g_c,
-                r.makespan_s,
-                (1.0 - r.makespan_s / r.base_makespan_s) * 100.0
-            );
-            return Ok(());
-        }
-        let r = planner::plan_pipelined(
-            &net,
-            kind,
-            batch,
-            gpus,
-            &machine,
-            mode,
-            &pipes,
-            microbatches,
-        );
-        if a.flag("json") {
-            use tensor3d::util::json::Json;
-            let j = Json::obj(vec![
-                ("model", Json::str(&model_name)),
-                ("gpus", Json::num(gpus as f64)),
-                ("machine", Json::str(&machine.name)),
-                ("pipeline", Json::num(r.pipeline as f64)),
-                ("microbatches", Json::num(r.microbatches as f64)),
-                ("bubble_fraction", Json::num(r.bubble_fraction)),
-                ("world", Json::num((r.pipeline * r.mesh.world()) as f64)),
-                ("g_data", Json::num(r.mesh.g_data as f64)),
-                ("g_r", Json::num(r.mesh.g_r as f64)),
-                ("g_c", Json::num(r.mesh.g_c as f64)),
-                ("g_tensor", Json::num(r.mesh.g_tensor() as f64)),
-            ]);
-            println!("{j}");
-            return Ok(());
-        }
-        println!(
-            "model {} ({} params), batch {batch}, {gpus}x {}: pipelined Eq.-4 plan \
-             (G_pipe over {pipes:?}, {microbatches} microbatches)",
-            net.name,
-            fmt_bytes(net.params),
-            machine.name
-        );
-        for (p, m, score) in &r.candidates {
-            let marker = if (*p, *m) == (r.pipeline, r.mesh) { " <- recommended" } else { "" };
-            println!(
-                "  G_pipe={p} g_data={} g_r={} g_c={}  bubble-adjusted volume {}{marker}",
-                m.g_data,
-                m.g_r,
-                m.g_c,
-                fmt_bytes(score * strategies::BYTES_PER_ELEM)
-            );
-        }
-        println!(
-            "  recommended: G_pipe={} g_data={} g_r={} g_c={} (1F1B bubble {:.1}%)",
-            r.pipeline,
-            r.mesh.g_data,
-            r.mesh.g_r,
-            r.mesh.g_c,
-            r.bubble_fraction * 100.0
-        );
-        return Ok(());
+    if pipeline > 1 && microbatches == 0 {
+        bail!("--pipeline needs --microbatches >= 1");
     }
-    if refine > 0 {
-        let r = planner::plan_refined(
-            &net,
-            kind,
-            batch,
-            gpus,
-            &machine,
-            mode,
-            refine,
-            a.usize("depth")?,
-        );
-        if a.flag("json") {
-            use tensor3d::util::json::Json;
-            let j = Json::obj(vec![
-                ("model", Json::str(&model_name)),
-                ("gpus", Json::num(gpus as f64)),
-                ("g_data", Json::num(r.mesh.g_data as f64)),
-                ("g_r", Json::num(r.mesh.g_r as f64)),
-                ("g_c", Json::num(r.mesh.g_c as f64)),
-                ("makespan_s", Json::num(r.makespan_s)),
-                ("eq4_g_data", Json::num(r.base.mesh.g_data as f64)),
-                ("eq4_g_r", Json::num(r.base.mesh.g_r as f64)),
-                ("eq4_g_c", Json::num(r.base.mesh.g_c as f64)),
-                ("eq4_makespan_s", Json::num(r.base_makespan_s)),
-            ]);
-            println!("{j}");
-            return Ok(());
-        }
-        println!(
-            "model {} ({} params), batch {batch}, {gpus}x {}: sim-refined plan (top {refine} \
-             Eq.-4 candidates re-ranked by simulated makespan)",
-            net.name,
-            fmt_bytes(net.params),
-            machine.name
-        );
-        for (m, vol, mk) in &r.candidates {
-            let marker = if *m == r.mesh { " <- recommended" } else { "" };
-            let base = if *m == r.base.mesh { " [Eq.-4 winner]" } else { "" };
-            println!(
-                "  g_data={} g_r={} g_c={}  volume {}  simulated {mk:.3} s/iter{base}{marker}",
-                m.g_data,
-                m.g_r,
-                m.g_c,
-                fmt_bytes(vol * strategies::BYTES_PER_ELEM)
-            );
-        }
-        println!(
-            "  refined: g_data={} g_r={} g_c={} at {:.3} s/iter ({:.1}% vs the Eq.-4 pick)",
-            r.mesh.g_data,
-            r.mesh.g_r,
-            r.mesh.g_c,
-            r.makespan_s,
-            (1.0 - r.makespan_s / r.base_makespan_s) * 100.0
-        );
-        return Ok(());
+    let pipes = tensor3d::mesh::divisors(pipeline.max(1));
+    let mut req = planner::PlanRequest::new(&net, &machine, gpus)
+        .kind(kind)
+        .batch(batch)
+        .state(mode)
+        .pipelines(&pipes)
+        .microbatches(microbatches.max(1))
+        .refine(refine)
+        .depth(a.usize("depth")?);
+    if let Some(pls) = placements_by_spec(&a.str("placements")?)? {
+        req = req.placements(&pls);
     }
-    let p = planner::plan_mode(&net, kind, batch, gpus, &machine, mode);
+    let r = req.run();
+    let best = r.layout().clone();
+
     if a.flag("json") {
         use tensor3d::util::json::Json;
-        let j = Json::obj(vec![
+        let mut fields = vec![
             ("model", Json::str(&model_name)),
             ("gpus", Json::num(gpus as f64)),
             ("machine", Json::str(&machine.name)),
-            ("world", Json::num(p.mesh.world() as f64)),
-            ("g_data", Json::num(p.mesh.g_data as f64)),
-            ("g_r", Json::num(p.mesh.g_r as f64)),
-            ("g_c", Json::num(p.mesh.g_c as f64)),
-            ("g_tensor", Json::num(p.mesh.g_tensor() as f64)),
-        ]);
-        println!("{j}");
+            ("world", Json::num(best.world() as f64)),
+            ("g_data", Json::num(best.g_data as f64)),
+            ("g_r", Json::num(best.g_r as f64)),
+            ("g_c", Json::num(best.g_c as f64)),
+            ("g_tensor", Json::num(best.g_tensor() as f64)),
+            ("placement", Json::str(&best.placement.label())),
+        ];
+        if pipeline > 1 {
+            fields.push(("pipeline", Json::num(best.g_pipe as f64)));
+            fields.push(("microbatches", Json::num(microbatches as f64)));
+            fields.push((
+                "bubble_fraction",
+                Json::num(comm_model::pipeline_bubble_fraction(best.g_pipe, microbatches)),
+            ));
+        }
+        if refine > 0 {
+            fields.push(("makespan_s", Json::num(r.makespan_s().unwrap_or(f64::NAN))));
+            fields.push(("eq4_makespan_s", Json::num(r.baseline_makespan_s().unwrap_or(f64::NAN))));
+        }
+        println!("{}", Json::obj(fields));
+        return Ok(());
+    }
+
+    let fmt_layout = |l: &tensor3d::spec::Layout| {
+        let mut s = String::new();
+        if l.g_pipe > 1 {
+            s.push_str(&format!("G_pipe={} ", l.g_pipe));
+        }
+        s.push_str(&format!("g_data={} g_r={} g_c={}", l.g_data, l.g_r, l.g_c));
+        if l.placement != Placement::ColumnMajor {
+            s.push_str(&format!(" @{}", l.placement.label()));
+        }
+        s
+    };
+    if r.refined {
+        println!(
+            "model {} ({} params), batch {batch}, {gpus}x {}: sim-refined plan (top {refine} \
+             per G_pipe in {pipes:?}, placements {}, re-ranked by simulated makespan)",
+            net.name,
+            fmt_bytes(net.params),
+            machine.name,
+            a.str("placements")?
+        );
+        for c in &r.candidates {
+            let marker = if c.layout == best { " <- recommended" } else { "" };
+            let base = if c.layout == r.baseline.layout { " [Eq.-4 winner]" } else { "" };
+            println!(
+                "  {}  simulated {:.3} s/iter{base}{marker}",
+                fmt_layout(&c.layout),
+                c.makespan_s.unwrap_or(f64::NAN)
+            );
+        }
+        let (mk, base_mk) = (
+            r.makespan_s().unwrap_or(f64::NAN),
+            r.baseline_makespan_s().unwrap_or(f64::NAN),
+        );
+        println!(
+            "  refined: {} at {mk:.3} s/iter ({:.1}% vs the Eq.-4 pick)",
+            fmt_layout(&best),
+            (1.0 - mk / base_mk) * 100.0
+        );
         return Ok(());
     }
     println!(
@@ -380,32 +297,31 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         fmt_bytes(net.params),
         machine.name
     );
-    println!(
-        "  recommended: g_data={} g_r={} g_c={}  (G_tensor={})",
-        p.mesh.g_data,
-        p.mesh.g_r,
-        p.mesh.g_c,
-        p.mesh.g_tensor()
-    );
+    println!("  recommended: {}  (G_tensor={})", fmt_layout(&best), best.g_tensor());
+    if best.g_pipe > 1 {
+        println!(
+            "  pipeline: {} stages x {microbatches} microbatches (1F1B bubble {:.1}%)",
+            best.g_pipe,
+            comm_model::pipeline_bubble_fraction(best.g_pipe, microbatches) * 100.0
+        );
+    }
     println!(
         "  modelled tensor-parallel volume: {} per GPU/iter",
-        fmt_bytes(p.volume_elems * strategies::BYTES_PER_ELEM)
+        fmt_bytes(r.best().score * strategies::BYTES_PER_ELEM)
     );
     println!(
         "  weight+optimizer state: {} per GPU ({:.0}% of {})",
-        fmt_bytes(p.state_bytes),
-        p.mem_fraction * 100.0,
+        fmt_bytes(r.state_bytes),
+        r.mem_fraction * 100.0,
         fmt_bytes(machine.mem_bytes)
     );
-    println!("  closed-form optimal G_c: {:.2}", p.gc_closed_form);
+    println!("  closed-form optimal G_c: {:.2}", r.gc_closed_form);
     println!("  top alternatives:");
-    for (m, v) in p.alternatives.iter().take(5) {
+    for c in r.candidates.iter().skip(1).take(5) {
         println!(
-            "    g_data={} g_r={} g_c={}  volume {}",
-            m.g_data,
-            m.g_r,
-            m.g_c,
-            fmt_bytes(v * strategies::BYTES_PER_ELEM)
+            "    {}  volume {}",
+            fmt_layout(&c.layout),
+            fmt_bytes(c.score * strategies::BYTES_PER_ELEM)
         );
     }
     Ok(())
@@ -428,6 +344,11 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             opt("batch", "0", "global batch (0 = default)"),
             opt("pipeline", "1", "1F1B pipeline stages (tensor3d only; 1 = no pipelining)"),
             opt("microbatches", "8", "1F1B microbatches per iteration (with --pipeline > 1)"),
+            opt(
+                "placement",
+                "column-major",
+                "rank->node placement: column-major|row-major|depth-outer|blockedN",
+            ),
             flag("sharded-state", "depth-shard parameter/optimizer state (overlapped RS/AG)"),
             flag("dp-barrier", "ablation: serialize the sharded-state collectives"),
         ],
@@ -475,11 +396,34 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     if opts.sharded_state && strat == Strategy::Colossal3d {
         bail!("--sharded-state is not modelled for colossal3d");
     }
-    let (time, gb) = strategies::iterate_with(strat, &net, &mesh, batch, &machine, opts);
+    let placement = placement_by_name(&a.str("placement")?)?;
+    if placement != Placement::ColumnMajor && strat == Strategy::Colossal3d {
+        bail!("--placement is not modelled for colossal3d");
+    }
+    {
+        let eff = strat.effective_mesh(&mesh);
+        let stages = match strat {
+            Strategy::Tensor3dPipeline { stages, .. } => stages.max(1),
+            _ => 1,
+        };
+        if !placement.admissible(stages, eff.g_data, eff.g_r, eff.g_c, machine.gpus_per_node) {
+            bail!(
+                "placement {} is not admissible for mesh g_data={} g_r={} g_c={} on \
+                 {}-GPU nodes",
+                placement.label(),
+                eff.g_data,
+                eff.g_r,
+                eff.g_c,
+                machine.gpus_per_node
+            );
+        }
+    }
+    let (time, gb) =
+        strategies::iterate_placed(strat, &net, &mesh, batch, &machine, opts, &placement);
     let world = strat.world(&mesh);
     let u = strategies::mfu(&net, batch, world, time, &machine);
     println!(
-        "{} on {} GPUs ({}): strategy {}  mesh g_data={} g_r={} g_c={}{}",
+        "{} on {} GPUs ({}): strategy {}  mesh g_data={} g_r={} g_c={}  placement {}{}",
         net.name,
         world,
         machine.name,
@@ -487,6 +431,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         mesh.g_data,
         mesh.g_r,
         mesh.g_c,
+        placement.label(),
         if opts.sharded_state {
             if opts.dp_barrier {
                 "  [sharded state, serialized]"
@@ -529,6 +474,11 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
             opt("batch", "0", "global batch (0 = model default)"),
             opt("pipeline", "1", "1F1B pipeline stages (1 = no pipelining)"),
             opt("microbatches", "8", "1F1B microbatches per iteration (with --pipeline > 1)"),
+            opt(
+                "placement",
+                "column-major",
+                "rank->node placement: column-major|row-major|depth-outer|blockedN",
+            ),
             opt("out", "BENCH_sim.json", "result file (schema documented in ROADMAP.md)"),
             opt(
                 "budget-s",
@@ -561,36 +511,40 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     } else {
         planner::StateMode::Replicated
     };
-    let (mesh, strat) = if pipeline > 1 {
-        let p = planner::plan_pipelined(
-            &net,
-            kind,
-            batch,
-            gpus,
-            &machine,
-            mode,
-            &[pipeline],
-            microbatches,
-        );
-        if p.pipeline != pipeline {
-            bail!("G_pipe={pipeline} is not admissible for {gpus} GPUs on this model");
-        }
-        let strat = Strategy::Tensor3dPipeline {
-            depth,
-            transpose_opt: true,
-            stages: pipeline,
-            microbatches,
-        };
-        (p.mesh, strat)
-    } else {
-        let plan = planner::plan_mode(&net, kind, batch, gpus, &machine, mode);
-        (plan.mesh, Strategy::Tensor3d { depth, transpose_opt: true })
-    };
+    let placement = placement_by_name(&a.str("placement")?)?;
+    let report = planner::PlanRequest::new(&net, &machine, gpus)
+        .kind(kind)
+        .batch(batch)
+        .state(mode)
+        .pipelines(&[pipeline])
+        .microbatches(microbatches.max(1))
+        .depth(depth)
+        .run();
+    // the benchmark pins the *requested* pipeline depth, not the search
+    // winner (p = 1 is always in the report as the anchor)
+    let picked = report
+        .candidates
+        .iter()
+        .find(|c| c.layout.g_pipe == pipeline)
+        .ok_or_else(|| {
+            anyhow!("G_pipe={pipeline} is not admissible for {gpus} GPUs on this model")
+        })?;
+    let planned = picked.layout.mesh();
+    if !placement.admissible(
+        pipeline,
+        planned.g_data,
+        planned.g_r,
+        planned.g_c,
+        machine.gpus_per_node,
+    ) {
+        bail!("placement {} is not admissible for the planned mesh", placement.label());
+    }
+    let layout = picked.layout.clone().placement(placement.clone());
+    let mesh = layout.mesh();
     let bubble = comm_model::pipeline_bubble_fraction(pipeline, microbatches);
-    let opts = strategies::ScheduleOpts { sharded_state: sharded, dp_barrier: false };
 
     let sw = Stopwatch::start();
-    let set = strategies::build_programs_with(strat, &net, &mesh, batch, &machine, opts);
+    let set = strategies::build(&layout, &net, batch, &machine);
     let build_s = sw.secs();
     let ops = set.total_ops();
     let groups = set.comm.len();
@@ -601,7 +555,7 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     let sim_s = sw.secs();
     let total_s = build_s + sim_s;
     let ops_per_sec = ops as f64 / sim_s.max(1e-12);
-    let u = strategies::mfu(&net, batch, strat.world(&mesh), r.makespan, &machine);
+    let u = strategies::mfu(&net, batch, layout.world(), r.makespan, &machine);
 
     let j = Json::obj(vec![
         ("model", Json::str(&model_name)),
@@ -612,6 +566,7 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         ("microbatches", Json::num(microbatches as f64)),
         ("bubble_fraction", Json::num(bubble)),
         ("sharded_state", Json::Bool(sharded)),
+        ("placement", Json::str(&placement.label())),
         ("g_data", Json::num(mesh.g_data as f64)),
         ("g_r", Json::num(mesh.g_r as f64)),
         ("g_c", Json::num(mesh.g_c as f64)),
@@ -629,12 +584,13 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     let out = a.str("out")?;
     std::fs::write(&out, format!("{j}\n"))?;
     println!(
-        "bench-sim: {} on {gpus}x {} (g_data={} g_r={} g_c={}, depth {depth}{}, {} state)",
+        "bench-sim: {} on {gpus}x {} (g_data={} g_r={} g_c={} @{}, depth {depth}{}, {} state)",
         net.name,
         machine.name,
         mesh.g_data,
         mesh.g_r,
         mesh.g_c,
+        placement.label(),
         if pipeline > 1 {
             format!(", pipeline {pipeline}x{microbatches} (bubble {:.1}%)", bubble * 100.0)
         } else {

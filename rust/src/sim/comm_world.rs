@@ -11,6 +11,18 @@
 //! group_size) build allocations and O(#distinct groups): a gpt80b/1024
 //! program has ~1.5 M collective ops but only ~200 distinct
 //! communicators.
+//!
+//! ## Placement
+//!
+//! A `CommWorld` optionally carries a rank→node **placement** — a
+//! permutation from the logical ranks the strategies enumerate to the
+//! physical machine slots (see [`crate::spec::Placement`]).  Member
+//! lists (and so rendezvous identity, group sizes and wire accounting)
+//! stay in logical rank space; only the *cost* side of registration —
+//! `members_per_node`, and from it the ring bandwidth share and P2p
+//! link selection — is computed on the placed ranks.  With the identity
+//! placement (`None`) registration is bit-for-bit the pre-placement
+//! behavior.
 
 use super::machine::Machine;
 use std::collections::HashMap;
@@ -41,6 +53,8 @@ pub struct GroupInfo {
 pub struct CommWorld {
     groups: Vec<GroupInfo>,
     index: HashMap<Vec<usize>, u32>,
+    /// Logical→physical rank map; `None` = identity (column-major).
+    placement: Option<Vec<usize>>,
 }
 
 impl CommWorld {
@@ -48,16 +62,40 @@ impl CommWorld {
         Self::default()
     }
 
+    /// A registry whose cost parameters are computed on *placed* ranks:
+    /// `placement[logical] = physical` (see the module docs).  `None`
+    /// is the identity and equals [`CommWorld::new`]; an explicit
+    /// identity permutation is normalized to `None`, so such a registry
+    /// also passes the reference-engine materialization guard.
+    pub fn with_placement(placement: Option<Vec<usize>>) -> Self {
+        let placement = placement
+            .filter(|p| !p.iter().enumerate().all(|(logical, &phys)| logical == phys));
+        CommWorld { placement, ..Self::default() }
+    }
+
+    /// Whether registration prices groups on the identity placement —
+    /// the precondition for materializing programs into the
+    /// pre-placement reference engine.
+    pub fn is_identity_placement(&self) -> bool {
+        self.placement.is_none()
+    }
+
     /// Intern `members` (idempotent: the same member list always returns
     /// the same id).  `machine` supplies the topology used to precompute
     /// the ring cost parameters; a `CommWorld` is therefore tied to the
-    /// machine it was built for.
+    /// machine (and placement) it was built for.
     pub fn register(&mut self, machine: &Machine, members: Vec<usize>) -> GroupId {
         if let Some(&id) = self.index.get(&members) {
             return GroupId(id);
         }
         let size = members.len();
-        let per_node = machine.members_per_node(&members);
+        let per_node = match &self.placement {
+            None => machine.members_per_node(&members),
+            Some(p) => {
+                let placed: Vec<usize> = members.iter().map(|&r| p[r]).collect();
+                machine.members_per_node(&placed)
+            }
+        };
         let (bw, lat) = machine.ring_bw_lat(size, per_node);
         let id = self.groups.len() as u32;
         self.groups.push(GroupInfo { members: members.clone(), size, per_node, bw, lat });
@@ -102,6 +140,34 @@ mod tests {
         assert!(ga.bw > gb.bw);
         assert_eq!(ga.lat, m.intra_lat_s);
         assert_eq!(gb.lat, m.inter_lat_s);
+    }
+
+    #[test]
+    fn placed_registration_prices_the_physical_ranks() {
+        // logical ranks 0..4 are node-local under the identity, but a
+        // placement that scatters them one-per-node must register them
+        // as a strided (NIC-bound) ring; member lists stay logical.
+        let m = Machine::perlmutter();
+        let scatter: Vec<usize> = (0..16).map(|r| (r % 4) * 4 + r / 4).collect();
+        let mut w = CommWorld::with_placement(Some(scatter));
+        assert!(!w.is_identity_placement());
+        let id = w.register(&m, vec![0, 1, 2, 3]);
+        let g = w.group(id);
+        assert_eq!(g.members, vec![0, 1, 2, 3]);
+        assert_eq!(g.per_node, 1, "placed one per node");
+        let (bw, lat) = m.ring_bw_lat(4, 1);
+        assert_eq!((g.bw, g.lat), (bw, lat));
+        // the same members under the identity stay node-local, and an
+        // explicit identity permutation normalizes to None
+        for mut w2 in [
+            CommWorld::with_placement(None),
+            CommWorld::with_placement(Some((0..16).collect())),
+        ] {
+            assert!(w2.is_identity_placement());
+            let g2 = w2.register(&m, vec![0, 1, 2, 3]);
+            assert_eq!(w2.group(g2).per_node, 4);
+            assert!(w2.group(g2).bw > g.bw);
+        }
     }
 
     #[test]

@@ -304,9 +304,17 @@ pub struct ProgramSetBuilder {
 
 impl ProgramSetBuilder {
     pub fn new(machine: &Machine) -> Self {
+        Self::new_placed(machine, None)
+    }
+
+    /// [`ProgramSetBuilder::new`] with an explicit rank→node placement:
+    /// every communicator this builder interns is priced on the placed
+    /// ranks (see [`CommWorld::with_placement`]).  `None` is the
+    /// identity (column-major) placement.
+    pub fn new_placed(machine: &Machine, placement: Option<Vec<usize>>) -> Self {
         ProgramSetBuilder {
             set: ProgramSet {
-                comm: CommWorld::new(),
+                comm: CommWorld::with_placement(placement),
                 names: NameTable::default(),
                 classes: Vec::new(),
                 rank_class: Vec::new(),

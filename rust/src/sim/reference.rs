@@ -298,6 +298,14 @@ pub fn simulate(machine: &Machine, programs: &[GpuProgram]) -> RefResult {
 /// program builder used to emit.
 pub fn materialize(set: &super::engine::ProgramSet) -> Vec<GpuProgram> {
     use super::engine::OpKind as NewKind;
+    // the pre-refactor engine recomputes members_per_node from the
+    // (logical) member lists, i.e. it assumes the identity placement;
+    // a placed ProgramSet would silently re-time every collective here
+    assert!(
+        set.comm.is_identity_placement(),
+        "only identity-placement (column-major) programs are representable in the \
+         pre-refactor reference engine"
+    );
     let mut out = Vec::with_capacity(set.world());
     for rank in 0..set.world() {
         let cls = set.class_of(rank);

@@ -1,0 +1,478 @@
+//! The unified layout vocabulary: one declarative description of a 4-D
+//! parallel configuration — `(G_data, G_r, G_c)` tensor mesh, §4.2
+//! overdecomposition depth, `G_pipe` 1F1B pipeline stages and
+//! microbatches, the parameter/optimizer state mode — plus, as a
+//! first-class axis, the **rank→node placement**.
+//!
+//! Placement is the AxoNN-lineage observation (arXiv:2110.13005,
+//! applied at system scale by arXiv:2502.08145) that *which ranks share
+//! a node* decides which communicators ride NVLink and how the node's
+//! NICs are shared between co-resident rings.  The seed hard-coded one
+//! answer — the column-major layout of [`crate::mesh`] — inside
+//! `Machine::members_per_node`.  Here it becomes data: a [`Placement`]
+//! is a pure permutation from *logical* ranks (the mesh coordinates the
+//! strategies enumerate) to *physical* ranks (the machine slots that
+//! determine node co-residency), and the simulator's communicator
+//! registration ([`crate::sim::CommWorld`]) prices every ring and P2p
+//! link from the *placed* ranks.
+//!
+//! A [`Layout`] is the whole configuration; `strategies::build` compiles
+//! it, and the §5 planner searches over layouts via
+//! [`crate::planner::PlanRequest`].
+
+use crate::mesh::{divisors, Mesh};
+
+/// How parameter/optimizer state is laid out across the data dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StateMode {
+    /// Every rank of a tensor group holds a full replica of its shard's
+    /// weights and optimizer state (the seed behavior).
+    #[default]
+    Replicated,
+    /// ZeRO-style: optimizer state sharded `G_data`-ways; weights
+    /// all-gathered / gradients reduce-scattered per iteration.
+    DepthSharded,
+}
+
+/// Rank→node placement: a permutation from logical ranks to physical
+/// machine slots (slot `r` lives on node `r / gpus_per_node`).
+///
+/// The logical rank space is the canonical linearization the strategies
+/// build programs in: pipeline stage outermost, then the data index,
+/// then the `G_r x G_c` tensor grid column-major —
+/// `rank = stage * inner + d * G_tensor + j * G_r + i`.
+///
+/// What each variant changes is only *who shares a node*; op programs,
+/// tags and rendezvous are placement-invariant, so permuting the
+/// placement changes timings (ring bandwidth shares, P2p link
+/// selection) and nothing else — pinned property-style by
+/// `rust/tests/sim_golden.rs`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// The seed layout (identity permutation): column communicators get
+    /// contiguous ranks, so with `G_r <= gpus_per_node` they are
+    /// node-local — the right default when the forward all-reduces over
+    /// the column groups dominate.
+    #[default]
+    ColumnMajor,
+    /// Tensor grid laid row-major (`i * G_c + j`): row communicators get
+    /// the contiguous ranks instead.
+    RowMajor,
+    /// The data index outermost across the *entire* world, pipeline
+    /// stages inner (`(d * G_pipe + stage) * G_tensor + grid`): moves
+    /// pipeline-stage boundaries inside node boundaries so same-replica
+    /// neighbor stages can co-reside.  Identity when `G_pipe == 1`.
+    DepthOuter,
+    /// The `G_r x G_c` grid tiled into `rows x (gpus_per_node / rows)`
+    /// node tiles: each node hosts a sub-block of the grid, so *both*
+    /// the column and the row rings keep `rows` (resp. `gpn / rows`)
+    /// members per node.  On thin-NIC machines this trades the column
+    /// ring's NVLink for doubling the row ring's NIC share — the
+    /// placement that beats column-major on `G_c >> G_r` meshes where
+    /// the row traffic dominates (see the pinned gpt80b ranking).
+    /// `rows = G_r` (with the tile width dividing `G_c`) degenerates to
+    /// [`Placement::ColumnMajor`].
+    NodeBlocked {
+        /// Grid rows per node tile; must divide both `gpus_per_node`
+        /// and `G_r`, with `gpus_per_node / rows` dividing `G_c`.
+        rows: usize,
+    },
+    /// An explicit logical→physical permutation of `0..world` — the
+    /// escape hatch for placements the named variants cannot express.
+    Custom(Vec<usize>),
+}
+
+impl Placement {
+    /// Short stable label (used by `plan --json`, goldens and reports).
+    pub fn label(&self) -> String {
+        match self {
+            Placement::ColumnMajor => "column-major".into(),
+            Placement::RowMajor => "row-major".into(),
+            Placement::DepthOuter => "depth-outer".into(),
+            Placement::NodeBlocked { rows } => format!("blocked{rows}"),
+            Placement::Custom(_) => "custom".into(),
+        }
+    }
+
+    /// Inverse of [`Placement::label`] for the named variants
+    /// (`Custom` permutations are not expressible as a label).
+    pub fn parse(label: &str) -> Option<Placement> {
+        match label {
+            "column-major" => Some(Placement::ColumnMajor),
+            "row-major" => Some(Placement::RowMajor),
+            "depth-outer" => Some(Placement::DepthOuter),
+            other => other
+                .strip_prefix("blocked")
+                .and_then(|n| n.parse::<usize>().ok())
+                .map(|rows| Placement::NodeBlocked { rows }),
+        }
+    }
+
+    /// Whether this placement is well-formed for the given shape.
+    pub fn admissible(
+        &self,
+        g_pipe: usize,
+        g_data: usize,
+        g_r: usize,
+        g_c: usize,
+        gpus_per_node: usize,
+    ) -> bool {
+        let world = g_pipe * g_data * g_r * g_c;
+        match self {
+            Placement::ColumnMajor | Placement::RowMajor | Placement::DepthOuter => true,
+            Placement::NodeBlocked { rows } => {
+                *rows >= 1
+                    && gpus_per_node % rows == 0
+                    && g_r % rows == 0
+                    && g_c % (gpus_per_node / rows) == 0
+            }
+            Placement::Custom(p) => {
+                if p.len() != world {
+                    return false;
+                }
+                let mut seen = vec![false; world];
+                p.iter().all(|&r| r < world && !std::mem::replace(&mut seen[r], true))
+            }
+        }
+    }
+
+    /// The full logical→physical permutation for the given shape.
+    /// Panics if the placement is not [`Placement::admissible`].
+    pub fn physical_ranks(
+        &self,
+        g_pipe: usize,
+        g_data: usize,
+        g_r: usize,
+        g_c: usize,
+        gpus_per_node: usize,
+    ) -> Vec<usize> {
+        assert!(
+            self.admissible(g_pipe, g_data, g_r, g_c, gpus_per_node),
+            "placement {} is not admissible for G_pipe={g_pipe} x (g_data={g_data}, g_r={g_r}, \
+             g_c={g_c}) on {gpus_per_node}-GPU nodes",
+            self.label()
+        );
+        let gt = g_r * g_c;
+        let inner = g_data * gt;
+        let world = g_pipe * inner;
+        if let Placement::Custom(p) = self {
+            return p.clone();
+        }
+        (0..world)
+            .map(|rank| {
+                let (stage, ir) = (rank / inner, rank % inner);
+                let (d, t) = (ir / gt, ir % gt);
+                let (j, i) = (t / g_r, t % g_r);
+                match self {
+                    Placement::ColumnMajor => rank,
+                    Placement::RowMajor => stage * inner + d * gt + i * g_c + j,
+                    Placement::DepthOuter => (d * g_pipe + stage) * gt + j * g_r + i,
+                    Placement::NodeBlocked { rows } => {
+                        let cols = gpus_per_node / rows;
+                        let (bi, ii) = (i / rows, i % rows);
+                        let (bj, jj) = (j / cols, j % cols);
+                        let g = (bj * (g_r / rows) + bi) * (rows * cols) + jj * rows + ii;
+                        stage * inner + d * gt + g
+                    }
+                    Placement::Custom(_) => unreachable!("handled above"),
+                }
+            })
+            .collect()
+    }
+
+    /// [`Placement::physical_ranks`], reduced to `None` when the
+    /// permutation is the identity — the form [`crate::sim::CommWorld`]
+    /// consumes, and the reason `ColumnMajor` (and every variant that
+    /// degenerates to it on a given shape) stays bit-for-bit the
+    /// pre-placement engine.
+    pub fn perm(
+        &self,
+        g_pipe: usize,
+        g_data: usize,
+        g_r: usize,
+        g_c: usize,
+        gpus_per_node: usize,
+    ) -> Option<Vec<usize>> {
+        if matches!(self, Placement::ColumnMajor) {
+            return None;
+        }
+        let p = self.physical_ranks(g_pipe, g_data, g_r, g_c, gpus_per_node);
+        if p.iter().enumerate().all(|(logical, &phys)| logical == phys) {
+            None
+        } else {
+            Some(p)
+        }
+    }
+
+    /// The planner's default placement search set for a shape: the named
+    /// variants that are admissible and *distinct* as permutations
+    /// (variants that degenerate to an earlier one — e.g. `DepthOuter`
+    /// at `G_pipe = 1`, or `NodeBlocked { rows: G_r }` — are dropped).
+    /// `ColumnMajor` is always first.
+    pub fn search_set(
+        g_pipe: usize,
+        g_data: usize,
+        g_r: usize,
+        g_c: usize,
+        gpus_per_node: usize,
+    ) -> Vec<Placement> {
+        let mut out = vec![Placement::ColumnMajor];
+        let mut seen: Vec<Vec<usize>> = Vec::new();
+        let world = g_pipe * g_data * g_r * g_c;
+        seen.push((0..world).collect());
+        let mut candidates = vec![Placement::RowMajor, Placement::DepthOuter];
+        for rows in divisors(gpus_per_node) {
+            candidates.push(Placement::NodeBlocked { rows });
+        }
+        for c in candidates {
+            if !c.admissible(g_pipe, g_data, g_r, g_c, gpus_per_node) {
+                continue;
+            }
+            let p = c.physical_ranks(g_pipe, g_data, g_r, g_c, gpus_per_node);
+            if seen.contains(&p) {
+                continue;
+            }
+            seen.push(p);
+            out.push(c);
+        }
+        out
+    }
+}
+
+/// The single 4D-plus-placement configuration: everything
+/// `strategies::build` needs to compile one training iteration, and the
+/// unit the planner's [`crate::planner::PlanReport`] ranks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layout {
+    /// Data-parallel groups (per pipeline stage).
+    pub g_data: usize,
+    /// Tensor-grid rows.
+    pub g_r: usize,
+    /// Tensor-grid columns.
+    pub g_c: usize,
+    /// §4.2 overdecomposition degree (subdivides work, not ranks).
+    pub depth: usize,
+    /// 1F1B pipeline stages (1 = no pipelining).
+    pub g_pipe: usize,
+    /// Microbatches per iteration (meaningful when `g_pipe > 1`).
+    pub microbatches: usize,
+    /// Parameter/optimizer state layout.
+    pub state: StateMode,
+    /// Rank→node placement.
+    pub placement: Placement,
+}
+
+impl Layout {
+    /// A plain Tensor3D layout: no pipelining, replicated state,
+    /// column-major placement.
+    pub fn tensor3d(g_data: usize, g_r: usize, g_c: usize, depth: usize) -> Layout {
+        Layout {
+            g_data,
+            g_r,
+            g_c,
+            depth,
+            g_pipe: 1,
+            microbatches: 1,
+            state: StateMode::Replicated,
+            placement: Placement::ColumnMajor,
+        }
+    }
+
+    /// Builder-style: set the pipeline axis.
+    pub fn pipeline(mut self, stages: usize, microbatches: usize) -> Layout {
+        self.g_pipe = stages.max(1);
+        self.microbatches = microbatches.max(1);
+        self
+    }
+
+    /// Builder-style: set the state mode.
+    pub fn state(mut self, state: StateMode) -> Layout {
+        self.state = state;
+        self
+    }
+
+    /// Builder-style: set the placement.
+    pub fn placement(mut self, placement: Placement) -> Layout {
+        self.placement = placement;
+        self
+    }
+
+    /// The inner per-stage tensor mesh.
+    pub fn mesh(&self) -> Mesh {
+        Mesh::new(self.g_data, self.g_r, self.g_c, self.depth)
+    }
+
+    /// Ranks per pipeline stage.
+    pub fn inner_world(&self) -> usize {
+        self.g_data * self.g_r * self.g_c
+    }
+
+    /// Total simulated ranks.
+    pub fn world(&self) -> usize {
+        self.g_pipe * self.inner_world()
+    }
+
+    pub fn g_tensor(&self) -> usize {
+        self.g_r * self.g_c
+    }
+
+    pub fn pipelined(&self) -> bool {
+        self.g_pipe > 1
+    }
+
+    /// The placement permutation for this layout on `gpus_per_node`-GPU
+    /// nodes (`None` = identity; see [`Placement::perm`]).
+    pub fn perm(&self, gpus_per_node: usize) -> Option<Vec<usize>> {
+        self.placement.perm(self.g_pipe, self.g_data, self.g_r, self.g_c, gpus_per_node)
+    }
+
+    /// Compact human-readable description.
+    pub fn label(&self) -> String {
+        let mut s = format!("(g_data={}, g_r={}, g_c={})", self.g_data, self.g_r, self.g_c);
+        if self.pipelined() {
+            s = format!("G_pipe={} x {s} m={}", self.g_pipe, self.microbatches);
+        }
+        if self.state == StateMode::DepthSharded {
+            s.push_str(" sharded");
+        }
+        if self.placement != Placement::ColumnMajor {
+            s.push_str(&format!(" @{}", self.placement.label()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_major_is_the_identity() {
+        assert_eq!(Placement::ColumnMajor.perm(2, 4, 2, 4, 4), None);
+        let p = Placement::ColumnMajor.physical_ranks(1, 2, 2, 4, 4);
+        assert_eq!(p, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn named_placements_are_permutations() {
+        for pl in [
+            Placement::ColumnMajor,
+            Placement::RowMajor,
+            Placement::DepthOuter,
+            Placement::NodeBlocked { rows: 2 },
+        ] {
+            for (gp, gd, gr, gc) in [(1, 2, 4, 4), (2, 2, 2, 4), (1, 1, 2, 2), (4, 1, 2, 2)] {
+                if !pl.admissible(gp, gd, gr, gc, 4) {
+                    continue;
+                }
+                let world = gp * gd * gr * gc;
+                let p = pl.physical_ranks(gp, gd, gr, gc, 4);
+                let mut sorted = p.clone();
+                sorted.sort();
+                assert_eq!(sorted, (0..world).collect::<Vec<_>>(), "{pl:?} {gp} {gd} {gr} {gc}");
+            }
+        }
+    }
+
+    #[test]
+    fn depth_outer_degenerates_without_pipelining() {
+        // with one stage the data index is already outermost
+        assert_eq!(Placement::DepthOuter.perm(1, 4, 2, 4, 4), None);
+        assert!(Placement::DepthOuter.perm(2, 2, 2, 2, 4).is_some());
+    }
+
+    #[test]
+    fn row_major_swaps_grid_contiguity() {
+        // (g_r=2, g_c=4): column-major puts column pairs adjacent;
+        // row-major puts each row's 4 columns adjacent
+        let p = Placement::RowMajor.physical_ranks(1, 1, 2, 4, 4);
+        // logical rank of (i=0, j=0..3) is j*2; physical must be 0..3
+        for j in 0..4 {
+            assert_eq!(p[j * 2], j);
+            assert_eq!(p[j * 2 + 1], 4 + j);
+        }
+        // degenerate grids are the identity
+        assert_eq!(Placement::RowMajor.perm(1, 4, 1, 4, 4), None);
+        assert_eq!(Placement::RowMajor.perm(1, 4, 4, 1, 4), None);
+    }
+
+    #[test]
+    fn node_blocked_tiles_the_grid() {
+        // (g_r=4, g_c=4), 4-GPU nodes, rows=2: node tiles are 2x2 grid
+        // blocks, so each node hosts {i, i+1} x {j, j+1}
+        let pl = Placement::NodeBlocked { rows: 2 };
+        assert!(pl.admissible(1, 1, 4, 4, 4));
+        let p = pl.physical_ranks(1, 1, 4, 4, 4);
+        let node_of = |i: usize, j: usize| p[j * 4 + i] / 4;
+        assert_eq!(node_of(0, 0), node_of(1, 1));
+        assert_ne!(node_of(0, 0), node_of(2, 0));
+        assert_ne!(node_of(0, 0), node_of(0, 2));
+        // rows = g_r degenerates to column-major
+        assert_eq!(Placement::NodeBlocked { rows: 4 }.perm(1, 2, 4, 4, 4), None);
+        // inadmissible shapes are rejected
+        assert!(!Placement::NodeBlocked { rows: 2 }.admissible(1, 2, 3, 4, 4));
+        assert!(!Placement::NodeBlocked { rows: 3 }.admissible(1, 2, 3, 4, 4));
+    }
+
+    #[test]
+    fn custom_validates_the_permutation() {
+        let ok = Placement::Custom(vec![1, 0, 3, 2]);
+        assert!(ok.admissible(1, 1, 2, 2, 4));
+        assert_eq!(ok.physical_ranks(1, 1, 2, 2, 4), vec![1, 0, 3, 2]);
+        assert!(!Placement::Custom(vec![0, 0, 1, 2]).admissible(1, 1, 2, 2, 4));
+        assert!(!Placement::Custom(vec![0, 1]).admissible(1, 1, 2, 2, 4));
+        // a custom identity reduces to None like ColumnMajor
+        assert_eq!(Placement::Custom(vec![0, 1, 2, 3]).perm(1, 1, 2, 2, 4), None);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for pl in [
+            Placement::ColumnMajor,
+            Placement::RowMajor,
+            Placement::DepthOuter,
+            Placement::NodeBlocked { rows: 2 },
+        ] {
+            assert_eq!(Placement::parse(&pl.label()), Some(pl));
+        }
+        assert_eq!(Placement::parse("nope"), None);
+        assert_eq!(Placement::parse("blockedx"), None);
+        assert_eq!(Placement::Custom(vec![0]).label(), "custom");
+    }
+
+    #[test]
+    fn search_set_dedupes_degenerate_variants() {
+        // g_r=1: row-major == column-major; g_pipe=1: depth-outer too.
+        // NodeBlocked rows=1 (cols=4) needs g_c % 4 == 0.
+        let set = Placement::search_set(1, 4, 1, 2, 4);
+        assert_eq!(set, vec![Placement::ColumnMajor]);
+        // the gpt80b shape: blocked2 is a genuine alternative
+        let set = Placement::search_set(1, 16, 4, 16, 4);
+        assert!(set.contains(&Placement::NodeBlocked { rows: 2 }));
+        assert!(set.contains(&Placement::RowMajor));
+        assert!(!set.contains(&Placement::DepthOuter));
+        assert_eq!(set[0], Placement::ColumnMajor);
+        // NodeBlocked { rows: 4 } == column-major here -> deduped
+        assert!(!set.contains(&Placement::NodeBlocked { rows: 4 }));
+    }
+
+    #[test]
+    fn layout_accessors() {
+        let l = Layout::tensor3d(2, 2, 4, 2)
+            .pipeline(2, 8)
+            .state(StateMode::DepthSharded)
+            .placement(Placement::RowMajor);
+        assert_eq!(l.inner_world(), 16);
+        assert_eq!(l.world(), 32);
+        assert_eq!(l.g_tensor(), 8);
+        assert!(l.pipelined());
+        assert_eq!(l.mesh(), Mesh::new(2, 2, 4, 2));
+        assert!(l.perm(4).is_some());
+        assert!(l.label().contains("G_pipe=2"));
+        assert!(l.label().contains("sharded"));
+        assert!(l.label().contains("row-major"));
+        let plain = Layout::tensor3d(2, 2, 4, 1);
+        assert_eq!(plain.perm(4), None);
+        assert!(!plain.pipelined());
+    }
+}

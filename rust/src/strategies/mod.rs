@@ -25,6 +25,16 @@
 //! microbatches' collectives over the same communicator can be in flight
 //! concurrently).
 //!
+//! The preferred entry point is [`build`], which compiles a declarative
+//! [`crate::spec::Layout`] — mesh, depth, pipeline axis, state mode and
+//! rank→node [`Placement`] in one value.  Placement flows into the
+//! [`crate::sim::CommWorld`] at communicator registration, so ring
+//! bandwidth shares and P2p link selection are priced on the *placed*
+//! ranks while programs, tags and wire accounting stay in logical rank
+//! space (placement changes timings only).  The [`Strategy`]-based
+//! builders remain for the baselines and ablations
+//! (Megatron/Colossal-AI, §4.1 off, the dp-barrier ablation).
+//!
 //! All strategies here are SPMD per stage — every rank of a stage runs
 //! the same op sequence and differs only in which communicator each
 //! collective binds — so the world shares one op-template class per
@@ -41,6 +51,7 @@ use crate::models::NetworkDesc;
 use crate::pipeline::{self, PipelineSchedule, Step};
 use crate::sim::engine::{ProgramSet, ProgramSetBuilder, Stream};
 use crate::sim::Machine;
+use crate::spec::{Layout, Placement, StateMode};
 
 pub const BYTES_PER_ELEM: f64 = 2.0; // fp16 activations/gradients (§6.1)
 
@@ -192,7 +203,8 @@ pub fn build_programs(
     build_programs_with(strategy, net, mesh_in, batch, machine, ScheduleOpts::default())
 }
 
-/// [`build_programs`] with explicit [`ScheduleOpts`].
+/// [`build_programs`] with explicit [`ScheduleOpts`] (identity — i.e.
+/// column-major — placement).
 pub fn build_programs_with(
     strategy: Strategy,
     net: &NetworkDesc,
@@ -201,14 +213,71 @@ pub fn build_programs_with(
     machine: &Machine,
     opts: ScheduleOpts,
 ) -> ProgramSet {
+    build_placed(strategy, net, mesh_in, batch, machine, opts, &Placement::ColumnMajor)
+}
+
+/// Compile a [`Layout`] — the single entry point behind which the
+/// Tensor3D / Tensor3D-pipeline dispatch collapses: the pipeline axis,
+/// state mode and rank→node placement are all read off the layout.
+/// (`G_pipe = 1` routes through the plain Tensor3D builder bit for bit;
+/// `Placement::ColumnMajor` is the identity and reproduces the
+/// pre-placement programs exactly — both pinned by
+/// `rust/tests/sim_golden.rs`.)
+pub fn build(layout: &Layout, net: &NetworkDesc, batch: usize, machine: &Machine) -> ProgramSet {
+    let strategy = Strategy::Tensor3dPipeline {
+        depth: layout.depth,
+        transpose_opt: true,
+        stages: layout.g_pipe,
+        microbatches: layout.microbatches,
+    };
+    let opts = ScheduleOpts {
+        sharded_state: layout.state == StateMode::DepthSharded,
+        dp_barrier: false,
+    };
+    build_placed(strategy, net, &layout.mesh(), batch, machine, opts, &layout.placement)
+}
+
+/// [`build_programs_with`] under an explicit rank→node placement — the
+/// [`Strategy`]-typed twin of [`build`] for the baselines and ablations
+/// a [`Layout`] cannot express.
+pub fn build_programs_placed(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh_in: &Mesh,
+    batch: usize,
+    machine: &Machine,
+    opts: ScheduleOpts,
+    placement: &Placement,
+) -> ProgramSet {
+    build_placed(strategy, net, mesh_in, batch, machine, opts, placement)
+}
+
+/// The placement-aware dispatch all builds funnel through.
+fn build_placed(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh_in: &Mesh,
+    batch: usize,
+    machine: &Machine,
+    opts: ScheduleOpts,
+    placement: &Placement,
+) -> ProgramSet {
     let mesh = strategy.effective_mesh(mesh_in);
+    let stages = match strategy {
+        Strategy::Tensor3dPipeline { stages, .. } => stages.max(1),
+        _ => 1,
+    };
+    // logical→physical permutation (None = identity); the builders pass
+    // it to the CommWorld so every ring/link is priced on placed ranks
+    let perm = placement.perm(stages, mesh.g_data, mesh.g_r, mesh.g_c, machine.gpus_per_node);
     match strategy {
         Strategy::Tensor3d { depth, transpose_opt } => {
-            build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts, machine)
+            build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts, machine, perm)
         }
-        Strategy::Megatron => build_tensor3d(net, &mesh, batch, 1, true, opts, machine),
+        Strategy::Megatron => build_tensor3d(net, &mesh, batch, 1, true, opts, machine, perm),
         Strategy::Colossal3d => {
             assert!(!opts.sharded_state, "sharded state is not modelled for Colossal-AI-3D");
+            assert!(perm.is_none(), "placement is not modelled for Colossal-AI-3D");
             build_colossal(net, &mesh, batch, machine)
         }
         Strategy::Tensor3dPipeline { depth, transpose_opt, stages, microbatches } => {
@@ -217,7 +286,7 @@ pub fn build_programs_with(
                 // routing through the same builder keeps the results
                 // bit-for-bit identical to Strategy::Tensor3d (pinned by
                 // rust/tests/sim_golden.rs)
-                build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts, machine)
+                build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts, machine, perm)
             } else {
                 build_tensor3d_pipeline(
                     net,
@@ -229,6 +298,7 @@ pub fn build_programs_with(
                     microbatches,
                     opts,
                     machine,
+                    perm,
                 )
             }
         }
@@ -249,12 +319,13 @@ fn build_tensor3d(
     transpose_opt: bool,
     opts: ScheduleOpts,
     machine: &Machine,
+    perm: Option<Vec<usize>>,
 ) -> ProgramSet {
     let world = mesh.world();
     let samples_per_exec = batch as f64 / (mesh.g_data * depth) as f64;
     // depth sharding is the identity when there is no data dimension
     let use_shard = opts.sharded_state && mesh.g_data > 1;
-    let mut b = ProgramSetBuilder::new(machine);
+    let mut b = ProgramSetBuilder::new_placed(machine, perm);
 
     for rank in 0..world {
         let Coord { d, i, j } = mesh.coord_of(rank);
@@ -534,6 +605,7 @@ fn build_tensor3d_pipeline(
     microbatches: usize,
     opts: ScheduleOpts,
     machine: &Machine,
+    perm: Option<Vec<usize>>,
 ) -> ProgramSet {
     assert!(stages >= 2, "build_tensor3d_pipeline wants stages >= 2 (1 routes to build_tensor3d)");
     assert!(microbatches >= 1, "pipelining needs at least one microbatch");
@@ -564,7 +636,7 @@ fn build_tensor3d_pipeline(
     let ranges = pipeline::partition_layers(&costs, stages);
     let samples_per_exec = batch as f64 / (mesh.g_data * microbatches * depth) as f64;
     let use_shard = opts.sharded_state && mesh.g_data > 1;
-    let mut b = ProgramSetBuilder::new(machine);
+    let mut b = ProgramSetBuilder::new_placed(machine, perm);
 
     for rank in 0..world {
         let stage = rank / inner;
@@ -1019,7 +1091,20 @@ pub fn iterate_with(
     machine: &Machine,
     opts: ScheduleOpts,
 ) -> (f64, f64) {
-    let set = build_programs_with(strategy, net, mesh, batch, machine, opts);
+    iterate_placed(strategy, net, mesh, batch, machine, opts, &Placement::ColumnMajor)
+}
+
+/// [`iterate_with`] under an explicit rank→node placement.
+pub fn iterate_placed(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    machine: &Machine,
+    opts: ScheduleOpts,
+    placement: &Placement,
+) -> (f64, f64) {
+    let set = build_placed(strategy, net, mesh, batch, machine, opts, placement);
     let r = crate::sim::simulate(machine, &set);
     let gb = r.comm_bytes.iter().sum::<f64>() / r.comm_bytes.len() as f64 / 1e9;
     (r.makespan, gb)
@@ -1427,6 +1512,69 @@ mod tests {
         };
         assert_eq!(p.world(&mesh), 32);
         assert_eq!(Strategy::Megatron.world(&mesh), 8);
+    }
+
+    #[test]
+    fn layout_build_with_column_major_matches_the_strategy_builder() {
+        // strategies::build on a ColumnMajor layout is bit-for-bit the
+        // legacy Strategy-based build, pipelined or not
+        let net = small_net();
+        let machine = Machine::polaris();
+        for (layout, strategy) in [
+            (Layout::tensor3d(2, 2, 4, 2), Strategy::Tensor3d { depth: 2, transpose_opt: true }),
+            (
+                Layout::tensor3d(4, 2, 4, 2).state(StateMode::DepthSharded),
+                Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            ),
+            (
+                Layout::tensor3d(2, 1, 2, 1).pipeline(2, 4),
+                Strategy::Tensor3dPipeline {
+                    depth: 1,
+                    transpose_opt: true,
+                    stages: 2,
+                    microbatches: 4,
+                },
+            ),
+        ] {
+            let opts = ScheduleOpts {
+                sharded_state: layout.state == StateMode::DepthSharded,
+                dp_barrier: false,
+            };
+            let a = build(&layout, &net, 64, &machine);
+            let b = build_programs_with(strategy, &net, &layout.mesh(), 64, &machine, opts);
+            assert_eq!(a.total_ops(), b.total_ops());
+            let ra = crate::sim::simulate(&machine, &a);
+            let rb = crate::sim::simulate(&machine, &b);
+            assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits(), "{}", layout.label());
+            for g in 0..a.world() {
+                assert_eq!(ra.comm_bytes[g].to_bits(), rb.comm_bytes[g].to_bits());
+                assert_eq!(ra.comm_busy[g].to_bits(), rb.comm_busy[g].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn placement_changes_timings_only() {
+        // a placed build has identical programs — op counts and per-GPU
+        // wire bytes — and differs (here: strictly) in timing, because
+        // row-major hands the forward-AR columns' NVLink to the rows
+        let net = small_net();
+        let machine = Machine::polaris();
+        let cm = Layout::tensor3d(2, 4, 2, 2);
+        let rm = cm.clone().placement(Placement::RowMajor);
+        let a = build(&cm, &net, 64, &machine);
+        let b = build(&rm, &net, 64, &machine);
+        assert_eq!(a.total_ops(), b.total_ops());
+        assert_eq!(a.comm.len(), b.comm.len());
+        let ra = crate::sim::simulate(&machine, &a);
+        let rb = crate::sim::simulate(&machine, &b);
+        for g in 0..a.world() {
+            assert_eq!(ra.comm_bytes[g].to_bits(), rb.comm_bytes[g].to_bits());
+        }
+        assert_ne!(ra.makespan.to_bits(), rb.makespan.to_bits());
+        // on this mesh the column groups carry the forward activations:
+        // the default placement must win
+        assert!(ra.makespan < rb.makespan, "{} vs {}", ra.makespan, rb.makespan);
     }
 
     #[test]
