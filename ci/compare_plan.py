@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Diff a `tensor3d plan --json` line against a checked-in golden.
+
+Discrete fields (strings, integers) must match exactly — they are the
+recommendation the golden pins.  Float fields (simulated makespans) are
+compared with a relative tolerance: the golden values are authored from
+the stdlib engine mirror (python/tests/sim_mirror.py), which tracks the
+Rust engine closely but is not the bitwise reference, and a genuine
+model regression moves makespans by far more than the tolerance.
+
+Usage: compare_plan.py GOLDEN.json ACTUAL.json
+"""
+import json
+import math
+import sys
+
+RTOL = 0.05
+
+# Classified by name, not value shape: a simulated makespan that happens
+# to land on an integral value must not silently tighten to exact
+# comparison.  Everything else is the discrete recommendation and must
+# match exactly.
+FLOAT_FIELDS = {"makespan_s", "eq4_makespan_s", "bubble_fraction"}
+
+
+def main():
+    golden_path, actual_path = sys.argv[1], sys.argv[2]
+    with open(golden_path) as f:
+        golden = json.load(f)
+    with open(actual_path) as f:
+        actual = json.load(f)
+    errors = []
+    if sorted(golden) != sorted(actual):
+        errors.append(f"field sets differ: golden {sorted(golden)} vs actual {sorted(actual)}")
+    for key in sorted(set(golden) & set(actual)):
+        want, got = golden[key], actual[key]
+        if key in FLOAT_FIELDS:
+            ok = (isinstance(want, (int, float)) and isinstance(got, (int, float))
+                  and math.isclose(got, want, rel_tol=RTOL, abs_tol=1e-12))
+        elif isinstance(want, (int, float)) and isinstance(got, (int, float)):
+            # ints may round-trip as floats through the JSON layer
+            ok = float(want) == float(got)
+        else:
+            ok = want == got
+        if not ok:
+            errors.append(f"{key}: golden {want!r} vs actual {got!r}")
+    if errors:
+        print(f"plan drifted from {golden_path}:")
+        for e in errors:
+            print(" ", e)
+        sys.exit(1)
+    print(f"plan matches {golden_path} (floats within {RTOL:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,14 @@ empirically pinned Rust tests are diagnosable without a Rust toolchain:
   refined search recommends the (2, 4, 16) mesh under the ``blocked2``
   node tiling, decisively faster than the column-major default, and the
   same placement wins the paper-scale gpt80b/1024 headline mesh.
+* Fast refinement (PR 5): ``reprice`` / ``simulate(..., pricing=...)``
+  mirror the ``sim::PlacedWorld`` build-once/re-price-per-placement path
+  (programs untouched, only per-group cost parameters move), and
+  ``refine_placed`` mirrors the planner's fallback for an explicit
+  placement list that admits nothing on a shortlisted mesh.  ``__main__``
+  asserts the re-pricing invariant (re-priced == placed rebuild,
+  bitwise, plain and pipelined) and that the refined candidate count
+  equals shortlist x admissible placements.
 * The issue-order permutation-invariance property of
   ``rust/tests/sim_golden.rs`` can be spot-checked here with
   ``simulate(..., order=...)``.
@@ -369,13 +377,19 @@ def build_t3d(net, mesh_in, batch, depth, machine, sharded=False, barrier=False)
     return programs
 
 
-def simulate(machine, programs, order=None):
+def simulate(machine, programs, order=None, pricing=None):
     """Mirror of sim::engine::simulate / simulate_permuted.
 
     Returns ``(makespan, compute_busy)``.  Stream 3 (P2p) mirrors the
     engine's channel-pool semantics: an in-flight Send/Recv transfer
     never updates ``stream_free``, so the next P2p op's start is governed
     solely by deps and partner readiness.
+
+    ``pricing`` mirrors the re-priced ``sim::PlacedWorld`` path: a map
+    from each logical group tuple to the per-node occupancy of its
+    *placed* members (see ``reprice``), overriding the occupancy that
+    would be derived from the logical ranks — programs stay untouched,
+    only the communicator cost parameters move.
     """
     n = len(programs)
     done = [[False] * len(p) for p in programs]
@@ -395,6 +409,8 @@ def simulate(machine, programs, order=None):
     pernode_cache = {}
 
     def per_node(grp):
+        if pricing is not None:
+            return pricing[grp]
         r = pernode_cache.get(grp)
         if r is None:
             r = machine.members_per_node(grp)
@@ -786,6 +802,21 @@ def placement_search_set(g_pipe, gd, gr, gc, gpn):
     return out
 
 
+def reprice(machine, progs, perm):
+    """Mirror of ``CommWorld::price_with`` (the ``sim::PlacedWorld``
+    re-pricing): for every distinct logical group of an identity-built
+    program, the per-node occupancy of its *placed* members — the one
+    input ``ring_bw_lat`` needs.  Feeding this to ``simulate(...,
+    pricing=...)`` must equal the ``place_programs`` rebuild bitwise."""
+    out = {}
+    for ops in progs:
+        for op in ops:
+            grp = op[4]
+            if grp is not None and grp not in out:
+                out[grp] = machine.members_per_node([perm[r] for r in grp])
+    return out
+
+
 def place_programs(progs, perm):
     """Mirror of the placed CommWorld registration: group member lists
     are mapped logical->physical so ``members_per_node`` (and from it
@@ -813,13 +844,28 @@ def refine_placed(net, batch, world, machine, mode, k, depth, pipes, m,
     cands = pipelined_candidates(net, batch, world, machine, mode, pipes, m, k)
     if not any(p == 1 and mm.key() == base.key() for p, mm, _ in cands):
         cands.append((1, base, base_vol))
-    scored = []
+    jobs = []
     for p, mm, score in cands:
-        pls = (placements if placements is not None
-               else placement_search_set(p, mm.g_data, mm.g_r, mm.g_c, gpn))
+        if placements is not None:
+            pls = [pl for pl in placements
+                   if placement_admissible(pl, p, mm.g_data, mm.g_r, mm.g_c, gpn)]
+            if not pls:
+                # mirror of the Rust fallback: an explicit list that
+                # admits nothing on this shape must not drop the mesh
+                # from the ranking — score it under the default instead
+                pls = ["column-major"]
+        else:
+            pls = placement_search_set(p, mm.g_data, mm.g_r, mm.g_c, gpn)
+        jobs.append((p, mm, score, pls))
+    if not any(p == 1 and mm.key() == base.key() and "column-major" in pls
+               for p, mm, _, pls in jobs):
+        # the anchor rides the base mesh's existing job as one more
+        # placement (cands always contains the base — appended above)
+        next(pls for p, mm, _, pls in jobs
+             if p == 1 and mm.key() == base.key()).append("column-major")
+    scored = []
+    for p, mm, score, pls in jobs:
         for pl in pls:
-            if not placement_admissible(pl, p, mm.g_data, mm.g_r, mm.g_c, gpn):
-                continue
             if p <= 1:
                 progs = build_t3d(net, mm, batch, depth, machine, sharded=(mode == "sh"))
             else:
@@ -829,13 +875,6 @@ def refine_placed(net, batch, world, machine, mode, k, depth, pipes, m,
                 progs, placement_perm(pl, p, mm.g_data, mm.g_r, mm.g_c, gpn))
             mk, _ = simulate(machine, progs)
             scored.append((p, mm, pl, score, mk))
-    if not any(p == 1 and mm.key() == base.key() and pl == "column-major"
-               for p, mm, pl, _, mk in scored):
-        # an explicit placement list without column-major still anchors
-        # the never-slower guarantee on the §5 answer (as in Rust)
-        progs = build_t3d(net, base, batch, depth, machine, sharded=(mode == "sh"))
-        mk, _ = simulate(machine, progs)
-        scored.append((1, base, "column-major", base_vol, mk))
     scored.sort(key=lambda x: (x[4], x[3]))
     basemk = next(mk for p, mm, pl, _, mk in scored
                   if p == 1 and mm.key() == base.key() and pl == "column-major")
@@ -942,6 +981,36 @@ if __name__ == "__main__":
     assert wmk < basemk * 0.85, "blocked2 must beat column-major decisively"
     print("ok: blocked2 placement beats the column-major default on gpt80b/128 "
           "(as the Rust test pins)")
+
+    # Fast refinement (PR 5): the refined candidate count must equal
+    # shortlist x admissible placements — a shared-build bug that
+    # silently dropped placements (or a filtered-empty mesh) would
+    # shrink the search below this.
+    cands128 = pipelined_candidates(gpt80b, 1024, 128, polaris(), "rep", [1], 8, 2)
+    assert any(p == 1 and mm.key() == base.key() for p, mm, _ in cands128), \
+        "the Eq.-4 base must be in the shortlist here (no anchor row added)"
+    expected = sum(len(placement_search_set(p, mm.g_data, mm.g_r, mm.g_c, 4))
+                   for p, mm, _ in cands128)
+    assert len(scored) == expected, \
+        f"refined candidates {len(scored)} != shortlist x placements {expected}"
+    print(f"ok: refined candidate count = shortlist x admissible placements ({expected})")
+
+    # The re-pricing invariant (PR 5): simulating an identity-built
+    # program with per-group placed pricing equals the placed rebuild
+    # bitwise — plain and pipelined (Send/Recv) programs alike.
+    mesh94 = Mesh(2, 2, 4)
+    progs = build_t3d(gpt9b, mesh94, 64, 2, polaris())
+    for label in ("row-major", "blocked2", "blocked1"):
+        perm = placement_perm(label, 1, 2, 2, 4, 4)
+        a = simulate(polaris(), place_programs(progs, perm))
+        b = simulate(polaris(), progs, pricing=reprice(polaris(), progs, perm))
+        assert a == b, f"re-priced {label} drifted from the placed rebuild"
+    pprogs = build_t3d_pipeline(gpt9b, Mesh(2, 1, 4), 64, 2, 2, 8, polaris())
+    perm = placement_perm("depth-outer", 2, 2, 1, 4, 4)
+    a = simulate(polaris(), place_programs(pprogs, perm))
+    b = simulate(polaris(), pprogs, pricing=reprice(polaris(), pprogs, perm))
+    assert a == b, "pipelined re-priced placement drifted from the placed rebuild"
+    print("ok: re-priced placement simulation equals the placed rebuild (bitwise)")
 
     # The headline mesh: the same tiling wins the paper-scale
     # gpt80b/1024 configuration (16, 4, 16) by >20%.

@@ -306,7 +306,14 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         );
     }
     println!(
-        "  modelled tensor-parallel volume: {} per GPU/iter",
+        "  {}: {} per GPU/iter",
+        // a pipelined score is the bubble-adjusted Eq.-4 proxy (V/p x
+        // (m+p-1)/m), not the plain tensor-parallel volume
+        if best.g_pipe > 1 {
+            "bubble-adjusted volume score"
+        } else {
+            "modelled tensor-parallel volume"
+        },
         fmt_bytes(r.best().score * strategies::BYTES_PER_ELEM)
     );
     println!(
@@ -477,7 +484,15 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
             opt(
                 "placement",
                 "column-major",
-                "rank->node placement: column-major|row-major|depth-outer|blockedN",
+                "rank->node placement: column-major|row-major|depth-outer|blockedN \
+                 (volume-only runs; with --refine the recommendation's placement is benched)",
+            ),
+            opt(
+                "refine",
+                "0",
+                "also benchmark the refined planner sweep: re-rank the K best Eq.-4 \
+                 candidates by simulated makespan across placements and report \
+                 refine_s / sims_per_sec / builds_avoided (0 = volume-only plan)",
             ),
             opt("out", "BENCH_sim.json", "result file (schema documented in ROADMAP.md)"),
             opt(
@@ -511,7 +526,11 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     } else {
         planner::StateMode::Replicated
     };
+    let refine = a.usize("refine")?;
     let placement = placement_by_name(&a.str("placement")?)?;
+    if refine > 0 && placement != Placement::ColumnMajor {
+        bail!("--refine searches placements itself; drop --placement");
+    }
     let report = planner::PlanRequest::new(&net, &machine, gpus)
         .kind(kind)
         .batch(batch)
@@ -519,6 +538,7 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         .pipelines(&[pipeline])
         .microbatches(microbatches.max(1))
         .depth(depth)
+        .refine(refine)
         .run();
     // the benchmark pins the *requested* pipeline depth, not the search
     // winner (p = 1 is always in the report as the anchor)
@@ -529,17 +549,23 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         .ok_or_else(|| {
             anyhow!("G_pipe={pipeline} is not admissible for {gpus} GPUs on this model")
         })?;
-    let planned = picked.layout.mesh();
-    if !placement.admissible(
-        pipeline,
-        planned.g_data,
-        planned.g_r,
-        planned.g_c,
-        machine.gpus_per_node,
-    ) {
-        bail!("placement {} is not admissible for the planned mesh", placement.label());
-    }
-    let layout = picked.layout.clone().placement(placement.clone());
+    let layout = if refine > 0 {
+        // refined runs bench the recommendation, placement included
+        picked.layout.clone()
+    } else {
+        let planned = picked.layout.mesh();
+        if !placement.admissible(
+            pipeline,
+            planned.g_data,
+            planned.g_r,
+            planned.g_c,
+            machine.gpus_per_node,
+        ) {
+            bail!("placement {} is not admissible for the planned mesh", placement.label());
+        }
+        picked.layout.clone().placement(placement.clone())
+    };
+    let placement = layout.placement.clone();
     let mesh = layout.mesh();
     let bubble = comm_model::pipeline_bubble_fraction(pipeline, microbatches);
 
@@ -556,8 +582,9 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     let total_s = build_s + sim_s;
     let ops_per_sec = ops as f64 / sim_s.max(1e-12);
     let u = strategies::mfu(&net, batch, layout.world(), r.makespan, &machine);
+    let sims_per_sec = report.sims as f64 / report.refine_s.max(1e-12);
 
-    let j = Json::obj(vec![
+    let mut fields = vec![
         ("model", Json::str(&model_name)),
         ("gpus", Json::num(gpus as f64)),
         ("machine", Json::str(&machine.name)),
@@ -580,7 +607,20 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         ("makespan_s", Json::num(r.makespan)),
         ("overlap_fraction", Json::num(r.overlap_fraction())),
         ("mfu", Json::num(u)),
-    ]);
+    ];
+    if refine > 0 {
+        // the planner-path metrics the CI refine budget gates (schema in
+        // ROADMAP.md): candidates simulated, programs built (one per
+        // shortlisted (G_pipe, mesh) — the rest were re-priced), sweep
+        // wall-clock and throughput
+        fields.push(("refine", Json::num(refine as f64)));
+        fields.push(("refine_s", Json::num(report.refine_s)));
+        fields.push(("refine_sims", Json::num(report.sims as f64)));
+        fields.push(("refine_builds", Json::num(report.builds as f64)));
+        fields.push(("builds_avoided", Json::num((report.sims - report.builds) as f64)));
+        fields.push(("sims_per_sec", Json::num(sims_per_sec)));
+    }
+    let j = Json::obj(fields);
     let out = a.str("out")?;
     std::fs::write(&out, format!("{j}\n"))?;
     println!(
@@ -604,6 +644,17 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         ops as f64 / 1e6,
         if classes == 1 { "" } else { "es" }
     );
+    if refine > 0 {
+        println!(
+            "  refine sweep:  {:.3} s   ({} candidates simulated from {} program builds, \
+             {} rebuilds avoided, {:.2} sims/s)",
+            report.refine_s,
+            report.sims,
+            report.builds,
+            report.sims - report.builds,
+            sims_per_sec
+        );
+    }
     println!("  simulate:      {sim_s:.3} s   ({:.2} M ops/s)", ops_per_sec / 1e6);
     println!(
         "  makespan {:.3} s/iter   overlap {:.1}%   MFU {:.1}%",
@@ -613,10 +664,13 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     );
     println!("  results -> {out}");
     let budget = a.f64("budget-s")?;
-    if budget > 0.0 && total_s > budget {
+    let gated = report.refine_s + total_s;
+    if budget > 0.0 && gated > budget {
         bail!(
-            "bench-sim wall clock {total_s:.1}s exceeded the {budget:.0}s budget \
-             (build {build_s:.1}s + sim {sim_s:.1}s) — hot-loop regression?"
+            "bench-sim wall clock {gated:.1}s exceeded the {budget:.0}s budget \
+             (refine {:.1}s + build {build_s:.1}s + sim {sim_s:.1}s) — hot-loop or \
+             planner-path regression?",
+            report.refine_s
         );
     }
     Ok(())

@@ -36,12 +36,24 @@
 //! The pipeline-free, column-major Eq.-4 winner is always in the
 //! candidate set, so the refined recommendation is never slower than
 //! the paper's §5 answer.
+//!
+//! Refinement is cheap at paper scale: each shortlisted `(G_pipe,
+//! mesh)` builds its O(world × ops) program **once** and every placement
+//! re-prices only the O(#groups) communicator parameters
+//! ([`crate::sim::PlacedWorld`] — bit-for-bit the full rebuild), the
+//! independent simulations fan out across cores
+//! ([`PlanRequest::threads`]), and the event-loop scratch arena is
+//! reused across the sweep.  [`PlanReport::sims`] / [`PlanReport::builds`]
+//! / [`PlanReport::refine_s`] report the sweep's cost (surfaced by
+//! `bench-sim --refine` into `BENCH_sim.json`, budget-gated in CI).
 
 use crate::comm_model;
 use crate::mesh::{divisors, Mesh};
 use crate::models::NetworkDesc;
-use crate::sim::Machine;
+use crate::sim::{self, Machine};
 use crate::strategies;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 pub use crate::spec::{Layout, Placement, StateMode};
 
@@ -100,6 +112,16 @@ pub struct PlanRequest<'a> {
     placements: Option<Vec<Placement>>,
     refine: usize,
     depth: usize,
+    threads: usize,
+}
+
+/// One unit of the refinement sweep: a shortlisted `(G_pipe, mesh)` whose
+/// program is built once and re-priced under each of its placements.
+struct RefineJob {
+    pipe: usize,
+    mesh: Mesh,
+    score: f64,
+    placements: Vec<Placement>,
 }
 
 impl<'a> PlanRequest<'a> {
@@ -120,6 +142,7 @@ impl<'a> PlanRequest<'a> {
             placements: None,
             refine: 0,
             depth: 2,
+            threads: 0,
         }
     }
 
@@ -159,7 +182,9 @@ impl<'a> PlanRequest<'a> {
     }
 
     /// Explicit placement search set (inadmissible entries are skipped
-    /// per candidate shape).  Default: the named
+    /// per candidate shape; a shape for which *every* entry is
+    /// inadmissible falls back to [`Placement::ColumnMajor`] so each
+    /// shortlisted mesh is always ranked).  Default: the named
     /// [`Placement::search_set`] of each shortlisted shape.  Placement
     /// only affects timings, so it is searched by refinement; without
     /// `refine` every candidate reports the column-major default.
@@ -179,6 +204,16 @@ impl<'a> PlanRequest<'a> {
     /// §4.2 overdecomposition degree used by refinement simulations.
     pub fn depth(mut self, depth: usize) -> Self {
         self.depth = depth.max(1);
+        self
+    }
+
+    /// Worker threads for the refinement sweep (0 = one per available
+    /// core, the default).  The `(mesh, placement)` simulations are
+    /// independent and merged in a fixed order, so the ranking is
+    /// identical at any thread count — pinned by
+    /// `rust/tests/sim_golden.rs`.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -281,6 +316,9 @@ impl<'a> PlanRequest<'a> {
 
         let mut candidates: Vec<Candidate>;
         let baseline: Candidate;
+        let mut refine_s = 0.0;
+        let mut sims = 0usize;
+        let mut builds = 0usize;
         if self.refine == 0 {
             // volume ranking: the §5 / bubble-adjusted pick first (min
             // score among the per-pipe rule winners), then every other
@@ -314,43 +352,57 @@ impl<'a> PlanRequest<'a> {
                 makespan_s: None,
             };
         } else {
-            // ---- refinement: simulate shortlist x placements ---------
+            // ---- refinement: build once per (G_pipe, mesh), re-price and
+            // simulate per placement, fanned across cores ---------------
             let gpn = self.machine.gpus_per_node;
-            candidates = Vec::new();
+            let t0 = std::time::Instant::now();
+            let mut jobs: Vec<RefineJob> = Vec::with_capacity(shortlist.len() + 1);
             for &(p, mesh, score) in &shortlist {
-                let placements = match &self.placements {
+                let mut placements = match &self.placements {
                     Some(ps) => ps
                         .iter()
                         .filter(|pl| pl.admissible(p, mesh.g_data, mesh.g_r, mesh.g_c, gpn))
                         .cloned()
-                        .collect(),
+                        .collect::<Vec<_>>(),
                     None => Placement::search_set(p, mesh.g_data, mesh.g_r, mesh.g_c, gpn),
                 };
-                for pl in placements {
-                    let layout = self.layout(p, &mesh, pl);
-                    let set = strategies::build(&layout, self.net, self.batch, self.machine);
-                    let r = crate::sim::simulate(self.machine, &set);
-                    candidates.push(Candidate { layout, score, makespan_s: Some(r.makespan) });
+                if placements.is_empty() {
+                    // an explicit placement list that admits nothing on
+                    // this shape must not silently drop the mesh from the
+                    // ranking: score it under the always-admissible default
+                    placements.push(Placement::ColumnMajor);
+                }
+                jobs.push(RefineJob { pipe: p, mesh, score, placements });
+            }
+            if !jobs.iter().any(|j| {
+                j.pipe == 1 && j.mesh == base_mesh && j.placements.contains(&Placement::ColumnMajor)
+            }) {
+                // an explicit placement list without ColumnMajor still
+                // anchors the never-slower guarantee on the §5 answer —
+                // as one more re-priced placement of the base mesh's
+                // existing job when it has one (no second build), or as
+                // its own job when the shortlist excluded the base mesh
+                if let Some(j) = jobs.iter_mut().find(|j| j.pipe == 1 && j.mesh == base_mesh) {
+                    j.placements.push(Placement::ColumnMajor);
+                } else {
+                    jobs.push(RefineJob {
+                        pipe: 1,
+                        mesh: base_mesh,
+                        score: base_score,
+                        placements: vec![Placement::ColumnMajor],
+                    });
                 }
             }
+            builds = jobs.len();
+            sims = jobs.iter().map(|j| j.placements.len()).sum();
+            candidates = self.run_refine_jobs(&jobs).into_iter().flatten().collect();
+            refine_s = t0.elapsed().as_secs_f64();
             let anchor_mesh = Mesh::new(base_mesh.g_data, base_mesh.g_r, base_mesh.g_c, self.depth);
             let is_anchor = |c: &Candidate| {
                 c.layout.g_pipe == 1
                     && c.layout.mesh() == anchor_mesh
                     && c.layout.placement == Placement::ColumnMajor
             };
-            if !candidates.iter().any(is_anchor) {
-                // an explicit placement list without ColumnMajor still
-                // anchors the never-slower guarantee on the §5 answer
-                let layout = self.layout(1, &base_mesh, Placement::ColumnMajor);
-                let set = strategies::build(&layout, self.net, self.batch, self.machine);
-                let r = crate::sim::simulate(self.machine, &set);
-                candidates.push(Candidate {
-                    layout,
-                    score: base_score,
-                    makespan_s: Some(r.makespan),
-                });
-            }
             // makespan-total order; score, then the column-major-first
             // insertion order, break ties deterministically
             candidates.sort_by(|a, b| {
@@ -381,9 +433,113 @@ impl<'a> PlanRequest<'a> {
             gc_closed_form,
             state_bytes,
             mem_fraction: state_bytes / self.machine.mem_bytes,
+            refine_s,
+            sims,
+            builds,
             baseline,
             candidates,
         }
+    }
+
+    /// Simulate one shortlisted `(G_pipe, mesh)` under each of its
+    /// placements: one program build, then one O(#groups) re-pricing and
+    /// one scratch-reusing simulation per placement.  Bit-for-bit the
+    /// per-placement full rebuild (pinned by `rust/tests/sim_golden.rs`).
+    fn run_refine_job(&self, job: &RefineJob, scratch: &mut sim::SimScratch) -> Vec<Candidate> {
+        let gpn = self.machine.gpus_per_node;
+        let base_layout = self.layout(job.pipe, &job.mesh, Placement::ColumnMajor);
+        let set = strategies::build(&base_layout, self.net, self.batch, self.machine);
+        job.placements
+            .iter()
+            .map(|pl| {
+                let perm = pl.perm(job.pipe, job.mesh.g_data, job.mesh.g_r, job.mesh.g_c, gpn);
+                let r = sim::PlacedWorld::new(&set, perm.as_deref()).simulate(scratch);
+                Candidate {
+                    layout: self.layout(job.pipe, &job.mesh, pl.clone()),
+                    score: job.score,
+                    makespan_s: Some(r.makespan),
+                }
+            })
+            .collect()
+    }
+
+    /// Fan the sweep across cores (`std::thread::scope`, no new deps):
+    /// first the per-job program builds, then every independent
+    /// `(mesh, placement)` simulation individually — so a 2-job sweep
+    /// with 8 placements still fills 8 cores.  Results are merged in
+    /// `(job, placement)` order, identical to the serial sweep, so the
+    /// ranking is deterministic at any thread count.
+    fn run_refine_jobs(&self, jobs: &[RefineJob]) -> Vec<Vec<Candidate>> {
+        let total_sims: usize = jobs.iter().map(|j| j.placements.len()).sum();
+        let requested = match self.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
+        let threads = requested.min(total_sims).max(1);
+        if threads == 1 {
+            let mut scratch = sim::SimScratch::default();
+            return jobs.iter().map(|j| self.run_refine_job(j, &mut scratch)).collect();
+        }
+        let gpn = self.machine.gpus_per_node;
+        // phase 1: one identity-placement build per job, across cores
+        let next = AtomicUsize::new(0);
+        let set_slots: Vec<Mutex<Option<crate::sim::ProgramSet>>> =
+            jobs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..threads.min(jobs.len()) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let job = &jobs[i];
+                    let layout = self.layout(job.pipe, &job.mesh, Placement::ColumnMajor);
+                    let set = strategies::build(&layout, self.net, self.batch, self.machine);
+                    *set_slots[i].lock().unwrap() = Some(set);
+                });
+            }
+        });
+        let sets: Vec<crate::sim::ProgramSet> =
+            set_slots.into_iter().map(|m| m.into_inner().unwrap().expect("built above")).collect();
+        // phase 2: fan the independent (mesh, placement) simulations
+        let items: Vec<(usize, usize)> = jobs
+            .iter()
+            .enumerate()
+            .flat_map(|(i, j)| (0..j.placements.len()).map(move |k| (i, k)))
+            .collect();
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Candidate>>> = items.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    let mut scratch = sim::SimScratch::default();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        let (ji, pi) = items[i];
+                        let job = &jobs[ji];
+                        let pl = &job.placements[pi];
+                        let perm =
+                            pl.perm(job.pipe, job.mesh.g_data, job.mesh.g_r, job.mesh.g_c, gpn);
+                        let placed = sim::PlacedWorld::new(&sets[ji], perm.as_deref());
+                        let r = placed.simulate(&mut scratch);
+                        *slots[i].lock().unwrap() = Some(Candidate {
+                            layout: self.layout(job.pipe, &job.mesh, pl.clone()),
+                            score: job.score,
+                            makespan_s: Some(r.makespan),
+                        });
+                    }
+                });
+            }
+        });
+        let mut out: Vec<Vec<Candidate>> =
+            jobs.iter().map(|j| Vec::with_capacity(j.placements.len())).collect();
+        for (&(ji, _), slot) in items.iter().zip(slots) {
+            out[ji].push(slot.into_inner().unwrap().expect("simulated above"));
+        }
+        out
     }
 }
 
@@ -406,6 +562,15 @@ pub struct PlanReport {
     /// Fraction of GPU memory that state consumes (> the budget only on
     /// degenerate worlds where nothing fits).
     pub mem_fraction: f64,
+    /// Wall-clock seconds the refinement sweep spent (0 when volume-only).
+    pub refine_s: f64,
+    /// Candidates the refinement simulated (shortlist × placements; 0
+    /// when volume-only).
+    pub sims: usize,
+    /// `ProgramSet` builds the sweep performed — one per distinct
+    /// `(G_pipe, mesh)`, shared by that shape's placements, so
+    /// `sims - builds` programs were never rebuilt.
+    pub builds: usize,
     /// The pipeline-free, column-major Eq.-4 recommendation (the §5
     /// answer) — always present, and always in `candidates` when
     /// refined, so `best()` is never slower than it.
@@ -776,6 +941,66 @@ mod tests {
             .placements(&[Placement::ColumnMajor])
             .run();
         assert!(r.candidates.iter().all(|c| c.layout.placement == Placement::ColumnMajor));
+    }
+
+    #[test]
+    fn empty_filtered_placement_list_falls_back_to_column_major() {
+        // Satellite bugfix: an explicit --placements list whose entries
+        // are all inadmissible for a shortlisted mesh used to drop that
+        // mesh from the ranking silently.  gpt9b/16 Polaris replicated,
+        // refine(6): the shortlist holds all six feasible meshes down to
+        // (1,1,16); blocked2 needs g_r and g_c both even, so (2,1,8) and
+        // (1,1,16) filter to empty — they must be ranked under the
+        // column-major fallback, not vanish.
+        let net = gpt::gpt_9b().network();
+        let machine = Machine::polaris();
+        let r = PlanRequest::new(&net, &machine, 16)
+            .batch(64)
+            .refine(6)
+            .placements(&[Placement::NodeBlocked { rows: 2 }])
+            .run();
+        let has = |gd: usize, gr: usize, gc: usize, pl: &Placement| {
+            r.candidates.iter().any(|c| {
+                (c.layout.g_data, c.layout.g_r, c.layout.g_c) == (gd, gr, gc)
+                    && c.layout.placement == *pl
+            })
+        };
+        assert!(has(2, 1, 8, &Placement::ColumnMajor), "{:?}", r.candidates);
+        assert!(has(1, 1, 16, &Placement::ColumnMajor), "{:?}", r.candidates);
+        // admissible meshes keep the requested placement, and the §5
+        // anchor is still ranked: 6 shortlisted meshes + the CM anchor
+        assert!(has(2, 2, 4, &Placement::NodeBlocked { rows: 2 }));
+        assert!(has(2, 2, 4, &Placement::ColumnMajor), "anchor candidate");
+        assert_eq!(r.candidates.len(), 7, "{:?}", r.candidates);
+        assert!(r.makespan_s().unwrap() <= r.baseline_makespan_s().unwrap());
+        // one build per distinct mesh — the CM anchor rides the base
+        // mesh's existing build as one more re-priced placement
+        assert_eq!(r.builds, 6);
+        assert_eq!(r.sims, 7);
+    }
+
+    #[test]
+    fn refinement_shares_one_build_per_mesh_across_placements() {
+        // Acceptance: the placement sweep re-prices instead of
+        // rebuilding — on gpt80b/128 (refine 2, auto placements) each of
+        // the two shortlisted meshes is built once and simulated under
+        // its four named placements, so >= 4x fewer builds than sims.
+        let net = gpt::gpt_80b().network();
+        let machine = Machine::polaris();
+        let r = PlanRequest::new(&net, &machine, 128).batch(1024).refine(2).run();
+        assert_eq!(r.builds, 2, "one build per shortlisted mesh");
+        assert_eq!(r.sims, r.candidates.len());
+        assert!(
+            r.sims >= 4 * r.builds,
+            "placement sweep must avoid rebuilds: {} sims vs {} builds",
+            r.sims,
+            r.builds
+        );
+        assert!(r.refine_s > 0.0);
+        // volume-only requests report a zero-cost sweep
+        let v = PlanRequest::new(&net, &machine, 128).batch(1024).run();
+        assert_eq!((v.sims, v.builds), (0, 0));
+        assert_eq!(v.refine_s, 0.0);
     }
 
     #[test]

@@ -108,6 +108,32 @@ impl CommWorld {
         &self.groups[id.0 as usize]
     }
 
+    /// Re-derive every group's `(bw, lat)` under an explicit
+    /// logical→physical placement, without re-registering anything: the
+    /// same `members_per_node` → `ring_bw_lat` computation
+    /// [`CommWorld::register`] runs, evaluated once per interned group —
+    /// O(#groups × group size) instead of a full O(world × ops) program
+    /// rebuild.  `None` returns the stored parameters verbatim, so a
+    /// registry priced this way is bit-for-bit the one `register` would
+    /// have produced under [`CommWorld::with_placement`].
+    ///
+    /// Only meaningful on an identity-placement registry (the caller's
+    /// precondition — see [`crate::sim::PlacedWorld`]): re-pricing a
+    /// registry that was itself registered under a placement would
+    /// compose the two permutations.
+    pub fn price_with(&self, machine: &Machine, perm: Option<&[usize]>) -> Vec<(f64, f64)> {
+        self.groups
+            .iter()
+            .map(|g| match perm {
+                None => (g.bw, g.lat),
+                Some(p) => {
+                    let placed: Vec<usize> = g.members.iter().map(|&r| p[r]).collect();
+                    machine.ring_bw_lat(g.size, machine.members_per_node(&placed))
+                }
+            })
+            .collect()
+    }
+
     /// Number of distinct communicators registered.
     pub fn len(&self) -> usize {
         self.groups.len()

@@ -221,6 +221,10 @@ pub struct Op {
 pub struct Binding {
     pub tag: u64,
     pub group: GroupId,
+    /// Dense rendezvous index: every distinct `tag` in the program set is
+    /// assigned one slot at build time, so the event loop tracks pending
+    /// collectives in a flat array instead of a `HashMap<u64, _>`.
+    pub rv: u32,
 }
 
 /// The op templates of one mesh-coordinate class.
@@ -245,6 +249,10 @@ pub struct ProgramSet {
     pub rank_class: Vec<u32>,
     /// Per-rank binding tables, indexed by collective slot.
     pub bindings: Vec<Vec<Binding>>,
+    /// Number of distinct rendezvous tags across the whole set — the
+    /// length of the event loop's dense pending-collective table (see
+    /// [`Binding::rv`]).
+    pub n_rendezvous: usize,
     /// The machine whose topology the [`CommWorld`] ring parameters were
     /// precomputed for; [`simulate`] refuses to run the set on any other
     /// machine — name *and* parameters — because the collectives would
@@ -296,6 +304,9 @@ impl ProgramSet {
 pub struct ProgramSetBuilder {
     set: ProgramSet,
     class_index: HashMap<u64, u32>,
+    /// Tag → dense rendezvous id (build-time only; the event loop never
+    /// hashes tags — see [`Binding::rv`]).
+    rv_index: HashMap<u64, u32>,
     cur_class: u32,
     cur_building: bool,
     cur_op: u32,
@@ -319,9 +330,11 @@ impl ProgramSetBuilder {
                 classes: Vec::new(),
                 rank_class: Vec::new(),
                 bindings: Vec::new(),
+                n_rendezvous: 0,
                 machine: machine.clone(),
             },
             class_index: HashMap::new(),
+            rv_index: HashMap::new(),
             cur_class: 0,
             cur_building: false,
             cur_op: 0,
@@ -453,7 +466,10 @@ impl ProgramSetBuilder {
         } else {
             self.check_replay(&kind, stream, &deps);
         }
-        self.set.bindings.last_mut().unwrap().push(Binding { tag, group });
+        let n_rv = self.rv_index.len() as u32;
+        let rv = *self.rv_index.entry(tag).or_insert(n_rv);
+        self.set.n_rendezvous = self.rv_index.len();
+        self.set.bindings.last_mut().unwrap().push(Binding { tag, group, rv });
         let i = self.cur_op;
         self.cur_op += 1;
         i
@@ -611,14 +627,49 @@ impl fmt::Display for StallError {
 
 impl std::error::Error for StallError {}
 
-struct CollectiveState {
-    arrived: usize,
-    group_size: usize,
+/// Pending state of one rendezvous slot (dense-indexed by
+/// [`Binding::rv`]); a completed rendezvous resets its slot, which is
+/// exactly the `HashMap::remove` + re-insert semantics the pre-refactor
+/// loop had for repeated tags.
+#[derive(Debug, Default)]
+struct RvState {
+    arrived: u32,
+    group_size: u32,
     ready_time: f64,
     members: Vec<(u32, u32)>,
 }
 
-#[derive(PartialEq)]
+/// Reusable event-loop storage.  [`simulate`] allocates one per call;
+/// sweep callers ([`crate::sim::PlacedWorld::simulate`], the planner's
+/// refinement) keep one across runs so the O(total ops) done/time tables,
+/// the dense rendezvous array, the per-stream cursors and the event heap
+/// are allocated once per sweep instead of once per candidate.  All state
+/// is reset at the start of every simulation, so reuse never leaks
+/// results across runs (a stalled run may leave slots dirty — the reset
+/// handles that too).
+///
+/// Memory tradeoff vs the old tag-keyed `HashMap`: the dense rendezvous
+/// table is O(distinct tags in the program) rather than O(max in-flight
+/// rendezvous), and it is retained for the scratch's lifetime — tens of
+/// MB on a pipelined paper-scale set (the microbatch is folded into
+/// every tag).  That is the price of a hash-free hot loop; if tag
+/// cardinality grows (e.g. interleaved schedules), revisit with a
+/// coarser rendezvous keying.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// Per-GPU offset into the flattened `done`/`done_time` tables.
+    op_base: Vec<usize>,
+    done: Vec<bool>,
+    done_time: Vec<f64>,
+    next: Vec<[usize; 4]>,
+    stream_free: Vec<[f64; 4]>,
+    rendezvous: Vec<RvState>,
+    heap: BinaryHeap<Reverse<Event>>,
+    worklist: Vec<usize>,
+    queued: Vec<bool>,
+}
+
+#[derive(Debug, PartialEq)]
 struct Event {
     time: f64,
     seq: u64,
@@ -656,13 +707,26 @@ pub fn simulate(machine: &Machine, set: &ProgramSet) -> SimResult {
 /// instead of panicking — for programs that may deadlock by construction
 /// (an unmatched `Recv`, a dependency cycle).
 pub fn try_simulate(machine: &Machine, set: &ProgramSet) -> Result<SimResult, StallError> {
-    let order: Vec<usize> = (0..set.world()).collect();
-    simulate_impl(machine, set, false, &order)
+    simulate_impl(machine, set, None, false, None, &mut SimScratch::default())
 }
 
 pub fn simulate_with_trace(machine: &Machine, set: &ProgramSet, keep_spans: bool) -> SimResult {
-    let order: Vec<usize> = (0..set.world()).collect();
-    match simulate_impl(machine, set, keep_spans, &order) {
+    match simulate_impl(machine, set, None, keep_spans, None, &mut SimScratch::default()) {
+        Ok(r) => r,
+        Err(e) => panic!("deadlock: {e}"),
+    }
+}
+
+/// [`simulate`] with re-priced communicator parameters and a caller-owned
+/// [`SimScratch`] — the sweep entry point [`crate::sim::PlacedWorld`]
+/// uses.  `pricing[g]` is the `(bw, lat)` to time [`GroupId`] `g` with,
+/// overriding the parameters interned at registration.
+pub(crate) fn simulate_repriced(
+    set: &ProgramSet,
+    pricing: &[(f64, f64)],
+    scratch: &mut SimScratch,
+) -> SimResult {
+    match simulate_impl(&set.machine, set, Some(pricing), false, None, scratch) {
         Ok(r) => r,
         Err(e) => panic!("deadlock: {e}"),
     }
@@ -687,7 +751,7 @@ pub fn simulate_permuted(machine: &Machine, set: &ProgramSet, order: &[usize]) -
         assert!(g < seen.len() && !seen[g], "order must be a permutation of 0..world");
         seen[g] = true;
     }
-    match simulate_impl(machine, set, false, order) {
+    match simulate_impl(machine, set, None, false, Some(order), &mut SimScratch::default()) {
         Ok(r) => r,
         Err(e) => panic!("deadlock: {e}"),
     }
@@ -696,8 +760,10 @@ pub fn simulate_permuted(machine: &Machine, set: &ProgramSet, order: &[usize]) -
 fn simulate_impl(
     machine: &Machine,
     set: &ProgramSet,
+    pricing: Option<&[(f64, f64)]>,
     keep_spans: bool,
-    initial_order: &[usize],
+    initial_order: Option<&[usize]>,
+    scratch: &mut SimScratch,
 ) -> Result<SimResult, StallError> {
     assert_eq!(
         *machine, set.machine,
@@ -705,20 +771,52 @@ fn simulate_impl(
          parameters do not transfer to {:?} — rebuild the programs for that machine",
         set.machine.name, machine.name
     );
+    if let Some(p) = pricing {
+        assert_eq!(p.len(), set.comm.len(), "pricing table must cover every interned group");
+    }
     let n = set.world();
     // per-rank class resolution, once
     let classes: Vec<&ClassProgram> = (0..n).map(|g| set.class_of(g)).collect();
-    let mut done: Vec<Vec<bool>> = classes.iter().map(|c| vec![false; c.ops.len()]).collect();
-    let mut done_time: Vec<Vec<f64>> = classes.iter().map(|c| vec![0.0; c.ops.len()]).collect();
+    // reset the scratch arena (disjoint &mut borrows per field)
+    let SimScratch {
+        op_base,
+        done,
+        done_time,
+        next,
+        stream_free,
+        rendezvous,
+        heap,
+        worklist,
+        queued,
+    } = scratch;
+    op_base.clear();
+    let mut total_ops = 0usize;
+    for c in &classes {
+        op_base.push(total_ops);
+        total_ops += c.ops.len();
+    }
+    // done / done_time flattened over (gpu, op) — one contiguous table
+    // instead of a Vec-of-Vecs, reused across a sweep
+    done.clear();
+    done.resize(total_ops, false);
+    done_time.clear();
+    done_time.resize(total_ops, 0.0);
     // next op position and free time per (gpu, stream): flat arrays, no
     // hashing in the hot loop
-    let mut next: Vec<[usize; 4]> = vec![[0; 4]; n];
-    let mut stream_free: Vec<[f64; 4]> = vec![[0.0f64; 4]; n];
-
-    let mut collectives: HashMap<u64, CollectiveState> = HashMap::new();
-    // recycled member lists: completing a collective returns its Vec here
-    let mut member_pool: Vec<Vec<(u32, u32)>> = Vec::new();
-    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    next.clear();
+    next.resize(n, [0usize; 4]);
+    stream_free.clear();
+    stream_free.resize(n, [0.0f64; 4]);
+    // dense pending-rendezvous table (see Binding::rv): no tag hashing
+    if rendezvous.len() < set.n_rendezvous {
+        rendezvous.resize_with(set.n_rendezvous, RvState::default);
+    }
+    for st in rendezvous.iter_mut().take(set.n_rendezvous) {
+        st.arrived = 0;
+        st.ready_time = 0.0;
+        st.members.clear();
+    }
+    heap.clear();
     let mut seq = 0u64;
     let mut spans = Vec::new();
     let mut compute_busy = vec![0.0; n];
@@ -732,13 +830,19 @@ fn simulate_impl(
     // only when one of its ops completes (dependencies are always
     // same-GPU; collective completions enqueue a done event for every
     // member).
-    let mut worklist: Vec<usize> = initial_order.to_vec();
-    let mut queued: Vec<bool> = vec![true; n];
+    worklist.clear();
+    match initial_order {
+        Some(order) => worklist.extend_from_slice(order),
+        None => worklist.extend(0..n),
+    }
+    queued.clear();
+    queued.resize(n, true);
 
     macro_rules! try_issue_gpu {
         ($gpu:expr) => {{
             let gpu = $gpu;
             let cls = classes[gpu];
+            let base = op_base[gpu];
             let mut progressed = true;
             while progressed {
                 progressed = false;
@@ -755,11 +859,11 @@ fn simulate_impl(
                     let mut ready_at = stream_free[gpu][si].max(now);
                     let mut ok = true;
                     for &di in &op.deps {
-                        if !done[gpu][di as usize] {
+                        if !done[base + di as usize] {
                             ok = false;
                             break;
                         }
-                        ready_at = ready_at.max(done_time[gpu][di as usize]);
+                        ready_at = ready_at.max(done_time[base + di as usize]);
                     }
                     if !ok {
                         continue;
@@ -796,22 +900,25 @@ fn simulate_impl(
                                 kind.collective().expect("non-compute op must be a collective");
                             let b = set.bindings[gpu][slot as usize];
                             let info = set.comm.group(b.group);
-                            let st = collectives.entry(b.tag).or_insert_with(|| {
-                                CollectiveState {
-                                    arrived: 0,
-                                    group_size: info.size,
-                                    ready_time: 0.0,
-                                    members: member_pool.pop().unwrap_or_default(),
-                                }
-                            });
+                            // dense rendezvous slot: pure array indexing,
+                            // no tag hashing in the hot loop
+                            let st = &mut rendezvous[b.rv as usize];
+                            if st.arrived == 0 {
+                                // first arrival opens the rendezvous,
+                                // exactly like the former or_insert
+                                st.group_size = info.size as u32;
+                            }
                             st.arrived += 1;
                             st.ready_time = st.ready_time.max(ready_at);
                             st.members.push((gpu as u32, op_i));
                             next[gpu][si] += 1;
                             comm_bytes[gpu] += kind.wire_bytes(info.size);
                             if st.arrived == st.group_size {
-                                let mut st = collectives.remove(&b.tag).unwrap();
-                                let dur = kind.collective_time_on(info.size, info.bw, info.lat);
+                                let (bw, lat) = match pricing {
+                                    Some(p) => p[b.group.0 as usize],
+                                    None => (info.bw, info.lat),
+                                };
+                                let dur = kind.collective_time_on(info.size, bw, lat);
                                 let start = st.ready_time;
                                 let end = start + dur;
                                 for &(mg, mi) in &st.members {
@@ -837,8 +944,11 @@ fn simulate_impl(
                                     seq += 1;
                                     heap.push(Reverse(Event { time: end, seq, gpu: mg, op: mi }));
                                 }
+                                // completed slot resets in place (keeps its
+                                // member-list capacity for the next reuse)
+                                st.arrived = 0;
+                                st.ready_time = 0.0;
                                 st.members.clear();
-                                member_pool.push(st.members);
                             }
                             progressed = true;
                         }
@@ -855,8 +965,8 @@ fn simulate_impl(
     while let Some(Reverse(ev)) = heap.pop() {
         now = ev.time;
         let (g, i) = (ev.gpu as usize, ev.op as usize);
-        done[g][i] = true;
-        done_time[g][i] = now;
+        done[op_base[g] + i] = true;
+        done_time[op_base[g] + i] = now;
         if !queued[g] {
             queued[g] = true;
             worklist.push(g);
@@ -871,9 +981,9 @@ fn simulate_impl(
     // returning a truncated makespan
     let mut stuck_ops = 0usize;
     let mut first: Option<(usize, usize)> = None;
-    for (g, d) in done.iter().enumerate() {
-        for (i, ok) in d.iter().enumerate() {
-            if !*ok {
+    for g in 0..n {
+        for i in 0..classes[g].ops.len() {
+            if !done[op_base[g] + i] {
                 stuck_ops += 1;
                 if first.is_none() {
                     first = Some((g, i));
@@ -885,19 +995,20 @@ fn simulate_impl(
         // why: the op joined a rendezvous that never filled, it waits on
         // an unfinished dependency, or its stream head never cleared
         let mut detail = String::new();
-        for (tag, st) in &collectives {
+        let op = &classes[g].ops[i];
+        if let Some((_bytes, slot)) = op.kind.collective() {
+            let b = set.bindings[g][slot as usize];
+            let st = &rendezvous[b.rv as usize];
             if st.members.iter().any(|&(mg, mi)| mg as usize == g && mi as usize == i) {
                 detail = format!(
-                    "it joined rendezvous tag {tag} but only {}/{} member(s) arrived \
+                    "it joined rendezvous tag {} but only {}/{} member(s) arrived \
                      (unmatched Send/Recv, or a peer blocked upstream)",
-                    st.arrived, st.group_size
+                    b.tag, st.arrived, st.group_size
                 );
-                break;
             }
         }
         if detail.is_empty() {
-            let op = &classes[g].ops[i];
-            if let Some(&d) = op.deps.iter().find(|&&d| !done[g][d as usize]) {
+            if let Some(&d) = op.deps.iter().find(|&&d| !done[op_base[g] + d as usize]) {
                 detail = format!(
                     "it waits on unfinished dependency op {d} ({}) — dependency cycle?",
                     set.op_name(g, d as usize)
@@ -916,10 +1027,7 @@ fn simulate_impl(
         });
     }
 
-    let makespan = done_time
-        .iter()
-        .flat_map(|v| v.iter().copied())
-        .fold(0.0f64, f64::max);
+    let makespan = done_time.iter().copied().fold(0.0f64, f64::max);
     // exposed wait: makespan minus compute busy (per GPU) — the time the
     // GPU was not computing.  With full overlap this approaches the pure
     // compute bound.
@@ -1148,6 +1256,7 @@ mod tests {
         assert_eq!(set.total_ops(), 16);
         assert_eq!(set.names.len(), 2, "names are interned once per class");
         assert_eq!(set.comm.len(), 4, "four distinct pair communicators");
+        assert_eq!(set.n_rendezvous, 4, "one dense rendezvous slot per distinct tag");
         for rank in 0..8 {
             assert_eq!(set.bindings[rank].len(), 1);
         }

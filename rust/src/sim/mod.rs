@@ -5,7 +5,9 @@
 //! NVLink/Slingshot bandwidths, GEMM-efficiency curve), [`comm_world`]
 //! interns every communicator group once with its ring cost parameters
 //! precomputed, [`engine`] executes deduplicated per-GPU op programs with
-//! CUDA-stream semantics and rendezvous collectives, and [`trace`]
+//! CUDA-stream semantics and rendezvous collectives, [`placed`] re-prices
+//! one built program under many rank→node placements (the planner's
+//! build-once refinement sweep), and [`trace`]
 //! renders Chrome-trace JSON + the Fig.-4 ASCII timeline.  Strategies
 //! (rust/src/strategies/) compile a (network, mesh, machine) triple into
 //! the [`engine::ProgramSet`] this module runs.
@@ -17,12 +19,14 @@
 pub mod comm_world;
 pub mod engine;
 pub mod machine;
+pub mod placed;
 pub mod reference;
 pub mod trace;
 
 pub use comm_world::{CommWorld, GroupId, GroupInfo};
 pub use engine::{
     simulate, simulate_permuted, simulate_with_trace, try_simulate, Op, OpKind, ProgramSet,
-    ProgramSetBuilder, SimResult, StallError, Stream,
+    ProgramSetBuilder, SimResult, SimScratch, StallError, Stream,
 };
 pub use machine::Machine;
+pub use placed::PlacedWorld;

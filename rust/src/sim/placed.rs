@@ -1,0 +1,138 @@
+//! Build-once / re-price-per-placement simulation.
+//!
+//! PR 4 kept programs, tags and wire accounting in *logical* rank space:
+//! a rank→node placement changes only which ranks co-reside on a node,
+//! i.e. the `(bw, lat)` each interned communicator was priced with at
+//! registration.  [`PlacedWorld`] exploits that: `strategies::build`
+//! runs **once** per `(G_pipe, mesh)` with the identity (column-major)
+//! placement, and each further placement only re-derives the O(#groups)
+//! communicator pricing ([`CommWorld::price_with`] — `members_per_node`,
+//! ring bandwidth shares, P2p link parameters) instead of rebuilding the
+//! O(world × ops) [`ProgramSet`].
+//!
+//! The invariant — a re-priced placed simulation equals the
+//! full-rebuild placed simulation **bit for bit** — holds by
+//! construction: a placed build interns the same member lists in the
+//! same order (placement never changes what a program *is*), so the
+//! [`GroupId`] tables align 1:1 and the re-priced `(bw, lat)` values are
+//! computed by the very same `members_per_node` → `ring_bw_lat` calls
+//! registration would have made.  `rust/tests/sim_golden.rs` pins it
+//! property-style (named variants, seeded `Custom` permutations, and
+//! pipelined Send/Recv programs), and the planner's refinement sweep
+//! rides on it.
+//!
+//! [`CommWorld::price_with`]: super::CommWorld::price_with
+//! [`GroupId`]: super::GroupId
+
+use super::engine::{self, ProgramSet, SimResult, SimScratch};
+
+/// One placement of an identity-built [`ProgramSet`]: the shared program
+/// plus its re-priced per-group `(bw, lat)` table.
+#[derive(Debug)]
+pub struct PlacedWorld<'a> {
+    set: &'a ProgramSet,
+    pricing: Vec<(f64, f64)>,
+}
+
+impl<'a> PlacedWorld<'a> {
+    /// Re-price `set` under the logical→physical permutation `perm`
+    /// (`None` = identity, i.e. the column-major placement — the pricing
+    /// is then a verbatim copy of the registration parameters).
+    ///
+    /// `set` must have been built with the identity placement (e.g. a
+    /// `Layout` whose placement is `ColumnMajor`); re-pricing a set that
+    /// was itself built placed would compose the two permutations.
+    pub fn new(set: &'a ProgramSet, perm: Option<&[usize]>) -> PlacedWorld<'a> {
+        assert!(
+            set.comm.is_identity_placement(),
+            "PlacedWorld wants an identity-placement (column-major) base set: build the \
+             programs once without a placement, then re-price per placement here"
+        );
+        if let Some(p) = perm {
+            assert_eq!(p.len(), set.world(), "perm must be a permutation of 0..world");
+        }
+        let pricing = set.comm.price_with(&set.machine, perm);
+        PlacedWorld { set, pricing }
+    }
+
+    /// The shared (identity-built) program set.
+    pub fn set(&self) -> &ProgramSet {
+        self.set
+    }
+
+    /// Simulate one iteration under this placement, reusing `scratch`
+    /// across the sweep.  Panics with a `deadlock:` message exactly like
+    /// [`super::simulate`] if the program cannot run to completion.
+    pub fn simulate(&self, scratch: &mut SimScratch) -> SimResult {
+        engine::simulate_repriced(self.set, &self.pricing, scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, Machine, ProgramSetBuilder, Stream};
+
+    /// Two ranks, one cross-pair all-reduce: re-pricing with a swap of
+    /// who shares a node must match a placed registration exactly.
+    fn pair_set(machine: &Machine) -> ProgramSet {
+        let mut b = ProgramSetBuilder::new(machine);
+        for rank in 0..8usize {
+            b.begin_rank(0);
+            // both endpoints register the identical member order
+            let g = b.group(vec![rank % 4, rank % 4 + 4]);
+            let c = b.compute(|| "mm".into(), 1e12, 1e9, vec![]);
+            b.all_reduce(|| "ar".into(), (rank % 4) as u64, g, 1e9, Stream::Comm, vec![c]);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn identity_repricing_is_the_registration_pricing() {
+        let m = Machine::perlmutter();
+        let set = pair_set(&m);
+        let placed = PlacedWorld::new(&set, None);
+        let mut scratch = SimScratch::default();
+        let a = placed.simulate(&mut scratch);
+        let b = simulate(&m, &set);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for g in 0..set.world() {
+            assert_eq!(a.comm_busy[g].to_bits(), b.comm_busy[g].to_bits());
+            assert_eq!(a.comm_bytes[g].to_bits(), b.comm_bytes[g].to_bits());
+        }
+    }
+
+    #[test]
+    fn repricing_moves_timings_with_the_placement() {
+        // identity: each {r, r+4} pair spans two nodes (4 GPUs/node);
+        // interleaving the halves puts every pair on one node — the
+        // re-priced transfer must ride NVLink and finish faster
+        let m = Machine::perlmutter();
+        let set = pair_set(&m);
+        let mut scratch = SimScratch::default();
+        let base = PlacedWorld::new(&set, None).simulate(&mut scratch);
+        let perm: Vec<usize> = (0..8).map(|r| (r % 4) * 2 + r / 4).collect();
+        let swapped = PlacedWorld::new(&set, Some(&perm)).simulate(&mut scratch);
+        assert!(swapped.makespan < base.makespan, "{} vs {}", swapped.makespan, base.makespan);
+        // programs are untouched: wire accounting is placement-invariant
+        for g in 0..set.world() {
+            assert_eq!(swapped.comm_bytes[g].to_bits(), base.comm_bytes[g].to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "identity-placement")]
+    fn refuses_a_placed_base_set() {
+        let m = Machine::perlmutter();
+        let scatter: Vec<usize> = (0..8).map(|r| (r % 2) * 4 + r / 2).collect();
+        let mut b = ProgramSetBuilder::new_placed(&m, Some(scatter));
+        b.begin_rank(0);
+        let g = b.group(vec![0, 1]);
+        b.all_reduce(|| "ar".into(), 0, g, 1e9, Stream::Comm, vec![]);
+        b.begin_rank(0);
+        let g = b.group(vec![0, 1]);
+        b.all_reduce(|| "ar".into(), 0, g, 1e9, Stream::Comm, vec![]);
+        let set = b.finish();
+        let _ = PlacedWorld::new(&set, None);
+    }
+}

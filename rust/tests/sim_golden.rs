@@ -32,6 +32,14 @@
 //!    only* — op counts and per-GPU wire-byte accounting are
 //!    placement-invariant.  Non-identity placements refuse to
 //!    materialize (the reference engine would silently re-time them).
+//!
+//! 4. **Fast refinement**: `sim::PlacedWorld` (build once with the
+//!    identity placement, re-price the O(#groups) communicator
+//!    parameters per placement) equals the full placed rebuild bit for
+//!    bit on every accounting field — seeded `Custom` permutations and
+//!    pipelined Send/Recv programs included — and the planner's
+//!    threaded refinement sweep ranks candidates identically to the
+//!    serial sweep at any thread count.
 
 use tensor3d::mesh::Mesh;
 use tensor3d::models::{gpt, unet, NetworkDesc};
@@ -374,6 +382,120 @@ fn placement_permutes_timings_only() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn repriced_placement_equals_full_rebuild_bit_for_bit() {
+    // the tentpole invariant of the fast refinement path: building once
+    // with the identity placement and re-pricing the communicators per
+    // placement (sim::PlacedWorld) must equal the full placed rebuild
+    // exactly — makespans and every per-GPU accounting field, bit for
+    // bit.  Named variants, seeded Custom permutations, and pipelined
+    // (Send/Recv) programs all included.
+    let machine = Machine::polaris();
+    let net = small_net();
+    let gpn = machine.gpus_per_node;
+    let mut rng = Rng::new(0xFA57_4EF1_5EED);
+    let configs: Vec<Layout> = vec![
+        Layout::tensor3d(2, 2, 4, 2),
+        Layout::tensor3d(4, 2, 4, 1).state(StateMode::DepthSharded),
+        Layout::tensor3d(2, 1, 2, 1).pipeline(2, 4),
+        Layout::tensor3d(1, 2, 2, 2).pipeline(4, 6),
+        Layout::tensor3d(4, 1, 2, 1).pipeline(2, 4).state(StateMode::DepthSharded),
+    ];
+    let mut scratch = sim::SimScratch::default();
+    for base in configs {
+        let base_set = strategies::build(&base, &net, 64, &machine);
+        let world = base.world();
+        let mut placements: Vec<Placement> = vec![
+            Placement::ColumnMajor,
+            Placement::RowMajor,
+            Placement::DepthOuter,
+            Placement::NodeBlocked { rows: 2 },
+        ];
+        for _ in 0..4 {
+            let mut p: Vec<usize> = (0..world).collect();
+            rng.shuffle(&mut p);
+            placements.push(Placement::Custom(p));
+        }
+        for pl in placements {
+            let layout = base.clone().placement(pl.clone());
+            if !pl.admissible(layout.g_pipe, layout.g_data, layout.g_r, layout.g_c, gpn) {
+                continue;
+            }
+            let rebuilt = strategies::build(&layout, &net, 64, &machine);
+            let full = sim::simulate(&machine, &rebuilt);
+            let perm = layout.perm(gpn);
+            let repriced = sim::PlacedWorld::new(&base_set, perm.as_deref()).simulate(&mut scratch);
+            assert_eq!(
+                repriced.makespan.to_bits(),
+                full.makespan.to_bits(),
+                "{}: re-priced {} != rebuilt {}",
+                layout.label(),
+                repriced.makespan,
+                full.makespan
+            );
+            for g in 0..world {
+                assert_eq!(
+                    repriced.compute_busy[g].to_bits(),
+                    full.compute_busy[g].to_bits(),
+                    "{}: compute_busy[{g}]",
+                    layout.label()
+                );
+                assert_eq!(
+                    repriced.comm_busy[g].to_bits(),
+                    full.comm_busy[g].to_bits(),
+                    "{}: comm_busy[{g}]",
+                    layout.label()
+                );
+                assert_eq!(
+                    repriced.comm_bytes[g].to_bits(),
+                    full.comm_bytes[g].to_bits(),
+                    "{}: comm_bytes[{g}]",
+                    layout.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_refinement_ranks_like_the_serial_sweep() {
+    // the parallel sweep is a pure fan-out: candidates are merged in job
+    // order, so any thread count must produce the identical report —
+    // same candidate sequence, same makespan bits, same counters.
+    use tensor3d::planner::PlanRequest;
+    let net = gpt::gpt_9b().network();
+    let machine = Machine::polaris();
+    let run = |threads: usize| {
+        PlanRequest::new(&net, &machine, 16)
+            .batch(64)
+            .pipelines(&[1, 2])
+            .refine(3)
+            .threads(threads)
+            .run()
+    };
+    let serial = run(1);
+    for threads in [0, 3] {
+        let parallel = run(threads);
+        assert_eq!(serial.candidates.len(), parallel.candidates.len());
+        assert_eq!((serial.sims, serial.builds), (parallel.sims, parallel.builds));
+        for (a, b) in serial.candidates.iter().zip(&parallel.candidates) {
+            assert_eq!(a.layout, b.layout, "{threads} threads");
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+            assert_eq!(
+                a.makespan_s.unwrap().to_bits(),
+                b.makespan_s.unwrap().to_bits(),
+                "{}: threaded makespan drifted",
+                a.layout.label()
+            );
+        }
+        assert_eq!(serial.baseline.layout, parallel.baseline.layout);
+        assert_eq!(
+            serial.baseline_makespan_s().unwrap().to_bits(),
+            parallel.baseline_makespan_s().unwrap().to_bits()
+        );
     }
 }
 
