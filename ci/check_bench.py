@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Validate a `tensor3d bench-sim` JSON against the ROADMAP.md schema.
+
+The bench artifacts (`BENCH_sim.json`, `BENCH_sim_refined.json`) are the
+CI-facing perf record: one flat JSON object per run.  The budget gates in
+`bench-sim` itself catch wall-clock regressions, but a malformed artifact
+(missing field, NaN throughput, inconsistent refine counters) would
+upload silently and poison every downstream comparison.  This checker
+fails the build instead:
+
+  * every schema field is present and of the right shape;
+  * `ops_per_sec` (and `sims_per_sec` for refined runs) is finite and
+    strictly positive;
+  * the refine counters are self-consistent
+    (`builds_avoided == refine_sims - refine_builds`);
+  * with `--budget-s B`, the gated wall clock (`refine_s + total_s`)
+    respects the same budget the run was invoked with.
+
+Usage: check_bench.py BENCH.json [--budget-s SECONDS]
+"""
+import json
+import math
+import sys
+
+# (field, kind) — kind is one of: str, bool, int (non-negative integral
+# number), pos_int (>= 1), sec (finite float >= 0), pos (finite float
+# > 0), frac (finite float in [0, 1]).
+SCHEMA = [
+    ("model", "str"),
+    ("gpus", "pos_int"),
+    ("machine", "str"),
+    ("depth", "pos_int"),
+    ("pipeline", "pos_int"),
+    ("microbatches", "pos_int"),
+    ("bubble_fraction", "frac"),
+    ("sharded_state", "bool"),
+    ("placement", "str"),
+    ("g_data", "pos_int"),
+    ("g_r", "pos_int"),
+    ("g_c", "pos_int"),
+    ("ops", "pos_int"),
+    ("groups", "pos_int"),
+    ("classes", "pos_int"),
+    ("build_s", "sec"),
+    ("sim_s", "sec"),
+    ("total_s", "sec"),
+    ("ops_per_sec", "pos"),
+    ("makespan_s", "pos"),
+    ("overlap_fraction", "frac"),
+    ("mfu", "frac"),
+]
+
+# Only present when the run refined (`refine` > 0); all-or-nothing.
+REFINE_SCHEMA = [
+    ("refine", "pos_int"),
+    ("refine_s", "sec"),
+    ("refine_sims", "pos_int"),
+    ("refine_builds", "pos_int"),
+    ("builds_avoided", "int"),
+    ("sims_per_sec", "pos"),
+]
+
+
+def check_kind(field, value, kind):
+    if kind == "str":
+        if not isinstance(value, str) or not value:
+            return f"{field}: expected non-empty string, got {value!r}"
+        return None
+    if kind == "bool":
+        if not isinstance(value, bool):
+            return f"{field}: expected bool, got {value!r}"
+        return None
+    # JSON numbers (the emitter writes everything else as a number)
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        return f"{field}: expected number, got {value!r}"
+    v = float(value)
+    if not math.isfinite(v):
+        return f"{field}: not finite ({value!r})"
+    if kind in ("int", "pos_int"):
+        if v != int(v):
+            return f"{field}: expected integral value, got {value!r}"
+        if kind == "pos_int" and v < 1:
+            return f"{field}: expected >= 1, got {value!r}"
+        if kind == "int" and v < 0:
+            return f"{field}: expected >= 0, got {value!r}"
+    elif kind == "sec":
+        if v < 0:
+            return f"{field}: expected >= 0 seconds, got {value!r}"
+    elif kind == "pos":
+        if v <= 0:
+            return f"{field}: expected > 0, got {value!r}"
+    elif kind == "frac":
+        if not 0.0 <= v <= 1.0:
+            return f"{field}: expected in [0, 1], got {value!r}"
+    else:
+        return f"{field}: unknown schema kind {kind!r}"
+    return None
+
+
+def check(bench, budget_s):
+    errors = []
+    for field, kind in SCHEMA:
+        if field not in bench:
+            errors.append(f"{field}: missing")
+            continue
+        err = check_kind(field, bench[field], kind)
+        if err:
+            errors.append(err)
+
+    refined = bench.get("refine", 0)
+    refine_fields = [f for f, _ in REFINE_SCHEMA]
+    if refined:
+        for field, kind in REFINE_SCHEMA:
+            if field not in bench:
+                errors.append(f"{field}: missing (required when refine > 0)")
+                continue
+            err = check_kind(field, bench[field], kind)
+            if err:
+                errors.append(err)
+        if all(f in bench for f in ("refine_sims", "refine_builds", "builds_avoided")):
+            sims, builds = bench["refine_sims"], bench["refine_builds"]
+            avoided = bench["builds_avoided"]
+            if avoided != sims - builds:
+                errors.append(
+                    f"builds_avoided: {avoided} != refine_sims - refine_builds"
+                    f" ({sims} - {builds})"
+                )
+            if builds > sims:
+                errors.append(f"refine_builds: {builds} exceeds refine_sims {sims}")
+    else:
+        stray = [f for f in refine_fields if f in bench]
+        if stray:
+            errors.append(f"refine fields present without refine > 0: {stray}")
+
+    known = {f for f, _ in SCHEMA} | set(refine_fields)
+    unknown = [f for f in bench if f not in known]
+    if unknown:
+        errors.append(f"fields not in the ROADMAP schema: {unknown}")
+
+    if budget_s is not None and not errors:
+        gated = bench.get("refine_s", 0.0) + bench["total_s"]
+        if gated > budget_s:
+            errors.append(
+                f"budget: refine_s + total_s = {gated:.1f}s exceeds --budget-s {budget_s:.0f}"
+            )
+    return errors
+
+
+def main():
+    args = sys.argv[1:]
+    budget_s = None
+    if "--budget-s" in args:
+        i = args.index("--budget-s")
+        budget_s = float(args[i + 1])
+        del args[i : i + 2]
+    if len(args) != 1:
+        sys.exit(f"usage: {sys.argv[0]} BENCH.json [--budget-s SECONDS]")
+    path = args[0]
+    with open(path) as f:
+        bench = json.load(f)
+    if not isinstance(bench, dict):
+        sys.exit(f"FAIL {path}: expected one flat JSON object, got {type(bench).__name__}")
+
+    errors = check(bench, budget_s)
+    if errors:
+        for err in errors:
+            print(f"  {err}", file=sys.stderr)
+        sys.exit(f"FAIL {path}: {len(errors)} schema violation(s)")
+    refined = bench.get("refine", 0)
+    extra = f", sims_per_sec={bench['sims_per_sec']:.2f}" if refined else ""
+    print(f"OK {path}: {len(bench)} fields, ops_per_sec={bench['ops_per_sec']:.0f}{extra}")
+
+
+if __name__ == "__main__":
+    main()

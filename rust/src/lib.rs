@@ -38,6 +38,7 @@
 pub mod xla;
 
 pub mod util;
+pub mod ndmesh;
 pub mod mesh;
 pub mod spec;
 pub mod layout;

@@ -20,7 +20,18 @@
 //! * **row** communicators — fixed `(d, i)`, varying `j` (`All-Reduce_r`);
 //! * **data** communicators — fixed `(i, j)`, varying `d` (gradient
 //!   synchronization across data-parallel groups).
+//!
+//! In the named-dimension algebra of [`crate::ndmesh`], this layout is
+//! the row-major [`Extent`] over `["data", "col", "row"]` — `col` outer
+//! of `row` is exactly the column-major grid above — and the three
+//! communicator families are `along("row")`, `along("col")` and
+//! `along("data")` lines through a [`crate::ndmesh::Point`].
+//! [`Mesh::extent`] exposes
+//! that extent; the group methods here are derived from it (pinned
+//! bit-for-bit against the pre-algebra loops by the property tests
+//! below and by `rust/tests/mesh_golden.rs`).
 
+use crate::ndmesh::Extent;
 use std::fmt;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -69,67 +80,86 @@ impl Mesh {
         self.g_data * self.g_tensor()
     }
 
+    /// The named-dimension [`Extent`] of this mesh: row-major over
+    /// `["data", "col", "row"]`, which linearizes to exactly the layout
+    /// above (`rank = d * (G_c * G_r) + j * G_r + i`).  `depth`
+    /// subdivides *work*, not ranks, so it is not a dimension here;
+    /// the pipeline axis, which does multiply ranks, is prepended by
+    /// the strategies as a leading `"pipe"` dimension.
+    pub fn extent(&self) -> Extent {
+        Extent::new(&[("data", self.g_data), ("col", self.g_c), ("row", self.g_r)])
+    }
+
+    /// Closed form of [`Mesh::extent`]'s row-major linearization for a
+    /// `(d, i, j)` coordinate (kept closed-form: this is the live
+    /// runtime's per-message hot path).
     pub fn rank_of(&self, c: Coord) -> usize {
         debug_assert!(c.d < self.g_data && c.i < self.g_r && c.j < self.g_c);
         c.d * self.g_tensor() + c.j * self.g_r + c.i
     }
 
+    /// Inverse of [`Mesh::rank_of`] (the closed form of
+    /// `extent().point_of(rank)`).
     pub fn coord_of(&self, rank: usize) -> Coord {
         debug_assert!(rank < self.world());
         let t = self.g_tensor();
         Coord { d: rank / t, j: (rank % t) / self.g_r, i: rank % self.g_r }
     }
 
-    /// Ranks of the column communicator containing `rank` (fixed d, j).
+    /// Ranks of the column communicator containing `rank` (fixed d, j):
+    /// the `row` line through the rank's point.
     pub fn col_group(&self, rank: usize) -> Vec<usize> {
-        let c = self.coord_of(rank);
-        (0..self.g_r)
-            .map(|i| self.rank_of(Coord { i, ..c }))
-            .collect()
+        self.extent().point_of(rank).along("row").ranks()
     }
 
-    /// Ranks of the row communicator containing `rank` (fixed d, i).
+    /// Ranks of the row communicator containing `rank` (fixed d, i):
+    /// the `col` line through the rank's point.
     pub fn row_group(&self, rank: usize) -> Vec<usize> {
-        let c = self.coord_of(rank);
-        (0..self.g_c)
-            .map(|j| self.rank_of(Coord { j, ..c }))
-            .collect()
+        self.extent().point_of(rank).along("col").ranks()
     }
 
-    /// Ranks of the data-parallel communicator containing `rank`.
+    /// Ranks of the data-parallel communicator containing `rank`: the
+    /// `data` line through the rank's point.
     pub fn data_group(&self, rank: usize) -> Vec<usize> {
-        let c = self.coord_of(rank);
-        (0..self.g_data)
-            .map(|d| self.rank_of(Coord { d, ..c }))
-            .collect()
+        self.extent().point_of(rank).along("data").ranks()
     }
 
-    /// All column groups (used to build communicators up front).
+    /// All column groups (used to build communicators up front),
+    /// enumerated d-outer then j — the row-major order of the
+    /// complement dimensions `["data", "col"]`.
     pub fn all_col_groups(&self) -> Vec<Vec<usize>> {
+        let e = self.extent();
         let mut out = Vec::new();
         for d in 0..self.g_data {
             for j in 0..self.g_c {
-                out.push((0..self.g_r).map(|i| self.rank_of(Coord { d, i, j })).collect());
+                out.push(e.point(vec![d, j, 0]).along("row").ranks());
             }
         }
         out
     }
 
+    /// All row groups, enumerated d-outer then i.
     pub fn all_row_groups(&self) -> Vec<Vec<usize>> {
+        let e = self.extent();
         let mut out = Vec::new();
         for d in 0..self.g_data {
             for i in 0..self.g_r {
-                out.push((0..self.g_c).map(|j| self.rank_of(Coord { d, i, j })).collect());
+                out.push(e.point(vec![d, 0, i]).along("col").ranks());
             }
         }
         out
     }
 
+    /// All data groups.  Enumerated i-outer then j — the seed's
+    /// historical order (note: *not* the row-major order of the
+    /// complement `["col", "row"]`), preserved because communicator
+    /// construction order is part of the pinned program layout.
     pub fn all_data_groups(&self) -> Vec<Vec<usize>> {
+        let e = self.extent();
         let mut out = Vec::new();
         for i in 0..self.g_r {
             for j in 0..self.g_c {
-                out.push((0..self.g_data).map(|d| self.rank_of(Coord { d, i, j })).collect());
+                out.push(e.point(vec![0, j, i]).along("data").ranks());
             }
         }
         out
@@ -171,6 +201,86 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn closed_forms_match_the_extent() {
+        // rank_of/coord_of are kept closed-form for the live runtime's
+        // hot path; they must stay the extent's row-major linearization.
+        prop::check("mesh-extent", 200, |g| {
+            let m = Mesh::new(g.usize(1, 8), g.usize(1, 8), g.usize(1, 8), 1);
+            let e = m.extent();
+            if e.num_ranks() != m.world() {
+                return Err(format!("extent world mismatch on {m}"));
+            }
+            for rank in 0..m.world() {
+                let p = e.point_of(rank);
+                let c = m.coord_of(rank);
+                if (p.coord("data"), p.coord("row"), p.coord("col")) != (c.d, c.i, c.j) {
+                    return Err(format!("coord mismatch at rank {rank} on {m}"));
+                }
+                if e.rank_of(&[c.d, c.j, c.i]) != m.rank_of(c) {
+                    return Err(format!("rank mismatch at rank {rank} on {m}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn along_matches_hand_rolled_group_formulas() {
+        // The algebra-derived group methods must enumerate exactly what
+        // the pre-algebra loops produced: ascending i (resp. j, d) over
+        // rank = d * g_t + j * g_r + i.
+        prop::check("mesh-along", 150, |g| {
+            let m = Mesh::new(g.usize(1, 6), g.usize(1, 6), g.usize(1, 6), 1);
+            let gt = m.g_tensor();
+            for rank in 0..m.world() {
+                let (d, i, j) = (rank / gt, rank % m.g_r, (rank % gt) / m.g_r);
+                let col: Vec<usize> = (0..m.g_r).map(|i| d * gt + j * m.g_r + i).collect();
+                let row: Vec<usize> = (0..m.g_c).map(|j| d * gt + j * m.g_r + i).collect();
+                let data: Vec<usize> = (0..m.g_data).map(|d| d * gt + j * m.g_r + i).collect();
+                if m.col_group(rank) != col {
+                    return Err(format!("col group mismatch at rank {rank} on {m}"));
+                }
+                if m.row_group(rank) != row {
+                    return Err(format!("row group mismatch at rank {rank} on {m}"));
+                }
+                if m.data_group(rank) != data {
+                    return Err(format!("data group mismatch at rank {rank} on {m}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_groups_keep_the_seed_enumeration_order() {
+        // d-outer/j for columns, d-outer/i for rows, i-outer/j for data
+        // (the seed's historical orders, part of the pinned layout)
+        let m = Mesh::new(3, 2, 4, 1);
+        let gt = m.g_tensor();
+        let mut want = Vec::new();
+        for d in 0..m.g_data {
+            for j in 0..m.g_c {
+                want.push((0..m.g_r).map(|i| d * gt + j * m.g_r + i).collect::<Vec<_>>());
+            }
+        }
+        assert_eq!(m.all_col_groups(), want);
+        let mut want = Vec::new();
+        for d in 0..m.g_data {
+            for i in 0..m.g_r {
+                want.push((0..m.g_c).map(|j| d * gt + j * m.g_r + i).collect::<Vec<_>>());
+            }
+        }
+        assert_eq!(m.all_row_groups(), want);
+        let mut want = Vec::new();
+        for i in 0..m.g_r {
+            for j in 0..m.g_c {
+                want.push((0..m.g_data).map(|d| d * gt + j * m.g_r + i).collect::<Vec<_>>());
+            }
+        }
+        assert_eq!(m.all_data_groups(), want);
     }
 
     #[test]

@@ -1,0 +1,449 @@
+//! Named-dimension mesh algebra, modelled on monarch's `ndslice`.
+//!
+//! The paper's 4-D hybrid is a product of *named* parallel dimensions
+//! (`data x row x col`, plus the pipeline axis), but the seed derived
+//! every rank index and communicator member list by hand-rolled
+//! arithmetic (`rank = d * (G_r * G_c) + j * G_r + i`).  This module
+//! makes the dimension structure first class:
+//!
+//! * [`Extent`] — an ordered list of named dimensions with sizes.  Ranks
+//!   are the **row-major** linearization: the first dimension is
+//!   outermost (slowest-varying), the last is innermost (stride 1).
+//! * [`Point`] — one coordinate in an extent; knows its linear
+//!   [`Point::rank`] and can re-coordinate via [`Point::with`].
+//! * [`Region`] / [`View`] — an offset/sizes/strides sub-setting of an
+//!   extent's rank space with row-major iteration; [`View::along`] is
+//!   "the `dim` line through this point", which is exactly a
+//!   communicator member list.
+//!
+//! The existing column-major grid layout is the row-major linearization
+//! of the dimension order `["data", "col", "row"]` (pipeline prepends
+//! `"pipe"`): `rank = d * (G_c * G_r) + j * G_r + i`.  Keeping that
+//! order is what makes the algebra-built programs **bit-identical** to
+//! the pre-refactor builders — the invariant pinned by
+//! `rust/tests/mesh_golden.rs` against
+//! [`crate::strategies::reference`], and gated in CI.
+//!
+//! Placements ([`crate::spec::Placement`]) are dimension transforms
+//! here: [`Extent::split`] tiles a dimension into `outer x inner`, and
+//! [`Extent::remap`] produces the logical→physical permutation of a
+//! dimension reorder.  Adding a fifth axis (hierarchical collectives,
+//! expert parallelism) is "one more `(name, size)` pair", not "touch
+//! every builder".
+
+pub mod view;
+
+pub use view::{Region, RegionIter, View};
+
+use std::fmt;
+
+/// An ordered list of named dimensions with sizes.  The linear rank of a
+/// coordinate is the row-major product: first dimension outermost, last
+/// dimension stride 1.
+///
+/// Dimension names are `&'static str` by design — extents are built from
+/// compile-time vocabulary (`"data"`, `"row"`, `"col"`, `"pipe"`, ...),
+/// and static names keep [`Point`]/[`View`] construction allocation-free
+/// on the strategy builders' hot path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Extent {
+    names: Vec<&'static str>,
+    sizes: Vec<usize>,
+}
+
+impl fmt::Display for Extent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> =
+            self.names.iter().zip(&self.sizes).map(|(n, s)| format!("{n}={s}")).collect();
+        write!(f, "[{}]", dims.join(", "))
+    }
+}
+
+impl Extent {
+    /// Build an extent from ordered `(name, size)` pairs.  Panics on an
+    /// empty dimension list, a zero size, or a duplicate name.
+    pub fn new(dims: &[(&'static str, usize)]) -> Extent {
+        assert!(!dims.is_empty(), "an Extent needs at least one dimension");
+        let mut names = Vec::with_capacity(dims.len());
+        let mut sizes = Vec::with_capacity(dims.len());
+        for &(name, size) in dims {
+            assert!(size >= 1, "dimension {name:?} has size 0");
+            assert!(!names.contains(&name), "duplicate dimension {name:?}");
+            names.push(name);
+            sizes.push(size);
+        }
+        Extent { names, sizes }
+    }
+
+    pub fn num_dims(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Total number of ranks (the product of all dimension sizes).
+    pub fn num_ranks(&self) -> usize {
+        self.sizes.iter().product()
+    }
+
+    pub fn names(&self) -> &[&'static str] {
+        &self.names
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Positional index of dimension `dim`, if present.
+    pub fn index_of(&self, dim: &str) -> Option<usize> {
+        self.names.iter().position(|n| *n == dim)
+    }
+
+    /// Size of dimension `dim`.  Panics if the extent has no such
+    /// dimension.
+    pub fn size(&self, dim: &str) -> usize {
+        self.sizes[self.expect_dim(dim)]
+    }
+
+    /// Row-major strides, positionally aligned with [`Extent::names`]
+    /// (last dimension has stride 1).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.sizes.len()];
+        for k in (0..self.sizes.len().saturating_sub(1)).rev() {
+            strides[k] = strides[k + 1] * self.sizes[k + 1];
+        }
+        strides
+    }
+
+    /// Row-major stride of dimension `dim` (how far apart two ranks are
+    /// that differ by 1 in this dimension).  Panics on an unknown name.
+    pub fn stride(&self, dim: &str) -> usize {
+        let k = self.expect_dim(dim);
+        self.sizes[k + 1..].iter().product()
+    }
+
+    /// Linearize a positional coordinate vector (row-major).
+    pub fn rank_of(&self, coords: &[usize]) -> usize {
+        assert_eq!(coords.len(), self.num_dims(), "coordinate arity mismatch on {self}");
+        let mut rank = 0;
+        for (k, (&c, &s)) in coords.iter().zip(&self.sizes).enumerate() {
+            assert!(c < s, "coordinate {c} out of range for {:?} in {self}", self.names[k]);
+            rank = rank * s + c;
+        }
+        rank
+    }
+
+    /// Positional coordinates of a linear rank (inverse of
+    /// [`Extent::rank_of`]).
+    pub fn coords_of(&self, rank: usize) -> Vec<usize> {
+        assert!(rank < self.num_ranks(), "rank {rank} out of range for {self}");
+        let mut coords = vec![0usize; self.num_dims()];
+        let mut rem = rank;
+        for k in (0..self.num_dims()).rev() {
+            coords[k] = rem % self.sizes[k];
+            rem /= self.sizes[k];
+        }
+        coords
+    }
+
+    /// The [`Point`] at linear rank `rank`.
+    pub fn point_of(&self, rank: usize) -> Point<'_> {
+        Point { extent: self, coords: self.coords_of(rank) }
+    }
+
+    /// The [`Point`] at an explicit positional coordinate vector.
+    pub fn point(&self, coords: Vec<usize>) -> Point<'_> {
+        assert_eq!(coords.len(), self.num_dims(), "coordinate arity mismatch on {self}");
+        for (k, (&c, &s)) in coords.iter().zip(&self.sizes).enumerate() {
+            assert!(c < s, "coordinate {c} out of range for {:?} in {self}", self.names[k]);
+        }
+        Point { extent: self, coords }
+    }
+
+    /// Tile dimension `dim` into `outer x inner`: the result replaces
+    /// `dim` with two adjacent dimensions `outer` (size
+    /// `size(dim) / inner_size`, slower-varying) and `inner` (size
+    /// `inner_size`, faster-varying), preserving every rank — splitting
+    /// never permutes, it only renames structure.  `inner_size` must
+    /// divide `size(dim)`.  Composes with [`Extent::remap`] to express
+    /// tiled placements such as
+    /// [`crate::spec::Placement::NodeBlocked`].
+    pub fn split(
+        &self,
+        dim: &str,
+        outer: &'static str,
+        inner: &'static str,
+        inner_size: usize,
+    ) -> Extent {
+        let k = self.expect_dim(dim);
+        assert!(
+            inner_size >= 1 && self.sizes[k] % inner_size == 0,
+            "inner size {inner_size} does not divide {dim:?}={} in {self}",
+            self.sizes[k]
+        );
+        let mut dims: Vec<(&'static str, usize)> =
+            self.names.iter().copied().zip(self.sizes.iter().copied()).collect();
+        dims[k] = (outer, self.sizes[k] / inner_size);
+        dims.insert(k + 1, (inner, inner_size));
+        Extent::new(&dims)
+    }
+
+    /// The rank permutation of a dimension reorder: entry `r` is the
+    /// row-major rank, **in the reordered extent**, of the coordinate
+    /// that rank `r` has here.  `order` must be a permutation of this
+    /// extent's names.  An `order` equal to [`Extent::names`] is the
+    /// identity; this is how [`crate::spec::Placement`] turns "put the
+    /// row dimension innermost" into a logical→physical rank map.
+    pub fn remap(&self, order: &[&'static str]) -> Vec<usize> {
+        assert_eq!(order.len(), self.num_dims(), "remap order arity mismatch on {self}");
+        let idx: Vec<usize> = order.iter().map(|n| self.expect_dim(n)).collect();
+        let mut seen = vec![false; self.num_dims()];
+        for &k in &idx {
+            assert!(!std::mem::replace(&mut seen[k], true), "remap order repeats a dimension");
+        }
+        let sizes: Vec<usize> = idx.iter().map(|&k| self.sizes[k]).collect();
+        (0..self.num_ranks())
+            .map(|rank| {
+                let coords = self.coords_of(rank);
+                let mut out = 0;
+                for (&k, &s) in idx.iter().zip(&sizes) {
+                    out = out * s + coords[k];
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// The [`View`] covering this whole extent (offset 0, full sizes,
+    /// row-major strides).
+    pub fn view(&self) -> View {
+        View::of(self)
+    }
+
+    fn expect_dim(&self, dim: &str) -> usize {
+        self.index_of(dim).unwrap_or_else(|| panic!("extent {self} has no dimension {dim:?}"))
+    }
+}
+
+/// One coordinate in an [`Extent`].  A point is where index arithmetic
+/// and communicator derivation meet: [`Point::rank`] is the row-major
+/// linearization, [`Point::along`] is the communicator line through the
+/// point, [`Point::with`] moves along one dimension (pipeline
+/// neighbors).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Point<'a> {
+    extent: &'a Extent,
+    coords: Vec<usize>,
+}
+
+impl fmt::Display for Point<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self
+            .extent
+            .names()
+            .iter()
+            .zip(&self.coords)
+            .map(|(n, c)| format!("{n}={c}"))
+            .collect();
+        write!(f, "({})", dims.join(", "))
+    }
+}
+
+impl Point<'_> {
+    pub fn extent(&self) -> &Extent {
+        self.extent
+    }
+
+    /// Positional coordinates, aligned with the extent's dimension order.
+    pub fn coords(&self) -> &[usize] {
+        &self.coords
+    }
+
+    /// This point's coordinate in dimension `dim`.  Panics on an unknown
+    /// name.
+    pub fn coord(&self, dim: &str) -> usize {
+        self.coords[self.extent.expect_dim(dim)]
+    }
+
+    /// Row-major linear rank of this point.
+    pub fn rank(&self) -> usize {
+        self.extent.rank_of(&self.coords)
+    }
+
+    /// The same point with dimension `dim` set to `value` — e.g. the
+    /// same-coordinate rank of a neighboring pipeline stage.
+    pub fn with(&self, dim: &str, value: usize) -> Point<'_> {
+        let k = self.extent.expect_dim(dim);
+        assert!(value < self.extent.sizes[k], "coordinate {value} out of range for {dim:?}");
+        let mut coords = self.coords.clone();
+        coords[k] = value;
+        Point { extent: self.extent, coords }
+    }
+
+    /// The line through this point along `dim`: all ranks that agree
+    /// with the point on every other dimension, enumerated in ascending
+    /// `dim` coordinate.  This is the member list of the `dim`
+    /// communicator containing the point — see [`View::along`].
+    pub fn along(&self, dim: &'static str) -> View {
+        View::along(dim, self)
+    }
+
+    /// The sub-grid through this point spanned by `dims` (in the given
+    /// order): all ranks that agree with the point on every dimension
+    /// *not* listed, iterated row-major over `dims` (first listed
+    /// outermost).  See [`View::over`].
+    pub fn over(&self, dims: &[&'static str]) -> View {
+        View::over(dims, self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn rank_of_is_row_major() {
+        let e = Extent::new(&[("data", 2), ("col", 3), ("row", 4)]);
+        assert_eq!(e.num_dims(), 3);
+        assert_eq!(e.num_ranks(), 24);
+        assert_eq!(e.strides(), vec![12, 4, 1]);
+        assert_eq!((e.stride("data"), e.stride("col"), e.stride("row")), (12, 4, 1));
+        assert_eq!(e.rank_of(&[0, 0, 0]), 0);
+        assert_eq!(e.rank_of(&[1, 2, 3]), 12 + 2 * 4 + 3);
+        assert_eq!(e.size("col"), 3);
+        assert_eq!(e.index_of("row"), Some(2));
+        assert_eq!(e.index_of("pipe"), None);
+        assert_eq!(format!("{e}"), "[data=2, col=3, row=4]");
+    }
+
+    #[test]
+    fn point_accessors_and_with() {
+        let e = Extent::new(&[("pipe", 2), ("data", 2), ("col", 2), ("row", 2)]);
+        let p = e.point_of(0b1011);
+        assert_eq!(p.coords(), &[1, 0, 1, 1]);
+        assert_eq!((p.coord("pipe"), p.coord("data")), (1, 0));
+        assert_eq!(p.rank(), 11);
+        assert_eq!(p.with("pipe", 0).rank(), 3);
+        assert_eq!(p.with("row", 0).rank(), 10);
+        assert_eq!(format!("{p}"), "(pipe=1, data=0, col=1, row=1)");
+        assert_eq!(e.point(vec![1, 0, 1, 1]), p);
+    }
+
+    #[test]
+    fn roundtrip_on_random_extents() {
+        // Point -> rank -> Point round-trips on random extents (the
+        // ISSUE's property), and rank_of/coords_of are exact inverses.
+        const POOL: [&str; 5] = ["a", "b", "c", "d", "e"];
+        prop::check("ndmesh-roundtrip", 200, |g| {
+            let nd = g.usize(1, POOL.len());
+            let dims: Vec<(&'static str, usize)> =
+                (0..nd).map(|k| (POOL[k], g.usize(1, 6))).collect();
+            let e = Extent::new(&dims);
+            for rank in 0..e.num_ranks() {
+                let p = e.point_of(rank);
+                if p.rank() != rank {
+                    return Err(format!("rank {rank} fails roundtrip on {e}"));
+                }
+                if e.rank_of(&e.coords_of(rank)) != rank {
+                    return Err(format!("coords_of({rank}) fails on {e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_preserves_ranks() {
+        // splitting only renames structure: every point keeps its rank
+        let e = Extent::new(&[("data", 2), ("col", 4), ("row", 6)]);
+        let s = e.split("row", "rowb", "rowi", 3);
+        assert_eq!(s.names(), &["data", "col", "rowb", "rowi"]);
+        assert_eq!(s.sizes(), &[2, 4, 2, 3]);
+        assert_eq!(s.num_ranks(), e.num_ranks());
+        for rank in 0..e.num_ranks() {
+            let p = e.point_of(rank);
+            let q = s.point_of(rank);
+            assert_eq!(q.coord("rowb") * 3 + q.coord("rowi"), p.coord("row"));
+            assert_eq!(q.coord("data"), p.coord("data"));
+            assert_eq!(q.coord("col"), p.coord("col"));
+        }
+    }
+
+    #[test]
+    fn remap_identity_and_swap() {
+        let e = Extent::new(&[("data", 2), ("col", 3), ("row", 4)]);
+        let id = e.remap(&["data", "col", "row"]);
+        assert_eq!(id, (0..24).collect::<Vec<_>>());
+        // swapping col and row is the grid transpose: (d, j, i) lands at
+        // d*12 + i*3 + j
+        let t = e.remap(&["data", "row", "col"]);
+        for rank in 0..24 {
+            let p = e.point_of(rank);
+            let (d, j, i) = (p.coord("data"), p.coord("col"), p.coord("row"));
+            assert_eq!(t[rank], d * 12 + i * 3 + j);
+        }
+    }
+
+    #[test]
+    fn remap_composes_with_linearization() {
+        // The property pinned for placements: remap(order) is exactly
+        // "linearize the reordered coordinates in the reordered extent".
+        const POOL: [&str; 4] = ["a", "b", "c", "d"];
+        prop::check("ndmesh-remap", 150, |g| {
+            let nd = g.usize(1, POOL.len());
+            let dims: Vec<(&'static str, usize)> =
+                (0..nd).map(|k| (POOL[k], g.usize(1, 5))).collect();
+            let e = Extent::new(&dims);
+            // draw a random permutation of the dimension order
+            let mut order: Vec<&'static str> = e.names().to_vec();
+            for k in (1..order.len()).rev() {
+                order.swap(k, g.usize(0, k));
+            }
+            let target = Extent::new(&order.iter().map(|&n| (n, e.size(n))).collect::<Vec<_>>());
+            let perm = e.remap(&order);
+            let mut seen = vec![false; e.num_ranks()];
+            for rank in 0..e.num_ranks() {
+                let p = e.point_of(rank);
+                let coords: Vec<usize> = order.iter().map(|&n| p.coord(n)).collect();
+                if perm[rank] != target.rank_of(&coords) {
+                    return Err(format!("remap {order:?} wrong at rank {rank} on {e}"));
+                }
+                if std::mem::replace(&mut seen[perm[rank]], true) {
+                    return Err(format!("remap {order:?} not a permutation on {e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_then_remap_expresses_node_tiling() {
+        // the NodeBlocked shape: tile a 4x4 grid into 2x2 node blocks
+        let e = Extent::new(&[("col", 4), ("row", 4)]);
+        let tiled = e.split("col", "colb", "coli", 2).split("row", "rowb", "rowi", 2);
+        let perm = tiled.remap(&["colb", "rowb", "coli", "rowi"]);
+        // ranks of one 2x2 block land in one aligned 4-slot node window
+        for rank in 0..16 {
+            let p = e.point_of(rank);
+            let (j, i) = (p.coord("col"), p.coord("row"));
+            assert_eq!(perm[rank] / 4, (j / 2) * 2 + i / 2, "rank {rank}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no dimension")]
+    fn unknown_dimension_panics() {
+        Extent::new(&[("data", 2)]).size("row");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate dimension")]
+    fn duplicate_dimension_panics() {
+        Extent::new(&[("data", 2), ("data", 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_coordinate_panics() {
+        Extent::new(&[("data", 2), ("row", 2)]).rank_of(&[0, 2]);
+    }
+}

@@ -1,0 +1,285 @@
+//! Offset/sizes/strides sub-setting of an [`Extent`]'s rank space.
+//!
+//! A [`Region`] is the raw geometry — a base offset plus per-dimension
+//! `(size, stride)` pairs — with row-major linearization and iteration.
+//! A [`View`] names the kept dimensions, which is what the strategy
+//! builders pass around: [`View::along`] ("the `row` line through this
+//! point") *is* a column communicator's member list, in the exact
+//! enumeration order the hand-rolled loops produced — ascending
+//! coordinate, which the bit-identical-`ProgramSet` invariant of
+//! `rust/tests/mesh_golden.rs` depends on.
+
+use super::{Extent, Point};
+
+/// A rectangular subset of some extent's linear rank space: rank
+/// `offset + sum_k coords[k] * strides[k]` for `coords[k] < sizes[k]`,
+/// iterated row-major (first dimension outermost).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    offset: usize,
+    sizes: Vec<usize>,
+    strides: Vec<usize>,
+}
+
+impl Region {
+    /// Build a region from its raw geometry.  `sizes` and `strides` are
+    /// positionally paired and must have the same arity.
+    pub fn new(offset: usize, sizes: Vec<usize>, strides: Vec<usize>) -> Region {
+        assert_eq!(sizes.len(), strides.len(), "sizes/strides arity mismatch");
+        assert!(!sizes.is_empty(), "a Region needs at least one dimension");
+        assert!(sizes.iter().all(|&s| s >= 1), "a Region dimension has size 0");
+        Region { offset, sizes, strides }
+    }
+
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    pub fn num_dims(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Number of ranks in the region.
+    pub fn len(&self) -> usize {
+        self.sizes.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // sizes are >= 1 by construction
+    }
+
+    /// Linearize an in-region coordinate to the underlying extent's rank.
+    pub fn linearize(&self, coords: &[usize]) -> usize {
+        assert_eq!(coords.len(), self.num_dims(), "coordinate arity mismatch");
+        let mut rank = self.offset;
+        for (k, &c) in coords.iter().enumerate() {
+            assert!(c < self.sizes[k], "coordinate {c} out of range in region dim {k}");
+            rank += c * self.strides[k];
+        }
+        rank
+    }
+
+    /// Row-major iteration over the member ranks (first dimension
+    /// outermost, last innermost — ascending coordinate in each).
+    pub fn iter(&self) -> RegionIter<'_> {
+        RegionIter { region: self, next: 0, len: self.len() }
+    }
+
+    /// The member ranks, materialized in iteration order.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+}
+
+impl<'a> IntoIterator for &'a Region {
+    type Item = usize;
+    type IntoIter = RegionIter<'a>;
+
+    fn into_iter(self) -> RegionIter<'a> {
+        self.iter()
+    }
+}
+
+/// Row-major iterator over a [`Region`]'s member ranks.
+#[derive(Debug, Clone)]
+pub struct RegionIter<'a> {
+    region: &'a Region,
+    next: usize,
+    len: usize,
+}
+
+impl Iterator for RegionIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.next >= self.len {
+            return None;
+        }
+        let mut rem = self.next;
+        let mut rank = self.region.offset;
+        for k in (0..self.region.sizes.len()).rev() {
+            rank += (rem % self.region.sizes[k]) * self.region.strides[k];
+            rem /= self.region.sizes[k];
+        }
+        self.next += 1;
+        Some(rank)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.len - self.next;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for RegionIter<'_> {}
+
+/// A [`Region`] plus the names of its kept dimensions — the form the
+/// strategy builders hand to communicator registration
+/// ([`crate::sim::CommWorld::register_view`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct View {
+    names: Vec<&'static str>,
+    region: Region,
+}
+
+impl View {
+    /// The line through `point` along `dim`: every rank agreeing with
+    /// `point` on all other dimensions, enumerated in ascending `dim`
+    /// coordinate.  This is exactly the `dim` communicator's member
+    /// list: `along("row", p)` is the column communicator through `p`
+    /// (fixed data/col, varying row), `along("data", p)` the
+    /// data-parallel one.
+    pub fn along(dim: &'static str, point: &Point<'_>) -> View {
+        View::over(&[dim], point)
+    }
+
+    /// The sub-grid through `point` spanned by `dims`, iterated
+    /// row-major in the *given* order (first listed outermost).  Every
+    /// dimension not listed stays fixed at the point's coordinate;
+    /// `over(&["col", "row"], p)` is the whole-tensor-grid communicator
+    /// through `p` in col-outer order.
+    pub fn over(dims: &[&'static str], point: &Point<'_>) -> View {
+        assert!(!dims.is_empty(), "a View needs at least one dimension");
+        let extent = point.extent();
+        let mut base = point.clone();
+        for &dim in dims {
+            base = base.with(dim, 0);
+        }
+        let sizes: Vec<usize> = dims.iter().map(|&d| extent.size(d)).collect();
+        let strides: Vec<usize> = dims.iter().map(|&d| extent.stride(d)).collect();
+        View { names: dims.to_vec(), region: Region::new(base.rank(), sizes, strides) }
+    }
+
+    /// The view covering all of `extent` in its own dimension order.
+    pub fn of(extent: &Extent) -> View {
+        let region = Region::new(0, extent.sizes().to_vec(), extent.strides());
+        View { names: extent.names().to_vec(), region }
+    }
+
+    /// The kept dimension names, in iteration order (outermost first).
+    pub fn names(&self) -> &[&'static str] {
+        &self.names
+    }
+
+    pub fn region(&self) -> &Region {
+        &self.region
+    }
+
+    /// Size of kept dimension `dim`.
+    pub fn size(&self, dim: &str) -> usize {
+        let k = self.names.iter().position(|n| *n == dim);
+        self.region.sizes()[k.unwrap_or_else(|| panic!("view has no dimension {dim:?}"))]
+    }
+
+    pub fn len(&self) -> usize {
+        self.region.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.region.is_empty()
+    }
+
+    /// Member ranks in iteration order (the communicator member list).
+    pub fn ranks(&self) -> Vec<usize> {
+        self.region.ranks()
+    }
+
+    pub fn iter(&self) -> RegionIter<'_> {
+        self.region.iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a View {
+    type Item = usize;
+    type IntoIter = RegionIter<'a>;
+
+    fn into_iter(self) -> RegionIter<'a> {
+        self.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_linearize_and_iterate() {
+        // a 2x3 sub-grid of a 4x5 row-major extent, based at (1, 2)
+        let r = Region::new(7, vec![2, 3], vec![5, 1]);
+        assert_eq!(r.len(), 6);
+        assert!(!r.is_empty());
+        assert_eq!(r.num_dims(), 2);
+        assert_eq!((r.offset(), r.sizes(), r.strides()), (7, &[2, 3][..], &[5, 1][..]));
+        assert_eq!(r.linearize(&[0, 0]), 7);
+        assert_eq!(r.linearize(&[1, 2]), 7 + 5 + 2);
+        assert_eq!(r.ranks(), vec![7, 8, 9, 12, 13, 14]);
+        assert_eq!(r.iter().len(), 6);
+        let via_for: Vec<usize> = (&r).into_iter().collect();
+        assert_eq!(via_for, r.ranks());
+    }
+
+    #[test]
+    fn along_is_the_communicator_line() {
+        // the mesh order: [data, col, row] with rank = d*12 + j*3 + i
+        let e = Extent::new(&[("data", 2), ("col", 4), ("row", 3)]);
+        let p = e.point_of(12 + 2 * 3 + 1); // (d=1, j=2, i=1)
+        let col = p.along("row");
+        assert_eq!(col.names(), &["row"]);
+        assert_eq!(col.len(), 3);
+        assert_eq!(col.size("row"), 3);
+        assert_eq!(col.ranks(), vec![18, 19, 20]); // i = 0, 1, 2
+        let row = p.along("col");
+        assert_eq!(row.ranks(), vec![13, 16, 19, 22]); // j = 0..4
+        let data = p.along("data");
+        assert_eq!(data.ranks(), vec![7, 19]); // d = 0, 1
+        // every member's line is the same set in the same order
+        for &m in &col.ranks() {
+            assert_eq!(e.point_of(m).along("row").ranks(), col.ranks());
+        }
+    }
+
+    #[test]
+    fn over_iterates_in_listed_order() {
+        let e = Extent::new(&[("data", 2), ("col", 2), ("row", 3)]);
+        let p = e.point_of(6 + 5); // (d=1, j=1, i=2)
+        // col outer, row inner: j*3 + i ascending — the xpose group order
+        let grid = p.over(&["col", "row"]);
+        assert_eq!(grid.ranks(), vec![6, 7, 8, 9, 10, 11]);
+        // row outer, col inner: same set, transposed enumeration
+        let t = p.over(&["row", "col"]);
+        assert_eq!(t.ranks(), vec![6, 9, 7, 10, 8, 11]);
+        assert_eq!(p.over(&["row"]).ranks(), p.along("row").ranks());
+    }
+
+    #[test]
+    fn of_covers_the_whole_extent_in_order() {
+        let e = Extent::new(&[("a", 2), ("b", 3)]);
+        let v = View::of(&e);
+        assert_eq!(v.names(), e.names());
+        assert_eq!(v.ranks(), (0..6).collect::<Vec<_>>());
+        assert_eq!(e.view(), v);
+        let via_for: Vec<usize> = (&v).into_iter().collect();
+        assert_eq!(via_for, v.ranks());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn linearize_checks_bounds() {
+        Region::new(0, vec![2, 2], vec![2, 1]).linearize(&[0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no dimension")]
+    fn view_size_checks_names() {
+        let e = Extent::new(&[("a", 2), ("b", 3)]);
+        e.point_of(0).along("a").size("b");
+    }
+}

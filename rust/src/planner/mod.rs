@@ -37,6 +37,15 @@
 //! candidate set, so the refined recommendation is never slower than
 //! the paper's §5 answer.
 //!
+//! Everything the planner enumerates is named-dimension geometry under
+//! the hood ([`crate::ndmesh`]): a mesh candidate is an
+//! [`crate::ndmesh::Extent`] shape ([`Mesh::factorizations`]), and each
+//! [`Placement`] it sweeps is a dimension reorder/tile of the canonical
+//! `["pipe", "data", "col", "row"]` extent
+//! ([`Placement::physical_ranks`]) — so adding a parallel axis extends
+//! the search space by one `(name, size)` pair instead of new index
+//! arithmetic.
+//!
 //! Refinement is cheap at paper scale: each shortlisted `(G_pipe,
 //! mesh)` builds its O(world × ops) program **once** and every placement
 //! re-prices only the O(#groups) communicator parameters

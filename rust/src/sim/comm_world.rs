@@ -25,6 +25,7 @@
 //! behavior.
 
 use super::machine::Machine;
+use crate::ndmesh::View;
 use std::collections::HashMap;
 
 /// Dense handle to an interned communicator group.
@@ -101,6 +102,15 @@ impl CommWorld {
         self.groups.push(GroupInfo { members: members.clone(), size, per_node, bw, lat });
         self.index.insert(members, id);
         GroupId(id)
+    }
+
+    /// [`CommWorld::register`] on a [`View`]-produced member list: the
+    /// view's row-major iteration order *is* the ring order, so
+    /// `register_view(m, &point.along("row"))` interns exactly the
+    /// member list the hand-rolled column-group loop produced (the
+    /// bit-identical invariant of `rust/tests/mesh_golden.rs`).
+    pub fn register_view(&mut self, machine: &Machine, view: &View) -> GroupId {
+        self.register(machine, view.ranks())
     }
 
     #[inline]

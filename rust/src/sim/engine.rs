@@ -348,6 +348,15 @@ impl ProgramSetBuilder {
         comm.register(machine, members)
     }
 
+    /// Intern the member list a [`crate::ndmesh::View`] enumerates —
+    /// the named-dimension form of [`ProgramSetBuilder::group`] the
+    /// strategies use (`b.group_view(&point.along("row"))` is the
+    /// column communicator through `point`).
+    pub fn group_view(&mut self, view: &crate::ndmesh::View) -> GroupId {
+        let ProgramSet { comm, machine, .. } = &mut self.set;
+        comm.register_view(machine, view)
+    }
+
     /// Start the next rank's program.  Ranks sharing a `class_key` share
     /// one op-template; the key is opaque to the builder.
     pub fn begin_rank(&mut self, class_key: u64) {

@@ -21,6 +21,7 @@
 //! [`crate::planner::PlanRequest`].
 
 use crate::mesh::{divisors, Mesh};
+use crate::ndmesh::Extent;
 
 /// How parameter/optimizer state is laid out across the data dimension.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -138,6 +139,14 @@ impl Placement {
 
     /// The full logical→physical permutation for the given shape.
     /// Panics if the placement is not [`Placement::admissible`].
+    ///
+    /// Every named variant is a dimension transform on the canonical
+    /// logical [`Extent`] `["pipe", "data", "col", "row"]`: a reorder
+    /// ([`Extent::remap`]) — for `NodeBlocked`, preceded by tiling the
+    /// grid dimensions ([`Extent::split`]) so node-sized blocks become
+    /// nameable.  The pre-algebra closed forms are preserved in
+    /// [`crate::strategies::reference::physical_ranks`] and pinned
+    /// equal, permutation-for-permutation, by `rust/tests/mesh_golden.rs`.
     pub fn physical_ranks(
         &self,
         g_pipe: usize,
@@ -152,32 +161,26 @@ impl Placement {
              g_c={g_c}) on {gpus_per_node}-GPU nodes",
             self.label()
         );
-        let gt = g_r * g_c;
-        let inner = g_data * gt;
-        let world = g_pipe * inner;
-        if let Placement::Custom(p) = self {
-            return p.clone();
+        let logical =
+            Extent::new(&[("pipe", g_pipe), ("data", g_data), ("col", g_c), ("row", g_r)]);
+        match self {
+            Placement::ColumnMajor => (0..logical.num_ranks()).collect(),
+            // row-major grid: the row index becomes outer of col
+            Placement::RowMajor => logical.remap(&["pipe", "data", "row", "col"]),
+            // the data index outermost across the whole world
+            Placement::DepthOuter => logical.remap(&["data", "pipe", "col", "row"]),
+            // tile the grid into rows x cols node blocks, then lay the
+            // blocks out block-outer: each `(colb, rowb)` block's
+            // `cols * rows = gpus_per_node` members become contiguous
+            Placement::NodeBlocked { rows } => {
+                let cols = gpus_per_node / rows;
+                logical
+                    .split("col", "colb", "coli", cols)
+                    .split("row", "rowb", "rowi", *rows)
+                    .remap(&["pipe", "data", "colb", "rowb", "coli", "rowi"])
+            }
+            Placement::Custom(p) => p.clone(),
         }
-        (0..world)
-            .map(|rank| {
-                let (stage, ir) = (rank / inner, rank % inner);
-                let (d, t) = (ir / gt, ir % gt);
-                let (j, i) = (t / g_r, t % g_r);
-                match self {
-                    Placement::ColumnMajor => rank,
-                    Placement::RowMajor => stage * inner + d * gt + i * g_c + j,
-                    Placement::DepthOuter => (d * g_pipe + stage) * gt + j * g_r + i,
-                    Placement::NodeBlocked { rows } => {
-                        let cols = gpus_per_node / rows;
-                        let (bi, ii) = (i / rows, i % rows);
-                        let (bj, jj) = (j / cols, j % cols);
-                        let g = (bj * (g_r / rows) + bi) * (rows * cols) + jj * rows + ii;
-                        stage * inner + d * gt + g
-                    }
-                    Placement::Custom(_) => unreachable!("handled above"),
-                }
-            })
-            .collect()
     }
 
     /// [`Placement::physical_ranks`], reduced to `None` when the
@@ -423,6 +426,33 @@ mod tests {
         assert!(!Placement::Custom(vec![0, 1]).admissible(1, 1, 2, 2, 4));
         // a custom identity reduces to None like ColumnMajor
         assert_eq!(Placement::Custom(vec![0, 1, 2, 3]).perm(1, 1, 2, 2, 4), None);
+    }
+
+    #[test]
+    fn physical_ranks_match_the_pre_algebra_closed_forms() {
+        // the split/remap derivations against the hand-rolled index
+        // arithmetic preserved in strategies::reference
+        use crate::strategies::reference;
+        let shapes = [(1, 2, 4, 4), (2, 2, 2, 4), (1, 1, 2, 2), (4, 1, 2, 2), (1, 16, 4, 16)];
+        for gpn in [2usize, 4, 8] {
+            for &(gp, gd, gr, gc) in &shapes {
+                let mut pls =
+                    vec![Placement::ColumnMajor, Placement::RowMajor, Placement::DepthOuter];
+                for rows in divisors(gpn) {
+                    pls.push(Placement::NodeBlocked { rows });
+                }
+                for pl in pls {
+                    if !pl.admissible(gp, gd, gr, gc, gpn) {
+                        continue;
+                    }
+                    assert_eq!(
+                        pl.physical_ranks(gp, gd, gr, gc, gpn),
+                        reference::physical_ranks(&pl, gp, gd, gr, gc, gpn),
+                        "{pl:?} on G_pipe={gp} x ({gd}, {gr}, {gc}), gpn={gpn}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -45,9 +45,23 @@
 //! [`crate::sim::CommWorld`].  That keeps program build for the paper's
 //! gpt80b/1024 configuration at O(world) memory instead of
 //! O(world × ops × group size).
+//!
+//! Rank coordinates and communicator member lists are derived through
+//! the named-dimension algebra of [`crate::ndmesh`]: each builder lays
+//! its world out as an [`Extent`] (`["data", "col", "row"]`, with a
+//! leading `"pipe"` for the pipelined builder and the `q^3` cube dims
+//! for Colossal), and every communicator is a
+//! [`crate::ndmesh::View`] line through the rank's point —
+//! `along("row")` is the column communicator, `over(&["col", "row"])`
+//! the whole-grid one.  The pre-algebra builders are preserved verbatim
+//! in [`reference`]; `rust/tests/mesh_golden.rs` (and a dedicated CI
+//! job) pins both paths to bit-identical `ProgramSet`s.
 
-use crate::mesh::{Coord, Mesh};
+pub mod reference;
+
+use crate::mesh::Mesh;
 use crate::models::NetworkDesc;
+use crate::ndmesh::Extent;
 use crate::pipeline::{self, PipelineSchedule, Step};
 use crate::sim::engine::{ProgramSet, ProgramSetBuilder, Stream};
 use crate::sim::Machine;
@@ -322,22 +336,26 @@ fn build_tensor3d(
     perm: Option<Vec<usize>>,
 ) -> ProgramSet {
     let world = mesh.world();
+    let ext = mesh.extent();
     let samples_per_exec = batch as f64 / (mesh.g_data * depth) as f64;
     // depth sharding is the identity when there is no data dimension
     let use_shard = opts.sharded_state && mesh.g_data > 1;
     let mut b = ProgramSetBuilder::new_placed(machine, perm);
 
     for rank in 0..world {
-        let Coord { d, i, j } = mesh.coord_of(rank);
+        let pt = ext.point_of(rank);
+        let (d, i, j) = (pt.coord("data"), pt.coord("row"), pt.coord("col"));
         // one SPMD class: rank 0 builds the template, the rest only bind
         b.begin_rank(0);
         let dp_gid = i * mesh.g_c + j;
-        // this rank's communicators, interned once
-        let col_g = b.group(mesh.col_group(rank));
-        let row_g = b.group(mesh.row_group(rank));
-        let data_g = b.group(mesh.data_group(rank));
+        // this rank's communicators, interned once: the column
+        // communicator is the `row` line through the point, and so on
+        let col_g = b.group_view(&pt.along("row"));
+        let row_g = b.group_view(&pt.along("col"));
+        let data_g = b.group_view(&pt.along("data"));
         let xpose_g = if !transpose_opt && mesh.g_tensor() > 1 {
-            Some(b.group((0..mesh.g_tensor()).map(|t| d * mesh.g_tensor() + t).collect()))
+            // the whole tensor grid through this point, col-outer
+            Some(b.group_view(&pt.over(&["col", "row"])))
         } else {
             None
         };
@@ -617,6 +635,13 @@ fn build_tensor3d_pipeline(
     assert!(!opts.dp_barrier, "the dp-barrier ablation is not modelled for pipelined schedules");
     let inner = mesh.world();
     let world = stages * inner;
+    // the pipelined world: the tensor extent with a leading pipe dim
+    let ext = Extent::new(&[
+        ("pipe", stages),
+        ("data", mesh.g_data),
+        ("col", mesh.g_c),
+        ("row", mesh.g_r),
+    ]);
     // flops-balanced contiguous stage partition (attached compute counted
     // with its host layer)
     let costs: Vec<f64> = net
@@ -639,31 +664,31 @@ fn build_tensor3d_pipeline(
     let mut b = ProgramSetBuilder::new_placed(machine, perm);
 
     for rank in 0..world {
-        let stage = rank / inner;
+        let pt = ext.point_of(rank);
+        let stage = pt.coord("pipe");
         let inner_rank = rank % inner;
-        let Coord { d, i, j } = mesh.coord_of(inner_rank);
+        let (d, i, j) = (pt.coord("data"), pt.coord("row"), pt.coord("col"));
         // one SPMD class per stage: the first rank of each stage builds
         // the templates, its peers only bind
         b.begin_rank(stage as u64);
         let range = ranges[stage].clone();
         let stage_params: f64 = net.layers[range.clone()].iter().map(|l| l.weight_params()).sum();
-        let lift =
-            |g: Vec<usize>| -> Vec<usize> { g.into_iter().map(|r| r + stage * inner).collect() };
         let dp_gid = i * mesh.g_c + j;
-        let col_g = b.group(lift(mesh.col_group(inner_rank)));
-        let row_g = b.group(lift(mesh.row_group(inner_rank)));
-        let data_g = b.group(lift(mesh.data_group(inner_rank)));
+        // the pipe coordinate is fixed by the point, so the same
+        // `along` lines as the plain builder stay within this stage
+        let col_g = b.group_view(&pt.along("row"));
+        let row_g = b.group_view(&pt.along("col"));
+        let data_g = b.group_view(&pt.along("data"));
         let xpose_g = if !transpose_opt && mesh.g_tensor() > 1 {
-            Some(b.group(
-                (0..mesh.g_tensor()).map(|t| stage * inner + d * mesh.g_tensor() + t).collect(),
-            ))
+            Some(b.group_view(&pt.over(&["col", "row"])))
         } else {
             None
         };
         // pair communicators to the same-coordinate ranks of the
         // neighboring stages (both endpoints register the same pair)
-        let prev_g = (stage > 0).then(|| b.group(vec![rank - inner, rank]));
-        let next_g = (stage + 1 < stages).then(|| b.group(vec![rank, rank + inner]));
+        let prev_g = (stage > 0).then(|| b.group(vec![pt.with("pipe", stage - 1).rank(), rank]));
+        let next_g =
+            (stage + 1 < stages).then(|| b.group(vec![rank, pt.with("pipe", stage + 1).rank()]));
         // boundary activation shard after `bl`: (m_local x n/g_c_eff)
         let boundary_bytes = |bl: usize| -> f64 {
             let layer = &net.layers[bl];
@@ -969,33 +994,31 @@ fn build_colossal(net: &NetworkDesc, mesh: &Mesh, batch: usize, machine: &Machin
     let q = (gt as f64).cbrt().round() as usize;
     assert_eq!(q * q * q, gt, "Colossal-AI-3D needs a perfect-cube G_tensor");
     let samples = batch as f64 / mesh.g_data as f64;
+    // the q^3 cube as named dims: t = a + q*b + q^2*c, so "a" is the
+    // innermost (stride-1) dimension of the row-major extent
+    let ext = Extent::new(&[("data", mesh.g_data), ("c", q), ("b", q), ("a", q)]);
     let mut b = ProgramSetBuilder::new(machine);
 
     for rank in 0..world {
-        let d = rank / gt;
+        let pt = ext.point_of(rank);
+        let d = pt.coord("data");
         let t = rank % gt; // position in the cube, flattened
         b.begin_rank(0);
-        // cube coords of t: (a, b, c) with t = a + q*b + q^2*c
-        let (ca, cb, cc) = (t % q, (t / q) % q, t / (q * q));
-        // per-axis face-movement communicators and their tag group-ids
+        let (ca, cb, cc) = (pt.coord("a"), pt.coord("b"), pt.coord("c"));
+        // per-axis face-movement communicators — the "a"/"b"/"c" lines
+        // through the point — and their tag group-ids
         let mut axis_groups = [None; 3];
         let mut axis_gids = [0usize; 3];
-        for axis in 0..3usize {
-            let stride = q.pow(axis as u32);
+        for (axis, dim) in ["a", "b", "c"].into_iter().enumerate() {
             let base = match axis {
                 0 => cb * q + cc * q * q,
                 1 => ca + cc * q * q,
                 _ => ca + cb * q,
             };
-            let group: Vec<usize> = (0..q).map(|x| d * gt + base + x * stride).collect();
-            axis_groups[axis] = Some(b.group(group));
+            axis_groups[axis] = Some(b.group_view(&pt.along(dim)));
             axis_gids[axis] = (d * gt + base) * 4 + axis;
         }
-        let dp_g = if mesh.g_data > 1 {
-            Some(b.group((0..mesh.g_data).map(|dd| dd * gt + t).collect()))
-        } else {
-            None
-        };
+        let dp_g = if mesh.g_data > 1 { Some(b.group_view(&pt.along("data"))) } else { None };
         let mut last: Option<u32> = None;
         // fwd + bwd passes: 1 GEMM fwd, 2 bwd
         for (pass, gemms) in [(PH_FWD, 1usize), (PH_BWD, 2usize)] {

@@ -1,0 +1,877 @@
+//! The pre-algebra strategy builders, preserved verbatim.
+//!
+//! Before the [`crate::ndmesh`] refactor, every builder here derived
+//! rank coordinates, communicator member lists and placement
+//! permutations by hand-rolled index arithmetic.  This module keeps that
+//! code — with the arithmetic inlined locally so it shares *nothing*
+//! with the algebra-based production path — as the baseline for the
+//! bit-identical-`ProgramSet` equivalence gate: `rust/tests/mesh_golden.rs`
+//! builds every layout through both paths and compares interned groups,
+//! op templates, tags and bindings structurally, and a dedicated CI job
+//! runs exactly that test.  (The same pinning pattern as
+//! [`crate::sim::reference`] for the engine rewrite.)
+//!
+//! Do not "improve" this module: its value is that it does not change.
+
+use crate::mesh::Mesh;
+use crate::models::NetworkDesc;
+use crate::pipeline::{self, PipelineSchedule, Step};
+use crate::sim::engine::{ProgramSet, ProgramSetBuilder, Stream};
+use crate::sim::Machine;
+use crate::spec::Placement;
+use crate::strategies::{ScheduleOpts, Strategy, BYTES_PER_ELEM};
+
+// ---------------------------------------------------------------------
+// Hand-rolled mesh arithmetic (the pre-refactor Mesh methods, inlined).
+// Rank layout: rank = d * (G_r * G_c) + j * G_r + i.
+// ---------------------------------------------------------------------
+
+fn coord_of(mesh: &Mesh, rank: usize) -> (usize, usize, usize) {
+    let t = mesh.g_tensor();
+    (rank / t, rank % mesh.g_r, (rank % t) / mesh.g_r) // (d, i, j)
+}
+
+fn rank_of(mesh: &Mesh, d: usize, i: usize, j: usize) -> usize {
+    d * mesh.g_tensor() + j * mesh.g_r + i
+}
+
+fn col_group(mesh: &Mesh, rank: usize) -> Vec<usize> {
+    let (d, _, j) = coord_of(mesh, rank);
+    (0..mesh.g_r).map(|i| rank_of(mesh, d, i, j)).collect()
+}
+
+fn row_group(mesh: &Mesh, rank: usize) -> Vec<usize> {
+    let (d, i, _) = coord_of(mesh, rank);
+    (0..mesh.g_c).map(|j| rank_of(mesh, d, i, j)).collect()
+}
+
+fn data_group(mesh: &Mesh, rank: usize) -> Vec<usize> {
+    let (_, i, j) = coord_of(mesh, rank);
+    (0..mesh.g_data).map(|d| rank_of(mesh, d, i, j)).collect()
+}
+
+// ---------------------------------------------------------------------
+// Hand-rolled placement permutations (the pre-refactor
+// spec::Placement::physical_ranks closed forms, inlined).
+// ---------------------------------------------------------------------
+
+/// The pre-refactor logical→physical closed forms.  Panics if the
+/// placement is not [`Placement::admissible`] (validation logic is
+/// untouched by the refactor, so sharing it proves nothing away).
+pub fn physical_ranks(
+    placement: &Placement,
+    g_pipe: usize,
+    g_data: usize,
+    g_r: usize,
+    g_c: usize,
+    gpus_per_node: usize,
+) -> Vec<usize> {
+    assert!(placement.admissible(g_pipe, g_data, g_r, g_c, gpus_per_node));
+    let gt = g_r * g_c;
+    let inner = g_data * gt;
+    let world = g_pipe * inner;
+    if let Placement::Custom(p) = placement {
+        return p.clone();
+    }
+    (0..world)
+        .map(|rank| {
+            let (stage, ir) = (rank / inner, rank % inner);
+            let (d, t) = (ir / gt, ir % gt);
+            let (j, i) = (t / g_r, t % g_r);
+            match placement {
+                Placement::ColumnMajor => rank,
+                Placement::RowMajor => stage * inner + d * gt + i * g_c + j,
+                Placement::DepthOuter => (d * g_pipe + stage) * gt + j * g_r + i,
+                Placement::NodeBlocked { rows } => {
+                    let cols = gpus_per_node / rows;
+                    let (bi, ii) = (i / rows, i % rows);
+                    let (bj, jj) = (j / cols, j % cols);
+                    let g = (bj * (g_r / rows) + bi) * (rows * cols) + jj * rows + ii;
+                    stage * inner + d * gt + g
+                }
+                Placement::Custom(_) => unreachable!("handled above"),
+            }
+        })
+        .collect()
+}
+
+fn perm(
+    placement: &Placement,
+    g_pipe: usize,
+    g_data: usize,
+    g_r: usize,
+    g_c: usize,
+    gpus_per_node: usize,
+) -> Option<Vec<usize>> {
+    if matches!(placement, Placement::ColumnMajor) {
+        return None;
+    }
+    let p = physical_ranks(placement, g_pipe, g_data, g_r, g_c, gpus_per_node);
+    if p.iter().enumerate().all(|(logical, &phys)| logical == phys) {
+        None
+    } else {
+        Some(p)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tag packing (verbatim copies of the production constants/packers —
+// these are pure bit layout, not mesh math, and must stay identical).
+// ---------------------------------------------------------------------
+
+fn tag(phase: u64, layer: usize, shard: usize, group_kind: u64, group_id: usize) -> u64 {
+    (phase << 58)
+        | ((layer as u64) << 38)
+        | ((shard as u64) << 30)
+        | (group_kind << 27)
+        | group_id as u64
+}
+
+const GK_COL: u64 = 0;
+const GK_ROW: u64 = 1;
+const GK_DATA: u64 = 2;
+const GK_P2P: u64 = 3;
+
+const PH_FWD: u64 = 1;
+const PH_BWD: u64 = 2;
+const PH_XPOSE: u64 = 3;
+const PH_DP: u64 = 4;
+const PH_WGATHER: u64 = 5;
+const PH_GSCATTER: u64 = 6;
+const PH_P2P_FWD: u64 = 7;
+const PH_P2P_BWD: u64 = 8;
+
+fn ptag(
+    phase: u64,
+    mb: usize,
+    layer: usize,
+    shard: usize,
+    group_kind: u64,
+    group_id: usize,
+) -> u64 {
+    debug_assert!(
+        mb < (1 << 14) && layer < (1 << 14) && shard < (1 << 6) && group_id < (1 << 21),
+        "pipelined tag field overflow"
+    );
+    (phase << 58)
+        | ((mb as u64) << 44)
+        | ((layer as u64) << 30)
+        | ((shard as u64) << 24)
+        | (group_kind << 21)
+        | group_id as u64
+}
+
+// ---------------------------------------------------------------------
+// The pre-refactor builders.
+// ---------------------------------------------------------------------
+
+/// The pre-refactor placement-aware dispatch — the reference twin of the
+/// production `build_placed`, for the equivalence gate.
+pub fn build_placed(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh_in: &Mesh,
+    batch: usize,
+    machine: &Machine,
+    opts: ScheduleOpts,
+    placement: &Placement,
+) -> ProgramSet {
+    let mesh = strategy.effective_mesh(mesh_in);
+    let stages = match strategy {
+        Strategy::Tensor3dPipeline { stages, .. } => stages.max(1),
+        _ => 1,
+    };
+    let p = perm(placement, stages, mesh.g_data, mesh.g_r, mesh.g_c, machine.gpus_per_node);
+    match strategy {
+        Strategy::Tensor3d { depth, transpose_opt } => {
+            build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts, machine, p)
+        }
+        Strategy::Megatron => build_tensor3d(net, &mesh, batch, 1, true, opts, machine, p),
+        Strategy::Colossal3d => {
+            assert!(!opts.sharded_state, "sharded state is not modelled for Colossal-AI-3D");
+            assert!(p.is_none(), "placement is not modelled for Colossal-AI-3D");
+            build_colossal(net, &mesh, batch, machine)
+        }
+        Strategy::Tensor3dPipeline { depth, transpose_opt, stages, microbatches } => {
+            if stages <= 1 {
+                build_tensor3d(net, &mesh, batch, depth, transpose_opt, opts, machine, p)
+            } else {
+                build_tensor3d_pipeline(
+                    net,
+                    &mesh,
+                    batch,
+                    depth,
+                    transpose_opt,
+                    stages,
+                    microbatches,
+                    opts,
+                    machine,
+                    p,
+                )
+            }
+        }
+    }
+}
+
+fn build_tensor3d(
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    depth: usize,
+    transpose_opt: bool,
+    opts: ScheduleOpts,
+    machine: &Machine,
+    perm: Option<Vec<usize>>,
+) -> ProgramSet {
+    let world = mesh.world();
+    let samples_per_exec = batch as f64 / (mesh.g_data * depth) as f64;
+    let use_shard = opts.sharded_state && mesh.g_data > 1;
+    let mut b = ProgramSetBuilder::new_placed(machine, perm);
+
+    for rank in 0..world {
+        let (d, i, j) = coord_of(mesh, rank);
+        b.begin_rank(0);
+        let dp_gid = i * mesh.g_c + j;
+        let col_g = b.group(col_group(mesh, rank));
+        let row_g = b.group(row_group(mesh, rank));
+        let data_g = b.group(data_group(mesh, rank));
+        let xpose_g = if !transpose_opt && mesh.g_tensor() > 1 {
+            Some(b.group((0..mesh.g_tensor()).map(|t| d * mesh.g_tensor() + t).collect()))
+        } else {
+            None
+        };
+        let mut last_fwd: Vec<Option<u32>> = vec![None; depth];
+
+        for (li, layer) in net.layers.iter().enumerate() {
+            let wgather = if use_shard {
+                let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                let mut deps: Vec<u32> = Vec::new();
+                if opts.dp_barrier {
+                    for s in 0..depth {
+                        if let Some(x) = last_fwd[s] {
+                            deps.push(x);
+                        }
+                    }
+                }
+                Some(b.all_gather(
+                    || format!("wgather.{}", layer.name),
+                    tag(PH_WGATHER, li, 0, GK_DATA, dp_gid),
+                    data_g,
+                    bytes,
+                    Stream::CommDp,
+                    deps,
+                ))
+            } else {
+                None
+            };
+            let (fwd_gk, fwd_gid, g_r_eff, g_c_eff) = if layer.transposed && transpose_opt {
+                (GK_ROW, d * mesh.g_r + i, mesh.g_c, mesh.g_r)
+            } else {
+                (GK_COL, d * mesh.g_c + j, mesh.g_r, mesh.g_c)
+            };
+            let m_local = samples_per_exec * layer.rows_per_sample as f64;
+            let flops = layer.fwd_flops(samples_per_exec) / mesh.g_tensor() as f64;
+            let min_dim = m_local
+                .min(layer.k as f64 / g_r_eff as f64)
+                .min(layer.n as f64 / g_c_eff as f64);
+            let ar_bytes = m_local * layer.n as f64 / g_c_eff as f64 * BYTES_PER_ELEM;
+            let fwd_group = if fwd_gk == GK_COL { col_g } else { row_g };
+
+            for s in 0..depth {
+                let mut deps = Vec::new();
+                if let Some(prev) = last_fwd[s] {
+                    deps.push(prev);
+                }
+                if let Some(wg) = wgather {
+                    deps.push(wg);
+                }
+                let mm = b.compute(|| format!("s{s}.fwd.{}", layer.name), flops, min_dim, deps);
+                let ar = b.all_reduce(
+                    || format!("s{s}.fwd-ar.{}", layer.name),
+                    tag(PH_FWD, li, s, fwd_gk, fwd_gid),
+                    fwd_group,
+                    ar_bytes,
+                    Stream::Comm,
+                    vec![mm],
+                );
+                let mut tail = ar;
+                for att in net.attached.iter().filter(|a| a.after_layer == li) {
+                    let aflops = att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
+                    tail = b.compute(
+                        || format!("s{s}.fwd.{}", att.name),
+                        aflops,
+                        m_local,
+                        vec![tail],
+                    );
+                }
+                if layer.transposed && !transpose_opt && mesh.g_tensor() > 1 {
+                    let xp_bytes =
+                        m_local * layer.n as f64 / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                    tail = b.all_reduce(
+                        || format!("s{s}.xpose.{}", layer.name),
+                        tag(PH_XPOSE, li, s, GK_COL, d),
+                        xpose_g.expect("xpose group registered when §4.1 is off"),
+                        xp_bytes * mesh.g_tensor() as f64 / 2.0,
+                        Stream::Comm,
+                        vec![ar],
+                    );
+                }
+                last_fwd[s] = Some(tail);
+            }
+        }
+
+        let mut last_bwd: Vec<Option<u32>> = last_fwd.clone();
+        let mut last_dw: Vec<Option<u32>> = vec![None; depth];
+        let mut gscatters: Vec<u32> = Vec::new();
+        let mut last_rs: Option<u32> = None;
+        for (li, layer) in net.layers.iter().enumerate().rev() {
+            let (bwd_gk, bwd_gid, g_r_eff, g_c_eff) = if layer.transposed && transpose_opt {
+                (GK_COL, d * mesh.g_c + j, mesh.g_c, mesh.g_r)
+            } else {
+                (GK_ROW, d * mesh.g_r + i, mesh.g_r, mesh.g_c)
+            };
+            let m_local = samples_per_exec * layer.rows_per_sample as f64;
+            let flops = layer.fwd_flops(samples_per_exec) / mesh.g_tensor() as f64;
+            let min_dim = m_local
+                .min(layer.k as f64 / g_r_eff as f64)
+                .min(layer.n as f64 / g_c_eff as f64);
+            let ar_bytes = m_local * layer.k as f64 / g_r_eff as f64 * BYTES_PER_ELEM;
+            let bwd_group = if bwd_gk == GK_COL { col_g } else { row_g };
+            for s in 0..depth {
+                let mut deps = Vec::new();
+                if let Some(prev) = last_bwd[s] {
+                    deps.push(prev);
+                }
+                if opts.dp_barrier {
+                    if let Some(rs) = last_rs {
+                        deps.push(rs);
+                    }
+                }
+                let rc = b.compute(
+                    || format!("s{s}.recompute.{}", layer.name),
+                    flops,
+                    min_dim,
+                    deps,
+                );
+                let mut deps = vec![rc];
+                for att in net.attached.iter().filter(|a| a.after_layer == li) {
+                    let aflops =
+                        3.0 * att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
+                    let ab = b.compute(
+                        || format!("s{s}.bwd.{}", att.name),
+                        aflops,
+                        m_local,
+                        deps.clone(),
+                    );
+                    deps = vec![ab];
+                }
+                let dx = b.compute(
+                    || format!("s{s}.bwd-dx.{}", layer.name),
+                    flops,
+                    min_dim,
+                    deps.clone(),
+                );
+                let ar = b.all_reduce(
+                    || format!("s{s}.bwd-ar.{}", layer.name),
+                    tag(PH_BWD, li, s, bwd_gk, bwd_gid),
+                    bwd_group,
+                    ar_bytes,
+                    Stream::Comm,
+                    vec![dx],
+                );
+                let dw = b.compute(|| format!("s{s}.bwd-dw.{}", layer.name), flops, min_dim, deps);
+                last_bwd[s] = Some(ar);
+                last_dw[s] = Some(dw);
+            }
+            if use_shard {
+                let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                let deps: Vec<u32> = (0..depth).filter_map(|s| last_dw[s]).collect();
+                let rs = b.reduce_scatter(
+                    || format!("gscatter.{}", layer.name),
+                    tag(PH_GSCATTER, li, 0, GK_DATA, dp_gid),
+                    data_g,
+                    bytes,
+                    Stream::CommDp,
+                    deps,
+                );
+                gscatters.push(rs);
+                last_rs = Some(rs);
+            }
+        }
+
+        if use_shard {
+            let deps: Vec<u32> = gscatters.clone();
+            b.compute(
+                || "adamw-shard".into(),
+                12.0 * net.fc_params() / (mesh.g_tensor() * mesh.g_data) as f64,
+                1e9,
+                deps,
+            );
+        }
+
+        if mesh.g_data > 1 && !use_shard {
+            let grad_bytes = net.fc_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+            let mut deps: Vec<u32> = Vec::new();
+            for s in 0..depth {
+                if let Some(x) = last_dw[s] {
+                    deps.push(x);
+                }
+                if let Some(x) = last_bwd[s] {
+                    deps.push(x);
+                }
+            }
+            let dp = b.all_reduce(
+                || "dp-grad-ar".into(),
+                tag(PH_DP, 0, 0, GK_DATA, i * mesh.g_c + j),
+                data_g,
+                grad_bytes,
+                Stream::Comm,
+                deps,
+            );
+            b.compute(
+                || "adamw".into(),
+                12.0 * net.fc_params() / mesh.g_tensor() as f64,
+                1e9,
+                vec![dp],
+            );
+        }
+    }
+    b.finish()
+}
+
+fn build_tensor3d_pipeline(
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    depth: usize,
+    transpose_opt: bool,
+    stages: usize,
+    microbatches: usize,
+    opts: ScheduleOpts,
+    machine: &Machine,
+    perm: Option<Vec<usize>>,
+) -> ProgramSet {
+    assert!(stages >= 2, "build_tensor3d_pipeline wants stages >= 2 (1 routes to build_tensor3d)");
+    assert!(microbatches >= 1, "pipelining needs at least one microbatch");
+    assert!(
+        net.layers.len() >= stages,
+        "cannot split {} layers into {stages} pipeline stages",
+        net.layers.len()
+    );
+    assert!(!opts.dp_barrier, "the dp-barrier ablation is not modelled for pipelined schedules");
+    let inner = mesh.world();
+    let world = stages * inner;
+    let costs: Vec<f64> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| {
+            l.fwd_flops(1.0)
+                + net
+                    .attached
+                    .iter()
+                    .filter(|a| a.after_layer == li)
+                    .map(|a| a.fwd_flops_per_sample)
+                    .sum::<f64>()
+        })
+        .collect();
+    let ranges = pipeline::partition_layers(&costs, stages);
+    let samples_per_exec = batch as f64 / (mesh.g_data * microbatches * depth) as f64;
+    let use_shard = opts.sharded_state && mesh.g_data > 1;
+    let mut b = ProgramSetBuilder::new_placed(machine, perm);
+
+    for rank in 0..world {
+        let stage = rank / inner;
+        let inner_rank = rank % inner;
+        let (d, i, j) = coord_of(mesh, inner_rank);
+        b.begin_rank(stage as u64);
+        let range = ranges[stage].clone();
+        let stage_params: f64 = net.layers[range.clone()].iter().map(|l| l.weight_params()).sum();
+        let lift =
+            |g: Vec<usize>| -> Vec<usize> { g.into_iter().map(|r| r + stage * inner).collect() };
+        let dp_gid = i * mesh.g_c + j;
+        let col_g = b.group(lift(col_group(mesh, inner_rank)));
+        let row_g = b.group(lift(row_group(mesh, inner_rank)));
+        let data_g = b.group(lift(data_group(mesh, inner_rank)));
+        let xpose_g = if !transpose_opt && mesh.g_tensor() > 1 {
+            Some(b.group(
+                (0..mesh.g_tensor()).map(|t| stage * inner + d * mesh.g_tensor() + t).collect(),
+            ))
+        } else {
+            None
+        };
+        let prev_g = (stage > 0).then(|| b.group(vec![rank - inner, rank]));
+        let next_g = (stage + 1 < stages).then(|| b.group(vec![rank, rank + inner]));
+        let boundary_bytes = |bl: usize| -> f64 {
+            let layer = &net.layers[bl];
+            let g_c_eff = if layer.transposed && transpose_opt { mesh.g_r } else { mesh.g_c };
+            samples_per_exec * layer.rows_per_sample as f64 * layer.n as f64 / g_c_eff as f64
+                * BYTES_PER_ELEM
+        };
+        let fwd_in_bytes = (stage > 0).then(|| boundary_bytes(range.start - 1));
+        let fwd_out_bytes = (stage + 1 < stages).then(|| boundary_bytes(range.end - 1));
+
+        let mut wgather: Vec<Option<u32>> = vec![None; net.layers.len()];
+        if use_shard {
+            for li in range.clone() {
+                let layer = &net.layers[li];
+                let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                wgather[li] = Some(b.all_gather(
+                    || format!("wgather.{}", layer.name),
+                    ptag(PH_WGATHER, 0, li, 0, GK_DATA, dp_gid),
+                    data_g,
+                    bytes,
+                    Stream::CommDp,
+                    Vec::new(),
+                ));
+            }
+        }
+
+        let mut fwd_tail: Vec<Vec<Option<u32>>> = vec![vec![None; depth]; microbatches];
+        let mut final_dw: Vec<Vec<u32>> = vec![Vec::new(); net.layers.len()];
+        let mut last_dw: Vec<Option<u32>> = vec![None; depth];
+        let mut last_bwd: Vec<Option<u32>> = vec![None; depth];
+
+        for step in pipeline::steps(PipelineSchedule::OneFOneB, stage, stages, microbatches) {
+            match step {
+                Step::Fwd(mb) => {
+                    let mut cur: Vec<Option<u32>> = vec![None; depth];
+                    if let (Some(pg), Some(bytes)) = (prev_g, fwd_in_bytes) {
+                        for (s, c) in cur.iter_mut().enumerate() {
+                            *c = Some(b.recv(
+                                || format!("s{s}.p2p-fwd-in"),
+                                ptag(PH_P2P_FWD, mb, stage, s, GK_P2P, inner_rank),
+                                pg,
+                                bytes,
+                                Vec::new(),
+                            ));
+                        }
+                    }
+                    for li in range.clone() {
+                        let layer = &net.layers[li];
+                        let (fwd_gk, fwd_gid, g_r_eff, g_c_eff) =
+                            if layer.transposed && transpose_opt {
+                                (GK_ROW, d * mesh.g_r + i, mesh.g_c, mesh.g_r)
+                            } else {
+                                (GK_COL, d * mesh.g_c + j, mesh.g_r, mesh.g_c)
+                            };
+                        let m_local = samples_per_exec * layer.rows_per_sample as f64;
+                        let flops = layer.fwd_flops(samples_per_exec) / mesh.g_tensor() as f64;
+                        let min_dim = m_local
+                            .min(layer.k as f64 / g_r_eff as f64)
+                            .min(layer.n as f64 / g_c_eff as f64);
+                        let ar_bytes = m_local * layer.n as f64 / g_c_eff as f64 * BYTES_PER_ELEM;
+                        let fwd_group = if fwd_gk == GK_COL { col_g } else { row_g };
+                        for s in 0..depth {
+                            let mut deps = Vec::new();
+                            if let Some(prev) = cur[s] {
+                                deps.push(prev);
+                            }
+                            if let Some(wg) = wgather[li] {
+                                deps.push(wg);
+                            }
+                            let mm = b.compute(
+                                || format!("s{s}.fwd.{}", layer.name),
+                                flops,
+                                min_dim,
+                                deps,
+                            );
+                            let ar = b.all_reduce(
+                                || format!("s{s}.fwd-ar.{}", layer.name),
+                                ptag(PH_FWD, mb, li, s, fwd_gk, fwd_gid),
+                                fwd_group,
+                                ar_bytes,
+                                Stream::Comm,
+                                vec![mm],
+                            );
+                            let mut tail = ar;
+                            for att in net.attached.iter().filter(|a| a.after_layer == li) {
+                                let aflops =
+                                    att.fwd_flops_per_sample * samples_per_exec / mesh.g_c as f64;
+                                tail = b.compute(
+                                    || format!("s{s}.fwd.{}", att.name),
+                                    aflops,
+                                    m_local,
+                                    vec![tail],
+                                );
+                            }
+                            if layer.transposed && !transpose_opt && mesh.g_tensor() > 1 {
+                                let xp_bytes = m_local * layer.n as f64
+                                    / mesh.g_tensor() as f64
+                                    * BYTES_PER_ELEM;
+                                tail = b.all_reduce(
+                                    || format!("s{s}.xpose.{}", layer.name),
+                                    ptag(PH_XPOSE, mb, li, s, GK_COL, d),
+                                    xpose_g.expect("xpose group registered when §4.1 is off"),
+                                    xp_bytes * mesh.g_tensor() as f64 / 2.0,
+                                    Stream::Comm,
+                                    vec![ar],
+                                );
+                            }
+                            cur[s] = Some(tail);
+                        }
+                    }
+                    if let (Some(ng), Some(bytes)) = (next_g, fwd_out_bytes) {
+                        for (s, c) in cur.iter().enumerate() {
+                            b.send(
+                                || format!("s{s}.p2p-fwd-out"),
+                                ptag(PH_P2P_FWD, mb, stage + 1, s, GK_P2P, inner_rank),
+                                ng,
+                                bytes,
+                                vec![c.expect("stage owns at least one layer")],
+                            );
+                        }
+                    }
+                    fwd_tail[mb] = cur;
+                }
+                Step::Bwd(mb) => {
+                    let mut rx: Vec<Option<u32>> = vec![None; depth];
+                    if let (Some(ng), Some(bytes)) = (next_g, fwd_out_bytes) {
+                        for (s, r) in rx.iter_mut().enumerate() {
+                            *r = Some(b.recv(
+                                || format!("s{s}.p2p-bwd-in"),
+                                ptag(PH_P2P_BWD, mb, stage + 1, s, GK_P2P, inner_rank),
+                                ng,
+                                bytes,
+                                Vec::new(),
+                            ));
+                        }
+                    }
+                    let mut cur: Vec<Option<u32>> = vec![None; depth];
+                    for li in range.clone().rev() {
+                        let layer = &net.layers[li];
+                        let (bwd_gk, bwd_gid, g_r_eff, g_c_eff) =
+                            if layer.transposed && transpose_opt {
+                                (GK_COL, d * mesh.g_c + j, mesh.g_c, mesh.g_r)
+                            } else {
+                                (GK_ROW, d * mesh.g_r + i, mesh.g_r, mesh.g_c)
+                            };
+                        let m_local = samples_per_exec * layer.rows_per_sample as f64;
+                        let flops = layer.fwd_flops(samples_per_exec) / mesh.g_tensor() as f64;
+                        let min_dim = m_local
+                            .min(layer.k as f64 / g_r_eff as f64)
+                            .min(layer.n as f64 / g_c_eff as f64);
+                        let ar_bytes = m_local * layer.k as f64 / g_r_eff as f64 * BYTES_PER_ELEM;
+                        let bwd_group = if bwd_gk == GK_COL { col_g } else { row_g };
+                        for s in 0..depth {
+                            let mut deps = Vec::new();
+                            if let Some(prev) = cur[s] {
+                                deps.push(prev);
+                            } else {
+                                if let Some(ft) = fwd_tail[mb][s] {
+                                    deps.push(ft);
+                                }
+                                if let Some(r) = rx[s] {
+                                    deps.push(r);
+                                }
+                            }
+                            let rc = b.compute(
+                                || format!("s{s}.recompute.{}", layer.name),
+                                flops,
+                                min_dim,
+                                deps,
+                            );
+                            let mut deps = vec![rc];
+                            for att in net.attached.iter().filter(|a| a.after_layer == li) {
+                                let aflops = 3.0 * att.fwd_flops_per_sample * samples_per_exec
+                                    / mesh.g_c as f64;
+                                let ab = b.compute(
+                                    || format!("s{s}.bwd.{}", att.name),
+                                    aflops,
+                                    m_local,
+                                    deps.clone(),
+                                );
+                                deps = vec![ab];
+                            }
+                            let dx = b.compute(
+                                || format!("s{s}.bwd-dx.{}", layer.name),
+                                flops,
+                                min_dim,
+                                deps.clone(),
+                            );
+                            let ar = b.all_reduce(
+                                || format!("s{s}.bwd-ar.{}", layer.name),
+                                ptag(PH_BWD, mb, li, s, bwd_gk, bwd_gid),
+                                bwd_group,
+                                ar_bytes,
+                                Stream::Comm,
+                                vec![dx],
+                            );
+                            let dw = b.compute(
+                                || format!("s{s}.bwd-dw.{}", layer.name),
+                                flops,
+                                min_dim,
+                                deps,
+                            );
+                            cur[s] = Some(ar);
+                            last_bwd[s] = Some(ar);
+                            last_dw[s] = Some(dw);
+                            if mb == microbatches - 1 {
+                                final_dw[li].push(dw);
+                            }
+                        }
+                    }
+                    if let (Some(pg), Some(bytes)) = (prev_g, fwd_in_bytes) {
+                        for (s, c) in cur.iter().enumerate() {
+                            b.send(
+                                || format!("s{s}.p2p-bwd-out"),
+                                ptag(PH_P2P_BWD, mb, stage, s, GK_P2P, inner_rank),
+                                pg,
+                                bytes,
+                                vec![c.expect("stage owns at least one layer")],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        if use_shard {
+            let mut gscatters: Vec<u32> = Vec::new();
+            for li in range.clone().rev() {
+                let layer = &net.layers[li];
+                let bytes = layer.weight_params() / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+                let rs = b.reduce_scatter(
+                    || format!("gscatter.{}", layer.name),
+                    ptag(PH_GSCATTER, 0, li, 0, GK_DATA, dp_gid),
+                    data_g,
+                    bytes,
+                    Stream::CommDp,
+                    final_dw[li].clone(),
+                );
+                gscatters.push(rs);
+            }
+            b.compute(
+                || "adamw-shard".into(),
+                12.0 * stage_params / (mesh.g_tensor() * mesh.g_data) as f64,
+                1e9,
+                gscatters,
+            );
+        }
+        if mesh.g_data > 1 && !use_shard {
+            let grad_bytes = stage_params / mesh.g_tensor() as f64 * BYTES_PER_ELEM;
+            let mut deps: Vec<u32> = Vec::new();
+            for s in 0..depth {
+                if let Some(x) = last_dw[s] {
+                    deps.push(x);
+                }
+                if let Some(x) = last_bwd[s] {
+                    deps.push(x);
+                }
+            }
+            let dp = b.all_reduce(
+                || "dp-grad-ar".into(),
+                ptag(PH_DP, 0, range.start, 0, GK_DATA, dp_gid),
+                data_g,
+                grad_bytes,
+                Stream::Comm,
+                deps,
+            );
+            b.compute(
+                || "adamw".into(),
+                12.0 * stage_params / mesh.g_tensor() as f64,
+                1e9,
+                vec![dp],
+            );
+        }
+    }
+    b.finish()
+}
+
+fn build_colossal(net: &NetworkDesc, mesh: &Mesh, batch: usize, machine: &Machine) -> ProgramSet {
+    let world = mesh.world();
+    let gt = mesh.g_tensor();
+    let q = (gt as f64).cbrt().round() as usize;
+    assert_eq!(q * q * q, gt, "Colossal-AI-3D needs a perfect-cube G_tensor");
+    let samples = batch as f64 / mesh.g_data as f64;
+    let mut b = ProgramSetBuilder::new(machine);
+
+    for rank in 0..world {
+        let d = rank / gt;
+        let t = rank % gt;
+        b.begin_rank(0);
+        let (ca, cb, cc) = (t % q, (t / q) % q, t / (q * q));
+        let mut axis_groups = [None; 3];
+        let mut axis_gids = [0usize; 3];
+        for axis in 0..3usize {
+            let stride = q.pow(axis as u32);
+            let base = match axis {
+                0 => cb * q + cc * q * q,
+                1 => ca + cc * q * q,
+                _ => ca + cb * q,
+            };
+            let group: Vec<usize> = (0..q).map(|x| d * gt + base + x * stride).collect();
+            axis_groups[axis] = Some(b.group(group));
+            axis_gids[axis] = (d * gt + base) * 4 + axis;
+        }
+        let dp_g = if mesh.g_data > 1 {
+            Some(b.group((0..mesh.g_data).map(|dd| dd * gt + t).collect()))
+        } else {
+            None
+        };
+        let mut last: Option<u32> = None;
+        for (pass, gemms) in [(PH_FWD, 1usize), (PH_BWD, 2usize)] {
+            let layer_iter: Vec<usize> = if pass == PH_FWD {
+                (0..net.layers.len()).collect()
+            } else {
+                (0..net.layers.len()).rev().collect()
+            };
+            for li in layer_iter {
+                let layer = &net.layers[li];
+                let m = samples * layer.rows_per_sample as f64;
+                let (k, n) = (layer.k as f64, layer.n as f64);
+                for gemm in 0..gemms {
+                    let flops = layer.fwd_flops(samples) / gt as f64;
+                    let min_dim = (m / q as f64).min(k / q as f64).min(n / q as f64);
+                    let deps = last.map(|prev| vec![prev]).unwrap_or_default();
+                    let mm = b.compute(
+                        || {
+                            format!(
+                                "cai.{}.{}.g{gemm}",
+                                if pass == PH_FWD { "f" } else { "b" },
+                                layer.name
+                            )
+                        },
+                        flops,
+                        min_dim,
+                        deps,
+                    );
+                    let faces = [m * k, k * n, m * n];
+                    let mut prev = mm;
+                    for (axis, face) in faces.iter().enumerate() {
+                        let vol = face / (q * q) as f64 * BYTES_PER_ELEM;
+                        let buf = vol / 2.0;
+                        let ar = b.all_reduce(
+                            || {
+                                format!(
+                                    "cai.ar{axis}.{}.{li}.g{gemm}",
+                                    if pass == PH_FWD { "f" } else { "b" }
+                                )
+                            },
+                            tag(pass, li * 16 + gemm * 4 + axis, 0, GK_COL, axis_gids[axis]),
+                            axis_groups[axis].expect("axis group registered above"),
+                            buf,
+                            Stream::Comm,
+                            vec![prev],
+                        );
+                        prev = ar;
+                    }
+                    last = Some(prev);
+                }
+            }
+        }
+        if mesh.g_data > 1 {
+            let grad_bytes = net.fc_params() / gt as f64 * BYTES_PER_ELEM;
+            let deps = last.map(|x| vec![x]).unwrap_or_default();
+            b.all_reduce(
+                || "dp-grad-ar".into(),
+                tag(PH_DP, 0, 0, GK_DATA, t),
+                dp_g.expect("data group registered when g_data > 1"),
+                grad_bytes,
+                Stream::Comm,
+                deps,
+            );
+        }
+    }
+    b.finish()
+}

@@ -1,0 +1,341 @@
+//! Equivalence gate for the named-dimension mesh algebra.
+//!
+//! PR 6 rebased every strategy builder onto `ndmesh`: per-rank
+//! coordinates come from `Extent::point_of`, communicator member lists
+//! from `View::along`/`View::over`, and `Placement` permutations from
+//! `Extent::remap`/`Extent::split`.  That rebase is required to be a
+//! pure refactor — the algebra must reproduce the hand-rolled index
+//! arithmetic *exactly*, not merely up to simulation results.
+//!
+//! So this suite pins **bit-identical `ProgramSet`s**: for every
+//! strategy/mesh/machine/schedule shape and every placement exercised
+//! by `rust/tests/sim_golden.rs` (plain, pipelined, placed — named
+//! variants and seeded `Custom` permutations), the algebra-built
+//! program set is compared field for field against
+//! `strategies::reference` — the verbatim pre-algebra builders, kept
+//! frozen for exactly this purpose.  Compared surface: interned
+//! communicator groups in registration order (members, ring-pricing
+//! parameters), every op's name/kind/stream/deps per class, the
+//! per-stream worklists and slot counts, the rank→class map, every
+//! rank's tag bindings, and the rendezvous count.
+//!
+//! CI runs this as its own `mesh-equivalence` job; it is the gate that
+//! lets future PRs extend the algebra (new dimensions, new views)
+//! knowing any drift from the pre-refactor programs fails loudly.
+
+use tensor3d::mesh::Mesh;
+use tensor3d::models::{gpt, unet, NetworkDesc};
+use tensor3d::sim::{GroupId, Machine, ProgramSet};
+use tensor3d::spec::{Layout, Placement, StateMode};
+use tensor3d::strategies::{self, reference, ScheduleOpts, Strategy};
+use tensor3d::util::rng::Rng;
+
+fn small_net() -> NetworkDesc {
+    gpt::GptDims { vocab: 8192, hidden: 1024, layers: 4, heads: 8, seq: 512 }.network()
+}
+
+/// Field-for-field structural equality of two [`ProgramSet`]s.  Float
+/// parameters (ring bandwidth/latency, op byte counts) are compared on
+/// bits — both sides must run the *same* arithmetic, not similar
+/// arithmetic.
+fn assert_same_program_set(name: &str, got: &ProgramSet, want: &ProgramSet) {
+    assert_eq!(got.comm.len(), want.comm.len(), "{name}: communicator count");
+    for id in 0..want.comm.len() {
+        let g = got.comm.group(GroupId(id as u32));
+        let w = want.comm.group(GroupId(id as u32));
+        assert_eq!(g.members, w.members, "{name}: group {id} members");
+        assert_eq!(g.size, w.size, "{name}: group {id} size");
+        assert_eq!(g.per_node, w.per_node, "{name}: group {id} per_node");
+        assert_eq!(g.bw.to_bits(), w.bw.to_bits(), "{name}: group {id} bw");
+        assert_eq!(g.lat.to_bits(), w.lat.to_bits(), "{name}: group {id} lat");
+    }
+    assert_eq!(got.classes.len(), want.classes.len(), "{name}: class count");
+    for (c, (gc, wc)) in got.classes.iter().zip(&want.classes).enumerate() {
+        assert_eq!(gc.ops.len(), wc.ops.len(), "{name}: class {c} op count");
+        for (i, (go, wo)) in gc.ops.iter().zip(&wc.ops).enumerate() {
+            let (gn, wn) = (got.names.get(go.name), want.names.get(wo.name));
+            assert_eq!(gn, wn, "{name}: class {c} op {i} name");
+            assert_eq!(go.kind, wo.kind, "{name}: class {c} op {i} ({wn}) kind");
+            assert_eq!(go.stream, wo.stream, "{name}: class {c} op {i} ({wn}) stream");
+            assert_eq!(go.deps, wo.deps, "{name}: class {c} op {i} ({wn}) deps");
+        }
+        assert_eq!(gc.stream_ops, wc.stream_ops, "{name}: class {c} stream worklists");
+        assert_eq!(gc.n_slots, wc.n_slots, "{name}: class {c} binding slots");
+    }
+    assert_eq!(got.rank_class, want.rank_class, "{name}: rank→class map");
+    assert_eq!(got.bindings.len(), want.bindings.len(), "{name}: bound rank count");
+    for (r, (gb, wb)) in got.bindings.iter().zip(&want.bindings).enumerate() {
+        assert_eq!(gb.len(), wb.len(), "{name}: rank {r} binding count");
+        for (s, (g, w)) in gb.iter().zip(wb).enumerate() {
+            assert_eq!(g.tag, w.tag, "{name}: rank {r} slot {s} tag");
+            assert_eq!(g.group, w.group, "{name}: rank {r} slot {s} group");
+            assert_eq!(g.rv, w.rv, "{name}: rank {r} slot {s} rendezvous id");
+        }
+    }
+    assert_eq!(got.n_rendezvous, want.n_rendezvous, "{name}: rendezvous count");
+}
+
+/// The reference twin of [`strategies::build`]: the same
+/// `Layout`→`Strategy` lowering, routed into the frozen pre-algebra
+/// builders.
+fn reference_build(
+    layout: &Layout,
+    net: &NetworkDesc,
+    batch: usize,
+    machine: &Machine,
+) -> ProgramSet {
+    let strategy = Strategy::Tensor3dPipeline {
+        depth: layout.depth,
+        transpose_opt: true,
+        stages: layout.g_pipe,
+        microbatches: layout.microbatches,
+    };
+    let opts = ScheduleOpts {
+        sharded_state: layout.state == StateMode::DepthSharded,
+        dp_barrier: false,
+    };
+    reference::build_placed(strategy, net, &layout.mesh(), batch, machine, opts, &layout.placement)
+}
+
+struct Case {
+    name: &'static str,
+    strategy: Strategy,
+    net: NetworkDesc,
+    mesh: Mesh,
+    batch: usize,
+    machine: Machine,
+    opts: ScheduleOpts,
+}
+
+/// The same (strategy, mesh, machine, schedule) shapes
+/// `rust/tests/sim_golden.rs` pins against the reference *engine* —
+/// here pinned one level earlier, against the reference *builders*.
+fn cases() -> Vec<Case> {
+    let d = |depth| Strategy::Tensor3d { depth, transpose_opt: true };
+    let nox = |depth| Strategy::Tensor3d { depth, transpose_opt: false };
+    let sharded = ScheduleOpts { sharded_state: true, dp_barrier: false };
+    let barrier = ScheduleOpts { sharded_state: true, dp_barrier: true };
+    let none = ScheduleOpts::default();
+    let pipe = |stages, microbatches, depth| Strategy::Tensor3dPipeline {
+        depth,
+        transpose_opt: true,
+        stages,
+        microbatches,
+    };
+    let polaris = |name, strategy, net, mesh, batch, opts| Case {
+        name,
+        strategy,
+        net,
+        mesh,
+        batch,
+        machine: Machine::polaris(),
+        opts,
+    };
+    vec![
+        polaris("t3d-d1-2x2x4", d(1), small_net(), Mesh::new(2, 2, 4, 1), 64, none),
+        polaris("t3d-d2-2x2x4", d(2), small_net(), Mesh::new(2, 2, 4, 1), 64, none),
+        polaris("t3d-d4-2x2x4", d(4), small_net(), Mesh::new(2, 2, 4, 1), 64, none),
+        polaris("t3d-d2-noxpose-1x2x4", nox(2), small_net(), Mesh::new(1, 2, 4, 1), 64, none),
+        polaris("t3d-d2-sharded-4x2x4", d(2), small_net(), Mesh::new(4, 2, 4, 1), 64, sharded),
+        polaris("t3d-d2-barrier-4x2x4", d(2), small_net(), Mesh::new(4, 2, 4, 1), 64, barrier),
+        polaris("t3d-pipe1-d2-2x2x4", pipe(1, 8, 2), small_net(), Mesh::new(2, 2, 4, 1), 64, none),
+        // pipelined (Send/Recv) programs: the reference *engine* predates
+        // them, but the reference *builders* do not — pinned here in full
+        polaris("t3d-pipe2-d1-2x1x2", pipe(2, 4, 1), small_net(), Mesh::new(2, 1, 2, 1), 64, none),
+        polaris("t3d-pipe4-d2-1x2x2", pipe(4, 6, 2), small_net(), Mesh::new(1, 2, 2, 1), 64, none),
+        Case {
+            name: "t3d-pipe2-sharded-4x1x2",
+            strategy: pipe(2, 4, 2),
+            net: small_net(),
+            mesh: Mesh::new(4, 1, 2, 1),
+            batch: 64,
+            machine: Machine::polaris(),
+            opts: sharded,
+        },
+        polaris("megatron-2x2x4", Strategy::Megatron, small_net(), Mesh::new(2, 2, 4, 1), 64, none),
+        Case {
+            name: "colossal-1x2x4",
+            strategy: Strategy::Colossal3d,
+            net: small_net(),
+            mesh: Mesh::new(1, 2, 4, 1),
+            batch: 64,
+            machine: Machine::polaris(),
+            opts: none,
+        },
+        Case {
+            name: "t3d-d2-fig4-1x4x2",
+            strategy: d(2),
+            net: gpt::gpt_10b().network(),
+            mesh: Mesh::new(1, 4, 2, 1),
+            batch: 16,
+            machine: Machine::polaris(),
+            opts: none,
+        },
+        Case {
+            name: "t3d-d2-gpt10b-8x2x4",
+            strategy: d(2),
+            net: gpt::gpt_10b().network(),
+            mesh: Mesh::new(8, 2, 4, 1),
+            batch: 1024,
+            machine: Machine::polaris(),
+            opts: none,
+        },
+        Case {
+            name: "t3d-d2-gpt10b-sharded-8x2x4",
+            strategy: d(2),
+            net: gpt::gpt_10b().network(),
+            mesh: Mesh::new(8, 2, 4, 1),
+            batch: 1024,
+            machine: Machine::polaris(),
+            opts: sharded,
+        },
+        Case {
+            name: "t3d-d2-4x2x4-perlmutter",
+            strategy: d(2),
+            net: small_net(),
+            mesh: Mesh::new(4, 2, 4, 1),
+            batch: 64,
+            machine: Machine::perlmutter(),
+            opts: none,
+        },
+        Case {
+            name: "t3d-d2-2x2x4-frontier",
+            strategy: d(2),
+            net: small_net(),
+            mesh: Mesh::new(2, 2, 4, 1),
+            batch: 64,
+            machine: Machine::frontier(),
+            opts: sharded,
+        },
+        Case {
+            name: "t3d-d2-unet280m-2x2x4-perlmutter",
+            strategy: d(2),
+            net: unet::unet_280m().network(),
+            mesh: Mesh::new(2, 2, 4, 1),
+            batch: 256,
+            machine: Machine::perlmutter(),
+            opts: none,
+        },
+    ]
+}
+
+#[test]
+fn algebra_built_programs_match_the_reference_builders_bit_for_bit() {
+    for case in cases() {
+        let got = strategies::build_programs_with(
+            case.strategy,
+            &case.net,
+            &case.mesh,
+            case.batch,
+            &case.machine,
+            case.opts,
+        );
+        let want = reference::build_placed(
+            case.strategy,
+            &case.net,
+            &case.mesh,
+            case.batch,
+            &case.machine,
+            case.opts,
+            &Placement::ColumnMajor,
+        );
+        assert_same_program_set(case.name, &got, &want);
+    }
+}
+
+#[test]
+fn placed_layouts_match_the_reference_builders_bit_for_bit() {
+    // the named placements and the seeded Custom permutation stream of
+    // sim_golden's `repriced_placement_equals_full_rebuild_bit_for_bit`
+    let machine = Machine::polaris();
+    let net = small_net();
+    let gpn = machine.gpus_per_node;
+    let mut rng = Rng::new(0xFA57_4EF1_5EED);
+    let configs: Vec<Layout> = vec![
+        Layout::tensor3d(2, 2, 4, 2),
+        Layout::tensor3d(4, 2, 4, 1).state(StateMode::DepthSharded),
+        Layout::tensor3d(2, 1, 2, 1).pipeline(2, 4),
+        Layout::tensor3d(1, 2, 2, 2).pipeline(4, 6),
+        Layout::tensor3d(4, 1, 2, 1).pipeline(2, 4).state(StateMode::DepthSharded),
+    ];
+    for base in configs {
+        let world = base.world();
+        let mut placements: Vec<Placement> = vec![
+            Placement::ColumnMajor,
+            Placement::RowMajor,
+            Placement::DepthOuter,
+            Placement::NodeBlocked { rows: 2 },
+        ];
+        for _ in 0..4 {
+            let mut p: Vec<usize> = (0..world).collect();
+            rng.shuffle(&mut p);
+            placements.push(Placement::Custom(p));
+        }
+        for pl in placements {
+            if !pl.admissible(base.g_pipe, base.g_data, base.g_r, base.g_c, gpn) {
+                continue;
+            }
+            let layout = base.clone().placement(pl);
+            let got = strategies::build(&layout, &net, 64, &machine);
+            let want = reference_build(&layout, &net, 64, &machine);
+            assert_same_program_set(&layout.label(), &got, &want);
+        }
+    }
+}
+
+#[test]
+fn seeded_custom_placements_from_the_timing_property_match_too() {
+    // the second RNG stream sim_golden draws Custom permutations from
+    // (`placement_permutes_timings_only`) — same seed, same draws
+    let machine = Machine::polaris();
+    let net = small_net();
+    let mut rng = Rng::new(0x9E3779B97F4A7C15);
+    let configs: Vec<Layout> = vec![
+        Layout::tensor3d(2, 2, 4, 2),
+        Layout::tensor3d(4, 2, 4, 1).state(StateMode::DepthSharded),
+        Layout::tensor3d(2, 1, 2, 1).pipeline(2, 4),
+        Layout::tensor3d(1, 2, 2, 2).pipeline(4, 6),
+    ];
+    for base in configs {
+        let world = base.world();
+        let mut placements: Vec<Placement> = vec![Placement::RowMajor, Placement::DepthOuter];
+        for _ in 0..4 {
+            let mut p: Vec<usize> = (0..world).collect();
+            rng.shuffle(&mut p);
+            placements.push(Placement::Custom(p));
+        }
+        for pl in placements {
+            let layout = base.clone().placement(pl);
+            let got = strategies::build(&layout, &net, 64, &machine);
+            let want = reference_build(&layout, &net, 64, &machine);
+            assert_same_program_set(&layout.label(), &got, &want);
+        }
+    }
+}
+
+#[test]
+fn strategy_typed_placed_builds_match_the_reference_builders() {
+    // `build_programs_placed` — the Strategy-typed placed entry the
+    // baselines use — funnels through the same algebra; pin it directly
+    let machine = Machine::polaris();
+    let net = small_net();
+    let sharded = ScheduleOpts { sharded_state: true, dp_barrier: false };
+    let t3d = Strategy::Tensor3d { depth: 2, transpose_opt: true };
+    let pipe = Strategy::Tensor3dPipeline {
+        depth: 1,
+        transpose_opt: true,
+        stages: 2,
+        microbatches: 4,
+    };
+    let cases: Vec<(Strategy, Mesh, ScheduleOpts, Placement)> = vec![
+        (t3d, Mesh::new(2, 2, 4, 1), ScheduleOpts::default(), Placement::RowMajor),
+        (t3d, Mesh::new(4, 2, 4, 1), sharded, Placement::NodeBlocked { rows: 2 }),
+        (Strategy::Megatron, Mesh::new(2, 2, 4, 1), ScheduleOpts::default(), Placement::DepthOuter),
+        (pipe, Mesh::new(2, 1, 2, 1), ScheduleOpts::default(), Placement::RowMajor),
+    ];
+    for (strategy, mesh, opts, pl) in cases {
+        let got = strategies::build_programs_placed(strategy, &net, &mesh, 64, &machine, opts, &pl);
+        let want = reference::build_placed(strategy, &net, &mesh, 64, &machine, opts, &pl);
+        assert_same_program_set(&format!("{strategy:?} {mesh} {pl:?}"), &got, &want);
+    }
+}
