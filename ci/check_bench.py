@@ -13,6 +13,8 @@ fails the build instead:
     strictly positive;
   * the refine counters are self-consistent
     (`builds_avoided == refine_sims - refine_builds`);
+  * the fault fields are present and typed, and the degraded
+    `fault_makespan_s` is never below the healthy `makespan_s`;
   * with `--budget-s B`, the gated wall clock (`refine_s + total_s`)
     respects the same budget the run was invoked with.
 
@@ -48,6 +50,14 @@ SCHEMA = [
     ("makespan_s", "pos"),
     ("overlap_fraction", "frac"),
     ("mfu", "frac"),
+    # Fault fields (PR 7): every bench-sim run re-simulates the benched
+    # layout in the degraded world of `--mtbf` (default failure scenario)
+    # and reports the checkpoint/expected-throughput accounting.
+    ("mtbf_s", "pos"),
+    ("fault_makespan_s", "pos"),
+    ("ckpt_interval_s", "pos"),
+    ("ckpt_cost_s", "pos"),
+    ("expected_iters_per_sec", "pos"),
 ]
 
 # Only present when the run refined (`refine` > 0); all-or-nothing.
@@ -131,6 +141,18 @@ def check(bench, budget_s):
         stray = [f for f in refine_fields if f in bench]
         if stray:
             errors.append(f"refine fields present without refine > 0: {stray}")
+
+    # A degraded world can only be slower: a fault makespan below the
+    # healthy one means the fault injection (or the re-pricing under it)
+    # is broken, however plausible both numbers look in isolation.
+    if all(f in bench for f in ("makespan_s", "fault_makespan_s")):
+        healthy, degraded = bench["makespan_s"], bench["fault_makespan_s"]
+        if isinstance(healthy, (int, float)) and isinstance(degraded, (int, float)):
+            if degraded < healthy:
+                errors.append(
+                    f"fault_makespan_s: degraded {degraded} is below the healthy"
+                    f" makespan_s {healthy}"
+                )
 
     known = {f for f, _ in SCHEMA} | set(refine_fields)
     unknown = [f for f in bench if f not in known]

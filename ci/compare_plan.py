@@ -20,7 +20,15 @@ RTOL = 0.05
 # to land on an integral value must not silently tighten to exact
 # comparison.  Everything else is the discrete recommendation and must
 # match exactly.
-FLOAT_FIELDS = {"makespan_s", "eq4_makespan_s", "bubble_fraction"}
+FLOAT_FIELDS = {
+    "makespan_s",
+    "eq4_makespan_s",
+    "bubble_fraction",
+    "fault_makespan_s",
+    "ckpt_interval_s",
+    "ckpt_cost_s",
+    "expected_iters_per_sec",
+}
 
 
 def main():
@@ -30,8 +38,13 @@ def main():
     with open(actual_path) as f:
         actual = json.load(f)
     errors = []
-    if sorted(golden) != sorted(actual):
-        errors.append(f"field sets differ: golden {sorted(golden)} vs actual {sorted(actual)}")
+    # Per-field presence diagnostics, not a bare set dump (and never a
+    # KeyError): a golden authored for a newer CLI must say exactly which
+    # field the binary failed to emit, and vice versa.
+    for key in sorted(set(golden) - set(actual)):
+        errors.append(f"{key}: golden {golden[key]!r} vs actual MISSING")
+    for key in sorted(set(actual) - set(golden)):
+        errors.append(f"{key}: unexpected in actual ({actual[key]!r}), not in the golden")
     for key in sorted(set(golden) & set(actual)):
         want, got = golden[key], actual[key]
         if key in FLOAT_FIELDS:

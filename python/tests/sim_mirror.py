@@ -40,6 +40,18 @@ empirically pinned Rust tests are diagnosable without a Rust toolchain:
   asserts the re-pricing invariant (re-priced == placed rebuild,
   bitwise, plain and pipelined) and that the refined candidate count
   equals shortlist x admissible placements.
+* The fault model (PR 7): ``fault_price`` / ``simulate(..., priced=...,
+  jitter=...)`` mirror the planner's degraded-world scoring run
+  (``CommWorld::price_with_faults`` steady-state link pricing plus the
+  splitmix64 straggler jitter of ``FaultSpec::jitter_factor``), the
+  checkpoint/expected-throughput functions mirror ``comm_model``, and
+  ``refine_faulted`` mirrors the fault-aware ``PlanRequest::faults``
+  ranking.  ``__main__`` asserts the pinned divergence case: on
+  GPT-9B/16 Polaris with G_pipe in {1,2,4} and MTBF 900 s, expected
+  throughput recommends G_pipe=4 (1,1,4) — one stage per node, every
+  ring intra-node — over the fault-blind G_pipe=2 (2,1,4) winner, and
+  the fault-aware gpt80b/1024 plan matches the CI golden
+  (ci/golden_plan_gpt80b_1024_faulted.json).
 * The issue-order permutation-invariance property of
   ``rust/tests/sim_golden.rs`` can be spot-checked here with
   ``simulate(..., order=...)``.
@@ -54,6 +66,9 @@ No dependencies beyond the standard library.  Usage::
     python3 python/tests/sim_mirror.py            # refine scan, pinned cases
 """
 import heapq
+import json
+import math
+import os
 
 BYTES_PER_ELEM = 2.0
 COMPUTE, AR, AG, RS, SEND, RECV = 0, 1, 2, 3, 4, 5
@@ -377,7 +392,20 @@ def build_t3d(net, mesh_in, batch, depth, machine, sharded=False, barrier=False)
     return programs
 
 
-def simulate(machine, programs, order=None, pricing=None):
+def coll_time_on(kind, bytes_, p, bw, lat):
+    """Mirror of OpKind::collective_time_on (the explicitly-priced
+    engine path): ring all-reduce / all-gather / reduce-scatter and the
+    single-hop P2p transfer on a given (bw, lat)."""
+    if kind in (SEND, RECV):
+        return 0.0 if bytes_ <= 0 else bytes_ / bw + lat
+    if p <= 1 or bytes_ <= 0:
+        return 0.0
+    if kind == AR:
+        return 2.0 * (p - 1.0) / p * bytes_ / bw + 2.0 * (p - 1.0) * lat
+    return (p - 1.0) / p * bytes_ / bw + (p - 1.0) * lat
+
+
+def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=None):
     """Mirror of sim::engine::simulate / simulate_permuted.
 
     Returns ``(makespan, compute_busy)``.  Stream 3 (P2p) mirrors the
@@ -390,6 +418,14 @@ def simulate(machine, programs, order=None, pricing=None):
     *placed* members (see ``reprice``), overriding the occupancy that
     would be derived from the logical ranks — programs stay untouched,
     only the communicator cost parameters move.
+
+    ``priced`` (PR 7) is the stronger override the fault path needs: a
+    map from each logical group tuple straight to ``(bw, lat)`` — the
+    mirror of ``CommWorld::price_with_faults`` feeding
+    ``sim::simulate_repriced_faulted`` (degraded links are a bandwidth
+    *scale*, not expressible as an occupancy).  ``jitter`` is the
+    per-rank compute-duration multiplier list of
+    ``FaultSpec::jitter_factor`` (see ``jitter_factors``).
     """
     n = len(programs)
     done = [[False] * len(p) for p in programs]
@@ -439,6 +475,8 @@ def simulate(machine, programs, order=None, pricing=None):
                 kind = op[0]
                 if kind == COMPUTE:
                     dur = machine.compute_time(op[1], op[2])
+                    if jitter is not None:
+                        dur *= jitter[gpu]
                     end = ready + dur
                     nxt[gpu][st] += 1
                     stream_free[gpu][st] = end
@@ -457,15 +495,18 @@ def simulate(machine, programs, order=None, pricing=None):
                     stt[3].append((gpu, oi))
                     nxt[gpu][st] += 1
                     if stt[0] == stt[1]:
-                        p, pn = len(grp), per_node(grp)
-                        if kind == AR:
-                            dur = machine.allreduce_time(op[1], p, pn)
+                        p = len(grp)
+                        if priced is not None:
+                            bw, lat = priced[grp]
+                            dur = coll_time_on(kind, op[1], p, bw, lat)
+                        elif kind == AR:
+                            dur = machine.allreduce_time(op[1], p, per_node(grp))
                         elif kind == AG:
-                            dur = machine.allgather_time(op[1], p, pn)
+                            dur = machine.allgather_time(op[1], p, per_node(grp))
                         elif kind in (SEND, RECV):
-                            dur = machine.p2p_time(op[1], pn)
+                            dur = machine.p2p_time(op[1], per_node(grp))
                         else:
-                            dur = machine.reduce_scatter_time(op[1], p, pn)
+                            dur = machine.reduce_scatter_time(op[1], p, per_node(grp))
                         end = stt[2] + dur
                         for (mg, mi) in stt[3]:
                             # P2p (stream 3) is a channel pool: completion
@@ -833,6 +874,157 @@ def place_programs(progs, perm):
     return out
 
 
+MASK64 = (1 << 64) - 1
+GOLDEN64 = 0x9E3779B97F4A7C15
+
+
+def splitmix64(x):
+    """Mirror of spec::fault::splitmix64 (wrapping u64 arithmetic)."""
+    z = (x + GOLDEN64) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def jitter_factors(world, amplitude, seed=0):
+    """Mirror of FaultSpec::jitter_factor for every rank: a deterministic
+    per-rank compute slowdown in [1, 1 + amplitude)."""
+    if amplitude <= 0.0:
+        return [1.0] * world
+    return [1.0 + amplitude * ((splitmix64(seed ^ ((r * GOLDEN64) & MASK64)) >> 11)
+                               * (1.0 / (1 << 53)))
+            for r in range(world)]
+
+
+def fault_spec(mtbf_s, links=((0, 0.25),), jitter=0.0, jitter_seed=0,
+               ckpt_interval_s=0.0, ckpt_bw=2e9, restart_s=180.0, mttr_s=1800.0):
+    """Mirror of FaultSpec::with_mtbf with the tunable knobs the planner
+    scoring reads.  ``links`` is ``[(node, bw_scale), ...]`` — onset
+    times are irrelevant to the steady-state planner pricing."""
+    return {"mtbf_s": mtbf_s, "links": list(links), "jitter": jitter,
+            "jitter_seed": jitter_seed, "ckpt_interval_s": ckpt_interval_s,
+            "ckpt_bw": ckpt_bw, "restart_s": restart_s, "mttr_s": mttr_s}
+
+
+def fault_price(machine, progs, perm, links):
+    """Mirror of ``CommWorld::price_with_faults``: every distinct logical
+    group priced at its placed ``ring_bw_lat``, then each degraded link
+    multiplies the bandwidth of the *node-spanning* groups with a placed
+    member on the sick node (node-local NVLink rings are unaffected)."""
+    gpn = machine.gpus_per_node
+    out = {}
+    for ops in progs:
+        for op in ops:
+            grp = op[4]
+            if grp is None or grp in out:
+                continue
+            placed = [perm[r] for r in grp] if perm is not None else list(grp)
+            bw, lat = machine.ring_bw_lat(len(grp), machine.members_per_node(placed))
+            nodes = [r // gpn for r in placed]
+            spans = any(nd != nodes[0] for nd in nodes)
+            for (sick, scale) in links:
+                if spans and sick in nodes:
+                    bw *= scale
+            out[grp] = (bw, lat)
+    return out
+
+
+def checkpoint_cost_s(state_bytes_per_rank, ckpt_bw):
+    """Mirror of comm_model::checkpoint_cost_s."""
+    return 0.0 if ckpt_bw <= 0.0 else state_bytes_per_rank / ckpt_bw
+
+
+def young_checkpoint_interval(cost_s, mtbf_s):
+    """Mirror of comm_model::young_checkpoint_interval."""
+    return (2.0 * max(cost_s, 0.0) * max(mtbf_s, 0.0)) ** 0.5
+
+
+def checkpoint_efficiency(interval_s, cost_s, restart_s, mtbf_s):
+    """Mirror of comm_model::checkpoint_efficiency."""
+    if mtbf_s <= 0.0:
+        return 1.0
+    if interval_s <= 0.0:
+        return 0.0
+    util = interval_s / (interval_s + max(cost_s, 0.0))
+    avail = 1.0 - (max(restart_s, 0.0) + interval_s / 2.0) / mtbf_s
+    return min(max(util * avail, 0.0), 1.0)
+
+
+def degraded_weight(mttr_s, mtbf_s):
+    """Mirror of comm_model::degraded_weight."""
+    if mtbf_s <= 0.0 or mttr_s <= 0.0:
+        return 0.0
+    return mttr_s / (mtbf_s + mttr_s)
+
+
+def expected_secs_per_iter(t_healthy, t_degraded, w):
+    """Mirror of comm_model::expected_secs_per_iter."""
+    return (1.0 - w) * t_healthy + w * t_degraded
+
+
+def ckpt_params(net, mode, mesh, g_pipe, spec):
+    """Mirror of PlanRequest::ckpt_params: per-stage state bytes over
+    the checkpoint bandwidth, interval fixed or Young-optimal."""
+    sb = (state_bytes(net, mesh.g_tensor()) if mode == "rep"
+          else state_bytes_sharded(net, mesh.g_tensor(), mesh.g_data)) / g_pipe
+    cost = checkpoint_cost_s(sb, spec["ckpt_bw"])
+    interval = (spec["ckpt_interval_s"] if spec["ckpt_interval_s"] > 0.0
+                else young_checkpoint_interval(cost, spec["mtbf_s"]))
+    return interval, cost
+
+
+def expected_ips(net, mode, mesh, g_pipe, spec, mk_healthy, mk_degraded):
+    """Mirror of the planner's fault-aware ranking key: checkpoint
+    efficiency (per-layout cost) over the healthy/degraded expected
+    seconds per iteration."""
+    interval, cost = ckpt_params(net, mode, mesh, g_pipe, spec)
+    eff = checkpoint_efficiency(interval, cost, spec["restart_s"], spec["mtbf_s"])
+    w = degraded_weight(spec["mttr_s"], spec["mtbf_s"])
+    return eff / expected_secs_per_iter(mk_healthy, mk_degraded, w)
+
+
+def refine_faulted(net, batch, world, machine, mode, k, depth, pipes, m, spec,
+                   placements=None):
+    """Mirror of the fault-aware refined planner::PlanRequest (PR 7):
+    every (G_pipe, mesh, placement) candidate simulated twice — healthy,
+    and in the degraded world (``fault_price`` steady-state link pricing
+    plus straggler jitter) — then ranked by expected iterations/sec.
+    Returns ``(blind, aware)`` where ``blind`` is the healthy-makespan
+    ranking (the fault-blind winner first) and ``aware`` the
+    expected-throughput ranking, as
+    ``[(p, mesh, placement, mk_healthy, mk_degraded, eips), ...]``."""
+    gpn = machine.gpus_per_node
+    base, base_vol = base_plan(candidates(net, batch, world, machine, mode))
+    cands = pipelined_candidates(net, batch, world, machine, mode, pipes, m, k)
+    if not any(p == 1 and mm.key() == base.key() for p, mm, _ in cands):
+        cands.append((1, base, base_vol))
+    jit = jitter_factors(world, spec["jitter"], spec["jitter_seed"])
+    scored = []
+    for p, mm, score in cands:
+        if placements is not None:
+            pls = [pl for pl in placements
+                   if placement_admissible(pl, p, mm.g_data, mm.g_r, mm.g_c, gpn)]
+            if not pls:
+                pls = ["column-major"]
+        else:
+            pls = placement_search_set(p, mm.g_data, mm.g_r, mm.g_c, gpn)
+        if p <= 1:
+            progs = build_t3d(net, mm, batch, depth, machine, sharded=(mode == "sh"))
+        else:
+            progs = build_t3d_pipeline(net, mm, batch, depth, p, m, machine,
+                                       sharded=(mode == "sh"))
+        for pl in pls:
+            perm = placement_perm(pl, p, mm.g_data, mm.g_r, mm.g_c, gpn)
+            mk, _ = simulate(machine, place_programs(progs, perm))
+            priced = fault_price(machine, progs, perm, spec["links"])
+            fmk, _ = simulate(machine, progs, priced=priced, jitter=jit)
+            ips = expected_ips(net, mode, mm, p, spec, mk, fmk)
+            scored.append((p, mm, pl, mk, fmk, ips))
+    blind = sorted(scored, key=lambda x: x[3])
+    aware = sorted(scored, key=lambda x: (-x[5], x[3]))
+    return blind, aware
+
+
 def refine_placed(net, batch, world, machine, mode, k, depth, pipes, m,
                   placements=None):
     """Mirror of the refined planner::PlanRequest search: per-G_pipe
@@ -1012,6 +1204,39 @@ if __name__ == "__main__":
     assert a == b, "pipelined re-priced placement drifted from the placed rebuild"
     print("ok: re-priced placement simulation equals the placed rebuild (bitwise)")
 
+    # The fault-aware divergence pin (PR 7): planner::tests::
+    # fault_aware_ranking_differs_from_fault_blind_on_gpt9b_16.
+    # GPT-9B / 16 Polaris GPUs, G_pipe over {1,2,4}, MTBF 900 s under
+    # the default failure scenario (node 0 at 1/4 link bandwidth,
+    # Young-optimal checkpoints): the fault-blind winner G_pipe=2
+    # (2,1,4) spans nodes with its tensor rings and degrades ~30% on
+    # the sick node; G_pipe=4 (1,1,4) is one stage per node — every
+    # ring intra-node, only the stage-boundary P2p crosses — and
+    # checkpoints a quarter of the per-stage state, so it wins the
+    # expected-throughput ranking despite a slower healthy iteration.
+    spec900 = fault_spec(900.0)
+    blind, aware = refine_faulted(gpt9b, 64, 16, polaris(), "rep", 3, 2,
+                                  [1, 2, 4], 8, spec900)
+    print("gpt9b/16 polaris rep, G_pipe in {1,2,4}, MTBF 900 s (node0@0.25):")
+    for row in aware[:4]:
+        p, mm, pl, mk, fmk, ips = row
+        tags = (" <- fault-blind" if row == blind[0] else "") + \
+               (" <- fault-aware" if row == aware[0] else "")
+        print(f"  G_pipe={p} {mm.key()} {pl}: healthy {mk:.4f}s "
+              f"degraded {fmk:.4f}s expected {ips:.4f} iters/s{tags}")
+    assert (blind[0][0], blind[0][1].key(), blind[0][2]) == \
+        (2, (2, 1, 4), "column-major"), "fault-blind winner drifted"
+    assert (aware[0][0], aware[0][1].key(), aware[0][2]) == \
+        (4, (1, 1, 4), "column-major"), "fault-aware winner drifted"
+    blind_row = next(r for r in aware if (r[0], r[1].key(), r[2]) ==
+                     (blind[0][0], blind[0][1].key(), blind[0][2]))
+    assert aware[0][5] > blind_row[5], \
+        "the fault-aware pick must strictly beat the fault-blind winner"
+    assert aware[0][3] > blind_row[3] and aware[0][4] < blind_row[4], \
+        "graceful degradation: slower healthy, faster degraded"
+    print("ok: fault-aware recommendation differs from the fault-blind one "
+          "(as the Rust test pins)")
+
     # The headline mesh: the same tiling wins the paper-scale
     # gpt80b/1024 configuration (16, 4, 16) by >20%.
     mesh1024 = Mesh(16, 4, 16)
@@ -1023,3 +1248,42 @@ if __name__ == "__main__":
           f"vs blocked2 {mk_b2:.2f}s")
     assert mk_b2 < mk_cm * 0.8, "the 1024-GPU blocked2 win drifted"
     print("ok: blocked2 wins the gpt80b/1024 headline mesh by >20%")
+
+    # The fault-aware paper-scale golden (PR 7): the CI bench-smoke job
+    # runs `plan --model gpt80b --gpus 1024 --machine polaris --refine 2
+    # --mtbf 3600 --json` and diffs it against
+    # ci/golden_plan_gpt80b_1024_faulted.json.  At this scale the
+    # fault-aware and fault-blind rankings agree — every candidate spans
+    # nodes, so the default failure scenario degrades them all roughly
+    # proportionally — and the golden pins the fault-field plumbing:
+    # the degraded makespan under node 0 at 1/4 link bandwidth, the
+    # Young-optimal checkpoint cadence for the full replicated state,
+    # and the expected-throughput score, all authored here.
+    spec3600 = fault_spec(3600.0)
+    progs1024 = build_t3d(gpt80b, mesh1024, 1024, 2, polaris())
+    perm1024 = placement_perm("blocked2", 1, 16, 4, 16, 4)
+    fmk_b2, _ = simulate(polaris(), progs1024,
+                         priced=fault_price(polaris(), progs1024, perm1024,
+                                            spec3600["links"]))
+    interval, cost = ckpt_params(gpt80b, "rep", mesh1024, 1, spec3600)
+    ips = expected_ips(gpt80b, "rep", mesh1024, 1, spec3600, mk_b2, fmk_b2)
+    golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "..", "..", "ci",
+                               "golden_plan_gpt80b_1024_faulted.json")
+    with open(golden_path) as fh:
+        golden = json.load(fh)
+    assert (golden["g_data"], golden["g_r"], golden["g_c"]) == mesh1024.key(), \
+        "faulted golden mesh drifted"
+    assert golden["placement"] == "blocked2" and golden["mtbf_s"] == 3600, \
+        "faulted golden scenario drifted"
+    derived = {"makespan_s": mk_b2, "eq4_makespan_s": mk_cm,
+               "fault_makespan_s": fmk_b2, "ckpt_interval_s": interval,
+               "ckpt_cost_s": cost, "expected_iters_per_sec": ips}
+    for key, val in derived.items():
+        assert math.isclose(val, golden[key], rel_tol=1e-12), \
+            f"faulted golden {key}: mirror {val!r} vs golden {golden[key]!r}"
+    print(f"gpt80b/1024 faulted (MTBF 3600 s): degraded {fmk_b2:.2f}s, "
+          f"ckpt every {interval:.1f}s ({cost:.2f}s each), "
+          f"expected {ips:.5f} iters/s")
+    print("ok: fault-aware gpt80b/1024 plan fields match the CI golden "
+          "(ci/golden_plan_gpt80b_1024_faulted.json)")

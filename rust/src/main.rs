@@ -23,7 +23,7 @@ use tensor3d::models::{gpt, unet, NetworkDesc};
 use tensor3d::planner::{self, NetKind};
 use tensor3d::repro;
 use tensor3d::sim::Machine;
-use tensor3d::spec::Placement;
+use tensor3d::spec::{FaultSpec, Placement};
 use tensor3d::strategies::{self, Strategy};
 use tensor3d::trainer::{self, optimizer::AdamWConfig, TrainConfig};
 use tensor3d::util::cli::{flag, opt, Args};
@@ -182,6 +182,14 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
                 "placement search set for --refine: auto (the named set per candidate \
                  shape) or a comma list of column-major|row-major|depth-outer|blockedN",
             ),
+            opt(
+                "mtbf",
+                "0",
+                "mean time between failures in seconds: rank refined candidates by \
+                 expected iterations/sec under the default failure scenario (one node \
+                 at 1/4 link bandwidth, Young-optimal checkpointing) instead of \
+                 healthy makespan (0 = fault-blind; needs --refine > 0)",
+            ),
             flag("sharded-state", "depth-shard optimizer state (ZeRO-style memory rule)"),
             flag("json", "emit the recommendation as one-line JSON (CI golden diff)"),
         ],
@@ -208,6 +216,10 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         bail!("--pipeline needs --microbatches >= 1");
     }
     let pipes = tensor3d::mesh::divisors(pipeline.max(1));
+    let mtbf = a.f64("mtbf")?;
+    if mtbf > 0.0 && refine == 0 {
+        bail!("--mtbf ranks by *simulated* expected throughput; add --refine K (K >= 1)");
+    }
     let mut req = planner::PlanRequest::new(&net, &machine, gpus)
         .kind(kind)
         .batch(batch)
@@ -218,6 +230,9 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         .depth(a.usize("depth")?);
     if let Some(pls) = placements_by_spec(&a.str("placements")?)? {
         req = req.placements(&pls);
+    }
+    if mtbf > 0.0 {
+        req = req.faults(&FaultSpec::with_mtbf(mtbf));
     }
     let r = req.run();
     let best = r.layout().clone();
@@ -247,6 +262,13 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
             fields.push(("makespan_s", Json::num(r.makespan_s().unwrap_or(f64::NAN))));
             fields.push(("eq4_makespan_s", Json::num(r.baseline_makespan_s().unwrap_or(f64::NAN))));
         }
+        if let Some(f) = &r.fault {
+            fields.push(("mtbf_s", Json::num(f.mtbf_s)));
+            fields.push(("fault_makespan_s", Json::num(f.fault_makespan_s)));
+            fields.push(("ckpt_interval_s", Json::num(f.ckpt_interval_s)));
+            fields.push(("ckpt_cost_s", Json::num(f.ckpt_cost_s)));
+            fields.push(("expected_iters_per_sec", Json::num(f.expected_iters_per_sec)));
+        }
         println!("{}", Json::obj(fields));
         return Ok(());
     }
@@ -274,8 +296,12 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         for c in &r.candidates {
             let marker = if c.layout == best { " <- recommended" } else { "" };
             let base = if c.layout == r.baseline.layout { " [Eq.-4 winner]" } else { "" };
+            let fault = match (c.fault_makespan_s, c.expected_ips) {
+                (Some(fm), Some(ips)) => format!("  degraded {fm:.3} s, {ips:.4} iters/s"),
+                _ => String::new(),
+            };
             println!(
-                "  {}  simulated {:.3} s/iter{base}{marker}",
+                "  {}  simulated {:.3} s/iter{fault}{base}{marker}",
                 fmt_layout(&c.layout),
                 c.makespan_s.unwrap_or(f64::NAN)
             );
@@ -289,6 +315,18 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
             fmt_layout(&best),
             (1.0 - mk / base_mk) * 100.0
         );
+        if let Some(f) = &r.fault {
+            println!(
+                "  fault model (MTBF {:.0} s, one node at 1/4 link bandwidth): degraded \
+                 {:.3} s/iter, checkpoint every {:.0} s at {:.1} s each -> expected \
+                 {:.4} iters/s",
+                f.mtbf_s,
+                f.fault_makespan_s,
+                f.ckpt_interval_s,
+                f.ckpt_cost_s,
+                f.expected_iters_per_sec
+            );
+        }
         return Ok(());
     }
     println!(
@@ -355,6 +393,13 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
                 "placement",
                 "column-major",
                 "rank->node placement: column-major|row-major|depth-outer|blockedN",
+            ),
+            opt(
+                "fault",
+                "",
+                "inject faults: comma list of dead:RANK@T, link:NODE@SCALE[@T], \
+                 jitter:AMP[@SEED] (e.g. dead:3@1.5,link:0@0.25,jitter:0.05@7; \
+                 empty = fault-free)",
             ),
             flag("sharded-state", "depth-shard parameter/optimizer state (overlapped RS/AG)"),
             flag("dp-barrier", "ablation: serialize the sharded-state collectives"),
@@ -425,8 +470,24 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             );
         }
     }
-    let (time, gb) =
-        strategies::iterate_placed(strat, &net, &mesh, batch, &machine, opts, &placement);
+    let fault_spec = FaultSpec::parse(&a.str("fault")?).map_err(|e| anyhow!("--fault: {e}"))?;
+    // graceful degradation: a stalled program exits non-zero with the
+    // StallError rank/op diagnostics, not a `deadlock:` panic
+    let (time, gb, fault_report) = if fault_spec.is_empty() {
+        let (t, g) =
+            strategies::try_iterate_placed(strat, &net, &mesh, batch, &machine, opts, &placement)
+                .map_err(|e| anyhow!("{e}"))?;
+        (t, g, None)
+    } else {
+        let set = strategies::build_programs_placed(
+            strat, &net, &mesh, batch, &machine, opts, &placement,
+        );
+        let rep = tensor3d::sim::try_simulate_faulted(&machine, &set, &fault_spec)
+            .map_err(|e| anyhow!("{e}"))?;
+        let bytes = &rep.result.comm_bytes;
+        let g = bytes.iter().sum::<f64>() / bytes.len() as f64 / 1e9;
+        (rep.effective_makespan_s, g, Some(rep))
+    };
     let world = strat.world(&mesh);
     let u = strategies::mfu(&net, batch, world, time, &machine);
     println!(
@@ -456,8 +517,19 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             comm_model::pipeline_bubble_fraction(pipeline, microbatches) * 100.0
         );
     }
+    if let Some(rep) = &fault_report {
+        match &rep.detected {
+            Some(stall) => println!(
+                "  fault: detected at {:.3} s (rank {} stalled in `{}`, {} ops stuck); \
+                 lost work {:.3} s + restart {:.0} s folded into the effective time",
+                stall.at_s, stall.gpu, stall.name, stall.stuck_ops, rep.lost_work_s, rep.restart_s
+            ),
+            None => println!("  fault: degraded iteration completed (no rank death injected)"),
+        }
+    }
     println!(
-        "  time/iter: {time:.3}s   comm volume: {} per GPU   MFU {:.1}%",
+        "  {}: {time:.3}s   comm volume: {} per GPU   MFU {:.1}%",
+        if fault_report.is_some() { "effective time/iter" } else { "time/iter" },
         fmt_bytes(gb * 1e9),
         u * 100.0
     );
@@ -493,6 +565,14 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
                 "also benchmark the refined planner sweep: re-rank the K best Eq.-4 \
                  candidates by simulated makespan across placements and report \
                  refine_s / sims_per_sec / builds_avoided (0 = volume-only plan)",
+            ),
+            opt(
+                "mtbf",
+                "21600",
+                "mean time between failures in seconds for the fault fields: the benched \
+                 layout is re-simulated under the default degraded scenario (one node at \
+                 1/4 link bandwidth) and scored by expected iterations/sec with \
+                 Young-optimal checkpointing",
             ),
             opt("out", "BENCH_sim.json", "result file (schema documented in ROADMAP.md)"),
             opt(
@@ -577,12 +657,39 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     let classes = set.classes.len();
 
     let sw = Stopwatch::start();
-    let r = tensor3d::sim::simulate(&machine, &set);
+    // try_simulate: a stalled program is a non-zero exit with the rank/op
+    // diagnostics, not a `deadlock:` panic
+    let r = tensor3d::sim::try_simulate(&machine, &set).map_err(|e| anyhow!("{e}"))?;
     let sim_s = sw.secs();
     let total_s = build_s + sim_s;
     let ops_per_sec = ops as f64 / sim_s.max(1e-12);
     let u = strategies::mfu(&net, batch, layout.world(), r.makespan, &machine);
     let sims_per_sec = report.sims as f64 / report.refine_s.max(1e-12);
+
+    // fault fields: the benched layout re-simulated in the degraded
+    // world, plus the checkpoint/expected-throughput accounting (schema
+    // in ROADMAP.md; validated by ci/check_bench.py)
+    let mtbf = a.f64("mtbf")?;
+    if mtbf <= 0.0 {
+        bail!("--mtbf must be positive: the fault fields are part of the BENCH_sim.json schema");
+    }
+    let fault_spec = FaultSpec::with_mtbf(mtbf);
+    let fault_r = tensor3d::sim::try_simulate_faulted(&machine, &set, &fault_spec)
+        .map_err(|e| anyhow!("{e}"))?;
+    let fault_makespan = fault_r.effective_makespan_s;
+    let state_per_rank = match mode {
+        planner::StateMode::Replicated => net.state_bytes_per_gpu(mesh.g_tensor()),
+        planner::StateMode::DepthSharded => {
+            net.state_bytes_per_gpu_sharded(mesh.g_tensor(), mesh.g_data)
+        }
+    } / pipeline as f64;
+    let ckpt_cost = comm_model::checkpoint_cost_s(state_per_rank, fault_spec.ckpt_bw);
+    let ckpt_interval = comm_model::young_checkpoint_interval(ckpt_cost, mtbf);
+    let ckpt_eff =
+        comm_model::checkpoint_efficiency(ckpt_interval, ckpt_cost, fault_spec.restart_s, mtbf);
+    let weight = comm_model::degraded_weight(fault_spec.mttr_s, mtbf);
+    let expected_ips =
+        ckpt_eff / comm_model::expected_secs_per_iter(r.makespan, fault_makespan, weight);
 
     let mut fields = vec![
         ("model", Json::str(&model_name)),
@@ -607,6 +714,11 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         ("makespan_s", Json::num(r.makespan)),
         ("overlap_fraction", Json::num(r.overlap_fraction())),
         ("mfu", Json::num(u)),
+        ("mtbf_s", Json::num(mtbf)),
+        ("fault_makespan_s", Json::num(fault_makespan)),
+        ("ckpt_interval_s", Json::num(ckpt_interval)),
+        ("ckpt_cost_s", Json::num(ckpt_cost)),
+        ("expected_iters_per_sec", Json::num(expected_ips)),
     ];
     if refine > 0 {
         // the planner-path metrics the CI refine budget gates (schema in
@@ -661,6 +773,10 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         r.makespan,
         r.overlap_fraction() * 100.0,
         u * 100.0
+    );
+    println!(
+        "  faults:  degraded {fault_makespan:.3} s/iter @ MTBF {mtbf:.0} s   ckpt every \
+         {ckpt_interval:.1} s ({ckpt_cost:.2} s each)   expected {expected_ips:.4} iters/s"
     );
     println!("  results -> {out}");
     let budget = a.f64("budget-s")?;

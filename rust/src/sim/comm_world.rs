@@ -26,6 +26,7 @@
 
 use super::machine::Machine;
 use crate::ndmesh::View;
+use crate::spec::LinkFault;
 use std::collections::HashMap;
 
 /// Dense handle to an interned communicator group.
@@ -144,6 +145,78 @@ impl CommWorld {
             .collect()
     }
 
+    /// Whether `links` degrades group `g` under the placement `map`
+    /// (`None` = identity): only communicators that *cross node
+    /// boundaries* ride the faulted NIC/switch links, and only if a
+    /// placed member actually lives on the sick node.  Node-local
+    /// (NVLink) rings are unaffected — this is exactly the asymmetry
+    /// that lets a placement keeping its hot rings intra-node degrade
+    /// gracefully.
+    fn link_applies(
+        g: &GroupInfo,
+        machine: &Machine,
+        map: Option<&[usize]>,
+        fault: &LinkFault,
+    ) -> bool {
+        let node_of = |r: usize| match map {
+            None => r / machine.gpus_per_node,
+            Some(p) => p[r] / machine.gpus_per_node,
+        };
+        let first = node_of(g.members[0]);
+        let spans_nodes = g.members.iter().any(|&r| node_of(r) != first);
+        spans_nodes && g.members.iter().any(|&r| node_of(r) == fault.node)
+    }
+
+    /// Per-[`GroupId`] degradation steps `(from_s, bw_scale)` for the
+    /// engine's timed fault events: a collective on group `g` starting at
+    /// or after `from_s` multiplies its bandwidth by every active step.
+    /// Node identity comes from the registry's own placement (the one the
+    /// program was priced under), so this composes with whatever layout
+    /// built the programs.
+    pub(crate) fn fault_link_scales(
+        &self,
+        machine: &Machine,
+        links: &[LinkFault],
+    ) -> Vec<Vec<(f64, f64)>> {
+        let map = self.placement.as_deref();
+        self.groups
+            .iter()
+            .map(|g| {
+                links
+                    .iter()
+                    .filter(|f| Self::link_applies(g, machine, map, f))
+                    .map(|f| (f.at_s, f.bw_scale))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// [`CommWorld::price_with`] under degraded links: the steady-state
+    /// pricing the planner's fault-aware scoring uses.  Fault onset times
+    /// are ignored — the job is assumed to live in the degraded world —
+    /// and each affected group's bandwidth is multiplied by every
+    /// applicable `bw_scale`.  Same identity-registry precondition as
+    /// [`CommWorld::price_with`]; `perm` is the candidate placement under
+    /// evaluation (falling back to the registry's own placement, then
+    /// the identity, for node mapping).
+    pub fn price_with_faults(
+        &self,
+        machine: &Machine,
+        perm: Option<&[usize]>,
+        links: &[LinkFault],
+    ) -> Vec<(f64, f64)> {
+        let mut priced = self.price_with(machine, perm);
+        let map = perm.or(self.placement.as_deref());
+        for (g, p) in self.groups.iter().zip(priced.iter_mut()) {
+            for f in links {
+                if Self::link_applies(g, machine, map, f) {
+                    p.0 *= f.bw_scale;
+                }
+            }
+        }
+        priced
+    }
+
     /// Number of distinct communicators registered.
     pub fn len(&self) -> usize {
         self.groups.len()
@@ -204,6 +277,46 @@ mod tests {
             assert_eq!(w2.group(g2).per_node, 4);
             assert!(w2.group(g2).bw > g.bw);
         }
+    }
+
+    #[test]
+    fn link_faults_degrade_only_node_spanning_groups_on_the_sick_node() {
+        let m = Machine::perlmutter(); // 4 GPUs/node
+        let mut w = CommWorld::new();
+        let local = w.register(&m, vec![0, 1, 2, 3]); // node 0, NVLink
+        let cross = w.register(&m, vec![0, 4, 8, 12]); // nodes 0-3, NIC
+        let far = w.register(&m, vec![8, 12]); // nodes 2-3, NIC
+        let fault = LinkFault { node: 0, bw_scale: 0.25, at_s: 1.5 };
+
+        let scales = w.fault_link_scales(&m, &[fault]);
+        assert!(scales[local.0 as usize].is_empty(), "node-local ring untouched");
+        assert_eq!(scales[cross.0 as usize], vec![(1.5, 0.25)]);
+        assert!(scales[far.0 as usize].is_empty(), "no member on the sick node");
+
+        let healthy = w.price_with(&m, None);
+        let priced = w.price_with_faults(&m, None, &[fault]);
+        assert_eq!(priced[local.0 as usize], healthy[local.0 as usize]);
+        assert_eq!(priced[cross.0 as usize].0, healthy[cross.0 as usize].0 * 0.25);
+        assert_eq!(priced[cross.0 as usize].1, healthy[cross.0 as usize].1);
+        assert_eq!(priced[far.0 as usize], healthy[far.0 as usize]);
+
+        // under a permutation that pulls ranks {0,4,8,12} onto one node,
+        // the formerly-cross group becomes node-local and escapes the
+        // fault entirely — the graceful-shrink channel the planner scores
+        let gather: Vec<usize> = {
+            let mut p = vec![usize::MAX; 16];
+            for (slot, r) in [0usize, 4, 8, 12].iter().enumerate() {
+                p[*r] = 4 + slot; // node 1
+            }
+            let mut free = (0..16).filter(|s| !(4..8).contains(s));
+            for v in p.iter_mut().filter(|v| **v == usize::MAX) {
+                *v = free.next().unwrap();
+            }
+            p
+        };
+        let gathered = w.price_with_faults(&m, Some(&gather), &[fault]);
+        let base = w.price_with(&m, Some(&gather));
+        assert_eq!(gathered[cross.0 as usize], base[cross.0 as usize]);
     }
 
     #[test]

@@ -54,6 +54,7 @@
 
 use super::comm_world::{CommWorld, GroupId};
 use super::machine::Machine;
+use crate::spec::FaultSpec;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::fmt;
@@ -622,6 +623,11 @@ pub struct StallError {
     /// Human-readable cause: the pending rendezvous state or the
     /// unfinished dependency blocking the op.
     pub detail: String,
+    /// When the event loop quiesced (the last completed event): for an
+    /// injected rank death this is the *detection time* — every
+    /// survivor has arrived at the first collective that touches the
+    /// dead rank and nothing further can run.  `0.0` if nothing ran.
+    pub at_s: f64,
 }
 
 impl fmt::Display for StallError {
@@ -635,6 +641,71 @@ impl fmt::Display for StallError {
 }
 
 impl std::error::Error for StallError {}
+
+/// Precompiled fault-injection state for one run of [`simulate_impl`]:
+/// the [`FaultSpec`] resolved against a concrete [`ProgramSet`].
+/// `None` (an empty spec) takes the fault-free code path, so zero-fault
+/// injection is bit-for-bit the plain engine (golden-pinned).
+#[derive(Debug)]
+pub(crate) struct FaultCtx {
+    /// Per-rank compute-duration multipliers (straggler jitter).
+    jitter: Vec<f64>,
+    /// Per-rank death times (`INFINITY` = alive): a dead rank issues no
+    /// op whose start time is at or past its death.
+    death: Vec<f64>,
+    /// Per-[`GroupId`] degradation steps `(from_s, bw_scale)`: a
+    /// collective starting at or after `from_s` multiplies its ring
+    /// bandwidth by every active step — the mid-run form of the
+    /// [`CommWorld::price_with`] re-pricing (see
+    /// [`CommWorld::fault_link_scales`]).
+    link_scale: Vec<Vec<(f64, f64)>>,
+}
+
+impl FaultCtx {
+    /// Resolve `spec` against `set`; `None` when the spec injects
+    /// nothing (scoring-only parameters set at most).
+    pub(crate) fn new(machine: &Machine, set: &ProgramSet, spec: &FaultSpec) -> Option<FaultCtx> {
+        if spec.is_empty() {
+            return None;
+        }
+        let n = set.world();
+        let mut death = vec![f64::INFINITY; n];
+        for d in &spec.deaths {
+            assert!(d.rank < n, "FaultSpec kills rank {} but the world is {n}", d.rank);
+            death[d.rank] = death[d.rank].min(d.at_s);
+        }
+        Some(FaultCtx {
+            jitter: (0..n).map(|r| spec.jitter_factor(r)).collect(),
+            death,
+            link_scale: set.comm.fault_link_scales(machine, &spec.links),
+        })
+    }
+}
+
+/// What [`try_simulate_faulted`] returns: the simulated iteration under
+/// the injected faults, plus the recovery accounting when a rank death
+/// stalled the run.
+#[derive(Debug)]
+pub struct FaultReport {
+    /// The completed iteration: under every injected link fault and
+    /// jitter factor — and, when a death was detected, *as if the dead
+    /// rank had survived* (the work the restarted iteration re-runs).
+    pub result: SimResult,
+    /// The detected stall when a rank death interrupted the run:
+    /// [`StallError::at_s`] is the detection time (the survivors
+    /// quiesced at the first collective touching the dead rank).
+    pub detected: Option<StallError>,
+    /// Work lost since the last checkpoint at detection time
+    /// (`detect - floor(detect / interval) * interval`; everything
+    /// since t=0 without checkpointing).
+    pub lost_work_s: f64,
+    /// The [`FaultSpec::restart_s`] paid to restart (0 when no death).
+    pub restart_s: f64,
+    /// Effective iteration makespan with the recovery folded in:
+    /// `makespan + restart + lost_work` after a detected death, plain
+    /// `makespan` otherwise.
+    pub effective_makespan_s: f64,
+}
 
 /// Pending state of one rendezvous slot (dense-indexed by
 /// [`Binding::rv`]); a completed rendezvous resets its slot, which is
@@ -716,13 +787,96 @@ pub fn simulate(machine: &Machine, set: &ProgramSet) -> SimResult {
 /// instead of panicking — for programs that may deadlock by construction
 /// (an unmatched `Recv`, a dependency cycle).
 pub fn try_simulate(machine: &Machine, set: &ProgramSet) -> Result<SimResult, StallError> {
-    simulate_impl(machine, set, None, false, None, &mut SimScratch::default())
+    simulate_impl(machine, set, None, false, None, None, &mut SimScratch::default())
 }
 
 pub fn simulate_with_trace(machine: &Machine, set: &ProgramSet, keep_spans: bool) -> SimResult {
-    match simulate_impl(machine, set, None, keep_spans, None, &mut SimScratch::default()) {
+    match simulate_impl(machine, set, None, keep_spans, None, None, &mut SimScratch::default()) {
         Ok(r) => r,
         Err(e) => panic!("deadlock: {e}"),
+    }
+}
+
+/// Simulate one iteration under an injected [`FaultSpec`].
+///
+/// * An **empty** spec takes the fault-free code path and is bit-for-bit
+///   [`try_simulate`] (golden-pinned by `rust/tests/sim_golden.rs`).
+/// * **Link faults** multiply the ring bandwidth of every affected
+///   communicator (node-spanning, with a placed member on the sick
+///   node) for collectives starting at or after the fault time — the
+///   mid-run form of the [`CommWorld::price_with`] re-pricing.
+/// * **Straggler jitter** scales each rank's compute durations by its
+///   deterministic [`FaultSpec::jitter_factor`].
+/// * A **rank death** stops that rank from issuing any op starting at
+///   or past its death time; the run stalls at the first collective
+///   that needs it, which the engine converts into a *detected* failure
+///   ([`FaultReport::detected`], with the quiesce time as detection
+///   time) instead of an error, then completes the iteration as if the
+///   rank had survived and folds `restart + lost-work-since-checkpoint`
+///   into [`FaultReport::effective_makespan_s`].
+///
+/// `Err` is reserved for a genuine deadlock (a stall with no death
+/// injected — an unmatched Recv or dependency cycle in the program).
+pub fn try_simulate_faulted(
+    machine: &Machine,
+    set: &ProgramSet,
+    spec: &FaultSpec,
+) -> Result<FaultReport, StallError> {
+    try_simulate_faulted_impl(machine, set, spec, None)
+}
+
+/// [`try_simulate_faulted`] with an explicit initial issue order (a
+/// permutation of `0..world`) — fault injection preserves the
+/// issue-order invariance of [`simulate_permuted`], property-pinned by
+/// `rust/tests/sim_golden.rs`.
+pub fn simulate_faulted_permuted(
+    machine: &Machine,
+    set: &ProgramSet,
+    spec: &FaultSpec,
+    order: &[usize],
+) -> Result<FaultReport, StallError> {
+    check_order(set, order);
+    try_simulate_faulted_impl(machine, set, spec, Some(order))
+}
+
+fn try_simulate_faulted_impl(
+    machine: &Machine,
+    set: &ProgramSet,
+    spec: &FaultSpec,
+    order: Option<&[usize]>,
+) -> Result<FaultReport, StallError> {
+    let scratch = &mut SimScratch::default();
+    let ctx = FaultCtx::new(machine, set, spec);
+    match simulate_impl(machine, set, None, false, order, ctx.as_ref(), scratch) {
+        Ok(r) => Ok(FaultReport {
+            effective_makespan_s: r.makespan,
+            result: r,
+            detected: None,
+            lost_work_s: 0.0,
+            restart_s: 0.0,
+        }),
+        Err(stall) if spec.deaths.is_empty() => Err(stall),
+        Err(stall) => {
+            // a death was injected, so the stall is the *detected*
+            // failure; complete the iteration as if the rank survived
+            // (same links/jitter) to price the restarted re-run
+            let mut alive = spec.clone();
+            alive.deaths.clear();
+            let ctx = FaultCtx::new(machine, set, &alive);
+            let r = simulate_impl(machine, set, None, false, order, ctx.as_ref(), scratch)?;
+            let detect = stall.at_s;
+            let interval = spec.ckpt_interval_s;
+            let last_ckpt =
+                if interval > 0.0 { (detect / interval).floor() * interval } else { 0.0 };
+            let lost_work_s = detect - last_ckpt;
+            Ok(FaultReport {
+                effective_makespan_s: r.makespan + spec.restart_s + lost_work_s,
+                result: r,
+                detected: Some(stall),
+                lost_work_s,
+                restart_s: spec.restart_s,
+            })
+        }
     }
 }
 
@@ -735,7 +889,23 @@ pub(crate) fn simulate_repriced(
     pricing: &[(f64, f64)],
     scratch: &mut SimScratch,
 ) -> SimResult {
-    match simulate_impl(&set.machine, set, Some(pricing), false, None, scratch) {
+    match simulate_impl(&set.machine, set, Some(pricing), false, None, None, scratch) {
+        Ok(r) => r,
+        Err(e) => panic!("deadlock: {e}"),
+    }
+}
+
+/// [`simulate_repriced`] with straggler jitter folded in — the planner's
+/// degraded-candidate scoring path ([`crate::planner::PlanRequest::faults`]):
+/// link degradation arrives through the `pricing` table (steady-state,
+/// via [`CommWorld::price_with_faults`]), jitter through `ctx`.
+pub(crate) fn simulate_repriced_faulted(
+    set: &ProgramSet,
+    pricing: &[(f64, f64)],
+    ctx: Option<&FaultCtx>,
+    scratch: &mut SimScratch,
+) -> SimResult {
+    match simulate_impl(&set.machine, set, Some(pricing), false, None, ctx, scratch) {
         Ok(r) => r,
         Err(e) => panic!("deadlock: {e}"),
     }
@@ -754,15 +924,19 @@ pub(crate) fn simulate_repriced(
 /// *disjoint* groups on one stream can legitimately overlap or serialize
 /// depending on arrival interleaving.
 pub fn simulate_permuted(machine: &Machine, set: &ProgramSet, order: &[usize]) -> SimResult {
+    check_order(set, order);
+    match simulate_impl(machine, set, None, false, Some(order), None, &mut SimScratch::default()) {
+        Ok(r) => r,
+        Err(e) => panic!("deadlock: {e}"),
+    }
+}
+
+fn check_order(set: &ProgramSet, order: &[usize]) {
     let mut seen = vec![false; set.world()];
     assert_eq!(order.len(), set.world(), "order must be a permutation of 0..world");
     for &g in order {
         assert!(g < seen.len() && !seen[g], "order must be a permutation of 0..world");
         seen[g] = true;
-    }
-    match simulate_impl(machine, set, None, false, Some(order), &mut SimScratch::default()) {
-        Ok(r) => r,
-        Err(e) => panic!("deadlock: {e}"),
     }
 }
 
@@ -772,6 +946,7 @@ fn simulate_impl(
     pricing: Option<&[(f64, f64)]>,
     keep_spans: bool,
     initial_order: Option<&[usize]>,
+    faults: Option<&FaultCtx>,
     scratch: &mut SimScratch,
 ) -> Result<SimResult, StallError> {
     assert_eq!(
@@ -877,9 +1052,20 @@ fn simulate_impl(
                     if !ok {
                         continue;
                     }
+                    if let Some(f) = faults {
+                        // a dead rank issues nothing starting at or past
+                        // its death: its streams block and the first
+                        // collective needing it becomes the detected stall
+                        if ready_at >= f.death[gpu] {
+                            continue;
+                        }
+                    }
                     match op.kind {
                         OpKind::Compute { flops, min_dim } => {
-                            let dur = machine.compute_time(flops, min_dim);
+                            let mut dur = machine.compute_time(flops, min_dim);
+                            if let Some(f) = faults {
+                                dur *= f.jitter[gpu];
+                            }
                             let start = ready_at;
                             let end = start + dur;
                             next[gpu][si] += 1;
@@ -923,10 +1109,17 @@ fn simulate_impl(
                             next[gpu][si] += 1;
                             comm_bytes[gpu] += kind.wire_bytes(info.size);
                             if st.arrived == st.group_size {
-                                let (bw, lat) = match pricing {
+                                let (mut bw, lat) = match pricing {
                                     Some(p) => p[b.group.0 as usize],
                                     None => (info.bw, info.lat),
                                 };
+                                if let Some(f) = faults {
+                                    for &(t0, s) in &f.link_scale[b.group.0 as usize] {
+                                        if st.ready_time >= t0 {
+                                            bw *= s;
+                                        }
+                                    }
+                                }
                                 let dur = kind.collective_time_on(info.size, bw, lat);
                                 let start = st.ready_time;
                                 let end = start + dur;
@@ -1033,6 +1226,7 @@ fn simulate_impl(
             name: set.op_name(g, i).to_string(),
             stuck_ops,
             detail,
+            at_s: now,
         });
     }
 

@@ -24,9 +24,11 @@ pub mod reference;
 pub mod trace;
 
 pub use comm_world::{CommWorld, GroupId, GroupInfo};
+pub(crate) use engine::{simulate_repriced_faulted, FaultCtx};
 pub use engine::{
-    simulate, simulate_permuted, simulate_with_trace, try_simulate, Op, OpKind, ProgramSet,
-    ProgramSetBuilder, SimResult, SimScratch, StallError, Stream,
+    simulate, simulate_faulted_permuted, simulate_permuted, simulate_with_trace, try_simulate,
+    try_simulate_faulted, FaultReport, Op, OpKind, ProgramSet, ProgramSetBuilder, SimResult,
+    SimScratch, StallError, Stream,
 };
 pub use machine::Machine;
 pub use placed::PlacedWorld;

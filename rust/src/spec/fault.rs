@@ -1,0 +1,257 @@
+//! The fault vocabulary: one declarative description of a degraded
+//! world — rank deaths, per-node link degradation, per-rank compute
+//! jitter (stragglers) and a checkpoint/restart cost model.
+//!
+//! A [`FaultSpec`] is pure data, like [`crate::spec::Layout`]: the
+//! engine ([`crate::sim::try_simulate_faulted`]) injects it as timed
+//! events, and the planner ([`crate::planner::PlanRequest::faults`])
+//! scores refined candidates by *expected* iterations/sec under it
+//! instead of steady-state makespan alone.  An empty spec
+//! ([`FaultSpec::is_empty`]) is the healthy world and simulates
+//! bit-for-bit identical to the fault-free engine (golden-pinned by
+//! `rust/tests/sim_golden.rs`).
+//!
+//! Determinism: straggler jitter is derived per *logical* rank from
+//! `jitter_seed` via a splitmix64 hash, so a fault scenario is a pure
+//! function of the spec — independent of issue order (the permutation
+//! property test covers injected faults too) and reproducible in the
+//! stdlib engine mirror (`python/tests/sim_mirror.py`), which re-derives
+//! every fault pin.
+
+/// A rank that dies `at_s` seconds into the iteration: it issues no op
+/// whose start time is at or past `at_s`, so the first collective that
+/// needs it stalls — the detected failure the recovery model prices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankDeath {
+    /// Logical rank that dies.
+    pub rank: usize,
+    /// Death time (seconds from iteration start).
+    pub at_s: f64,
+}
+
+/// A node whose network links degrade: from `at_s` on, every
+/// communicator that spans node boundaries *and* has a placed member on
+/// `node` runs at `bw_scale` of its ring bandwidth (node-local NVLink
+/// rings are unaffected).  This is how a placement that keeps its hot
+/// rings intra-node shrinks gracefully while one that spreads them
+/// across the sick node does not.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFault {
+    /// Physical node index (placed rank `r` lives on node
+    /// `r / gpus_per_node`).
+    pub node: usize,
+    /// Bandwidth multiplier in `(0, 1]` — e.g. `0.25` = the NIC
+    /// degrades to a quarter of its healthy bandwidth.
+    pub bw_scale: f64,
+    /// When the degradation starts (seconds from iteration start;
+    /// `0.0` = degraded from the outset, the planner's steady-state
+    /// assumption).
+    pub at_s: f64,
+}
+
+/// The whole failure model: injected events for the engine plus the
+/// rate/cost parameters the expected-throughput scoring consumes.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Ranks that die mid-iteration.
+    pub deaths: Vec<RankDeath>,
+    /// Nodes whose links degrade.
+    pub links: Vec<LinkFault>,
+    /// Straggler jitter amplitude: each rank's compute durations are
+    /// scaled by a deterministic factor in `[1, 1 + jitter)` drawn from
+    /// `jitter_seed` (0 = no jitter).
+    pub jitter: f64,
+    /// Seed for the per-rank jitter factors.
+    pub jitter_seed: u64,
+    /// Checkpoint interval in seconds (0 = derive the Young-optimal
+    /// interval `sqrt(2 * cost * MTBF)` at scoring time).
+    pub ckpt_interval_s: f64,
+    /// Per-rank checkpoint write bandwidth in bytes/s (prices one
+    /// checkpoint at `state_bytes_per_rank / ckpt_bw`).
+    pub ckpt_bw: f64,
+    /// Restart cost after a detected failure (seconds).
+    pub restart_s: f64,
+    /// Mean time between failures for the whole job (seconds;
+    /// 0 = fault-blind scoring).
+    pub mtbf_s: f64,
+    /// Mean time to repair: while a failed node is out, the job runs in
+    /// the degraded state, so the degraded-state weight in the expected
+    /// throughput is `mttr / (mtbf + mttr)`.
+    pub mttr_s: f64,
+}
+
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl FaultSpec {
+    /// The default failure scenario for a given MTBF — what
+    /// `plan --mtbf` and the `bench-sim` fault fields use: one sick
+    /// node (node 0 at a quarter of its link bandwidth, degraded from
+    /// the start), no deaths, no jitter, and the ROADMAP-documented
+    /// checkpoint/restart defaults (2 GB/s per-rank checkpoint writes,
+    /// 180 s restart, 30 min repair, Young-optimal interval).
+    pub fn with_mtbf(mtbf_s: f64) -> FaultSpec {
+        FaultSpec {
+            deaths: Vec::new(),
+            links: vec![LinkFault { node: 0, bw_scale: 0.25, at_s: 0.0 }],
+            jitter: 0.0,
+            jitter_seed: 0,
+            ckpt_interval_s: 0.0,
+            ckpt_bw: 2e9,
+            restart_s: 180.0,
+            mtbf_s,
+            mttr_s: 1800.0,
+        }
+    }
+
+    /// Builder-style: add a rank death.
+    pub fn death(mut self, rank: usize, at_s: f64) -> FaultSpec {
+        self.deaths.push(RankDeath { rank, at_s });
+        self
+    }
+
+    /// Builder-style: add a link fault.
+    pub fn link(mut self, node: usize, bw_scale: f64, at_s: f64) -> FaultSpec {
+        self.links.push(LinkFault { node, bw_scale, at_s });
+        self
+    }
+
+    /// Builder-style: set the straggler jitter.
+    pub fn jitter(mut self, amplitude: f64, seed: u64) -> FaultSpec {
+        self.jitter = amplitude;
+        self.jitter_seed = seed;
+        self
+    }
+
+    /// Builder-style: set the checkpoint model.
+    pub fn checkpoint(mut self, interval_s: f64, bw: f64) -> FaultSpec {
+        self.ckpt_interval_s = interval_s;
+        self.ckpt_bw = bw;
+        self
+    }
+
+    /// Whether the spec injects nothing into the engine (the checkpoint
+    /// and rate parameters only matter to scoring): an empty spec takes
+    /// the fault-free code path and is bit-for-bit the plain engine.
+    pub fn is_empty(&self) -> bool {
+        self.deaths.is_empty() && self.links.is_empty() && self.jitter <= 0.0
+    }
+
+    /// The deterministic compute-duration multiplier for a rank: `1.0`
+    /// without jitter, else `1 + jitter * u` with `u ∈ [0, 1)` hashed
+    /// from `(jitter_seed, rank)`.  Mirrored bit-for-bit in
+    /// `python/tests/sim_mirror.py` (same splitmix64, same `>> 11`
+    /// mantissa reduction).
+    pub fn jitter_factor(&self, rank: usize) -> f64 {
+        if self.jitter <= 0.0 {
+            return 1.0;
+        }
+        let h = splitmix64(self.jitter_seed ^ (rank as u64).wrapping_mul(GOLDEN));
+        1.0 + self.jitter * ((h >> 11) as f64 * (1.0 / (1u64 << 53) as f64))
+    }
+
+    /// Parse the `simulate --fault` syntax: a comma-separated list of
+    /// `dead:RANK@T`, `link:NODE@SCALE[@T]` and `jitter:AMP[@SEED]`
+    /// clauses, e.g. `--fault link:0@0.25,jitter:0.05@7`.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for clause in s.split(',').filter(|c| !c.is_empty()) {
+            let (kind, rest) = clause
+                .split_once(':')
+                .ok_or_else(|| format!("fault clause `{clause}` is missing `kind:`"))?;
+            let parts: Vec<&str> = rest.split('@').collect();
+            let num = |i: usize| -> Result<f64, String> {
+                parts
+                    .get(i)
+                    .and_then(|p| p.parse::<f64>().ok())
+                    .ok_or_else(|| format!("fault clause `{clause}`: bad number"))
+            };
+            match (kind, parts.len()) {
+                ("dead", 2) => spec = spec.death(num(0)? as usize, num(1)?),
+                ("link", 2) => spec = spec.link(num(0)? as usize, num(1)?, 0.0),
+                ("link", 3) => spec = spec.link(num(0)? as usize, num(1)?, num(2)?),
+                ("jitter", 1) => spec = spec.jitter(num(0)?, 0),
+                ("jitter", 2) => spec = spec.jitter(num(0)?, num(1)? as u64),
+                _ => {
+                    return Err(format!(
+                        "unknown fault clause `{clause}` (expected dead:RANK@T, \
+                         link:NODE@SCALE[@T] or jitter:AMP[@SEED])"
+                    ))
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_empty() {
+        assert!(FaultSpec::default().is_empty());
+        assert!(!FaultSpec::default().death(0, 1.0).is_empty());
+        assert!(!FaultSpec::default().link(0, 0.5, 0.0).is_empty());
+        assert!(!FaultSpec::default().jitter(0.1, 7).is_empty());
+        // scoring-only parameters do not make the spec non-empty
+        let mut scoring_only = FaultSpec::with_mtbf(3600.0);
+        scoring_only.links.clear();
+        assert!(scoring_only.is_empty());
+    }
+
+    #[test]
+    fn jitter_factors_are_deterministic_and_bounded() {
+        let spec = FaultSpec::default().jitter(0.1, 42);
+        for r in 0..64 {
+            let f = spec.jitter_factor(r);
+            assert!((1.0..1.1).contains(&f), "rank {r}: {f}");
+            assert_eq!(f.to_bits(), spec.jitter_factor(r).to_bits());
+        }
+        // distinct ranks draw distinct factors (with overwhelming
+        // probability; pinned for this seed)
+        assert_ne!(spec.jitter_factor(0).to_bits(), spec.jitter_factor(1).to_bits());
+        // a different seed moves the factors
+        let other = FaultSpec::default().jitter(0.1, 43);
+        assert_ne!(spec.jitter_factor(0).to_bits(), other.jitter_factor(0).to_bits());
+        // no jitter -> exact 1.0 regardless of seed
+        assert_eq!(FaultSpec::default().jitter_factor(5), 1.0);
+    }
+
+    #[test]
+    fn parse_roundtrips_the_cli_syntax() {
+        let spec = FaultSpec::parse("dead:3@1.5,link:0@0.25,link:2@0.5@2.0,jitter:0.05@7")
+            .expect("parse");
+        assert_eq!(spec.deaths, vec![RankDeath { rank: 3, at_s: 1.5 }]);
+        assert_eq!(
+            spec.links,
+            vec![
+                LinkFault { node: 0, bw_scale: 0.25, at_s: 0.0 },
+                LinkFault { node: 2, bw_scale: 0.5, at_s: 2.0 },
+            ]
+        );
+        assert_eq!(spec.jitter, 0.05);
+        assert_eq!(spec.jitter_seed, 7);
+        assert!(FaultSpec::parse("").expect("empty").is_empty());
+        assert!(FaultSpec::parse("dead:3").is_err());
+        assert!(FaultSpec::parse("flaky:1@2").is_err());
+        assert!(FaultSpec::parse("link:0@x").is_err());
+    }
+
+    #[test]
+    fn with_mtbf_defaults_are_the_documented_scenario() {
+        let spec = FaultSpec::with_mtbf(3600.0);
+        assert_eq!(spec.mtbf_s, 3600.0);
+        assert_eq!(spec.links, vec![LinkFault { node: 0, bw_scale: 0.25, at_s: 0.0 }]);
+        assert!(spec.deaths.is_empty());
+        assert_eq!(spec.jitter, 0.0);
+        assert_eq!(spec.ckpt_interval_s, 0.0, "0 = Young-optimal at scoring time");
+        assert!(spec.ckpt_bw > 0.0 && spec.restart_s > 0.0 && spec.mttr_s > 0.0);
+    }
+}

@@ -23,6 +23,9 @@
 use crate::mesh::{divisors, Mesh};
 use crate::ndmesh::Extent;
 
+pub mod fault;
+pub use fault::{FaultSpec, LinkFault, RankDeath};
+
 /// How parameter/optimizer state is laid out across the data dimension.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum StateMode {
@@ -329,6 +332,27 @@ impl Layout {
         self.placement.perm(self.g_pipe, self.g_data, self.g_r, self.g_c, gpus_per_node)
     }
 
+    /// The layout the world shrinks to after a rank death: the whole
+    /// data-parallel slice containing the casualty is drained and the
+    /// survivors keep training on `G_data - 1` replicas (every other
+    /// axis — tensor grid, depth, pipeline stages — is untouched, so
+    /// each pipeline stage re-balances onto the surviving replicas of
+    /// the same stage).  `None` when there is no replica to drop
+    /// (`G_data == 1`).  The placement is kept if it is still
+    /// admissible on the shrunken shape, else falls back to
+    /// column-major.  `strategies::survivor_build` compiles it.
+    pub fn survivor(&self, gpus_per_node: usize) -> Option<Layout> {
+        if self.g_data < 2 {
+            return None;
+        }
+        let mut s = self.clone();
+        s.g_data -= 1;
+        if !s.placement.admissible(s.g_pipe, s.g_data, s.g_r, s.g_c, gpus_per_node) {
+            s.placement = Placement::ColumnMajor;
+        }
+        Some(s)
+    }
+
     /// Compact human-readable description.
     pub fn label(&self) -> String {
         let mut s = format!("(g_data={}, g_r={}, g_c={})", self.g_data, self.g_r, self.g_c);
@@ -484,6 +508,25 @@ mod tests {
         assert_eq!(set[0], Placement::ColumnMajor);
         // NodeBlocked { rows: 4 } == column-major here -> deduped
         assert!(!set.contains(&Placement::NodeBlocked { rows: 4 }));
+    }
+
+    #[test]
+    fn survivor_drops_one_data_replica() {
+        let l = Layout::tensor3d(4, 2, 4, 2).pipeline(2, 8);
+        let s = l.survivor(4).expect("g_data >= 2 shrinks");
+        assert_eq!(s.g_data, 3);
+        assert_eq!(s.g_pipe, 2, "pipeline stages re-balance, not disappear");
+        assert_eq!(s.world(), l.world() - l.world() / l.g_data);
+        // nothing to drop at g_data = 1
+        assert_eq!(Layout::tensor3d(1, 2, 4, 2).survivor(4), None);
+        // a named placement survives the shrink (admissibility does not
+        // depend on g_data) ...
+        let b = Layout::tensor3d(2, 4, 4, 1).placement(Placement::NodeBlocked { rows: 2 });
+        assert_eq!(b.survivor(4).unwrap().placement, Placement::NodeBlocked { rows: 2 });
+        // ... but a Custom permutation is world-sized and falls back
+        let world: Vec<usize> = (0..32).rev().collect();
+        let c = Layout::tensor3d(2, 4, 4, 1).placement(Placement::Custom(world));
+        assert_eq!(c.survivor(4).unwrap().placement, Placement::ColumnMajor);
     }
 
     #[test]

@@ -1133,6 +1133,53 @@ pub fn iterate_placed(
     (r.makespan, gb)
 }
 
+/// [`iterate_placed`] that surfaces a stall as the structured
+/// [`StallError`] instead of panicking with the `deadlock:` prefix — the
+/// CLI's graceful-degradation path (`simulate` / `bench-sim` exit
+/// non-zero with the rank/op diagnostics).
+pub fn try_iterate_placed(
+    strategy: Strategy,
+    net: &NetworkDesc,
+    mesh: &Mesh,
+    batch: usize,
+    machine: &Machine,
+    opts: ScheduleOpts,
+    placement: &Placement,
+) -> Result<(f64, f64), crate::sim::StallError> {
+    let set = build_placed(strategy, net, mesh, batch, machine, opts, placement);
+    let r = crate::sim::try_simulate(machine, &set)?;
+    let gb = r.comm_bytes.iter().sum::<f64>() / r.comm_bytes.len() as f64 / 1e9;
+    Ok((r.makespan, gb))
+}
+
+/// Re-balance a layout onto the survivors of one lost data replica and
+/// compile it: the elastic-shrink move the fault-aware planner prices.
+///
+/// The replica containing `dead_rank` is dropped ([`Layout::survivor`]
+/// shrinks `g_data` by one, keeping the tensor/pipeline axes — and the
+/// placement, when it still divides the survivor world), and the batch
+/// shrinks proportionally (`per-replica batch × (g_data - 1)`): the
+/// survivors keep their per-GPU work instead of inheriting the dead
+/// replica's share, which is how elastic data parallelism actually
+/// redistributes.  `None` when there is no replica to drop (`g_data <
+/// 2`) or the batch does not divide evenly into replicas.
+pub fn survivor_build(
+    layout: &Layout,
+    net: &NetworkDesc,
+    batch: usize,
+    machine: &Machine,
+    dead_rank: usize,
+) -> Option<(Layout, usize, ProgramSet)> {
+    assert!(dead_rank < layout.world(), "dead rank {dead_rank} outside world");
+    let shrunk = layout.survivor(machine.gpus_per_node)?;
+    if batch % layout.g_data != 0 {
+        return None;
+    }
+    let survivor_batch = (batch / layout.g_data) * shrunk.g_data;
+    let set = build(&shrunk, net, survivor_batch, machine);
+    Some((shrunk, survivor_batch, set))
+}
+
 /// Model-flops utilization (Table 4 metric): achieved flops per GPU over
 /// peak, using the network's analytic train flops.
 pub fn mfu(net: &NetworkDesc, batch: usize, world: usize, time_s: f64, machine: &Machine) -> f64 {
@@ -1626,5 +1673,27 @@ mod tests {
         assert!(set.bindings.iter().all(|b| b.len() == slots));
         // names are shared: far fewer than total ops
         assert!(set.names.len() * 8 < set.total_ops());
+    }
+
+    #[test]
+    fn survivor_build_drops_one_replica_and_its_batch_share() {
+        let net = small_net();
+        let machine = Machine::polaris();
+        let layout = Layout::tensor3d(4, 2, 2, 1);
+        let (shrunk, batch, set) =
+            survivor_build(&layout, &net, 64, &machine, 0).expect("g_data=4 can shrink");
+        assert_eq!(shrunk.g_data, 3);
+        assert_eq!(batch, 48, "per-replica batch (16) preserved across 3 survivors");
+        assert_eq!(set.world(), shrunk.world());
+        // survivors keep their per-GPU work: makespan within a whisker of
+        // the healthy run (same per-replica batch, same tensor axes; only
+        // the data all-reduce ring shrinks)
+        let healthy = crate::sim::simulate(&machine, &build(&layout, &net, 64, &machine));
+        let shrunk_r = crate::sim::simulate(&machine, &set);
+        let ratio = shrunk_r.makespan / healthy.makespan;
+        assert!((0.8..1.2).contains(&ratio), "graceful shrink, got ratio {ratio}");
+        // no replica to drop -> None; odd batches that don't split -> None
+        assert!(survivor_build(&Layout::tensor3d(1, 2, 2, 1), &net, 64, &machine, 0).is_none());
+        assert!(survivor_build(&layout, &net, 63, &machine, 0).is_none());
     }
 }

@@ -44,7 +44,7 @@
 use tensor3d::mesh::Mesh;
 use tensor3d::models::{gpt, unet, NetworkDesc};
 use tensor3d::sim::{self, reference, Machine};
-use tensor3d::spec::{Layout, Placement, StateMode};
+use tensor3d::spec::{FaultSpec, Layout, Placement, StateMode};
 use tensor3d::strategies::{self, ScheduleOpts, Strategy};
 use tensor3d::util::rng::Rng;
 
@@ -527,6 +527,163 @@ fn materialized_programs_expand_the_dedup_faithfully() {
             if let Some((_tag, _bytes, group)) = op.kind.collective() {
                 assert!(group.contains(&g), "rank must be a member of its own collective");
             }
+        }
+    }
+}
+
+#[test]
+fn zero_fault_spec_is_bit_for_bit_the_fault_free_engine() {
+    // the fault-injection hooks ride the hot event loop, so the golden
+    // guarantee of PR 7 is that an empty FaultSpec (no deaths, no link
+    // faults, zero jitter) takes the fault-free code path exactly: same
+    // makespan bits and per-GPU accounting on every golden shape, no
+    // detection, no recovery charges
+    let spec = FaultSpec::default();
+    assert!(spec.is_empty());
+    for case in cases() {
+        let set = strategies::build_programs_with(
+            case.strategy,
+            &case.net,
+            &case.mesh,
+            case.batch,
+            &case.machine,
+            case.opts,
+        );
+        let plain = sim::simulate(&case.machine, &set);
+        let faulted = sim::try_simulate_faulted(&case.machine, &set, &spec)
+            .unwrap_or_else(|e| panic!("{}: zero-fault run stalled: {e}", case.name));
+        assert!(faulted.detected.is_none(), "{}: phantom death detected", case.name);
+        assert_eq!(faulted.lost_work_s, 0.0, "{}", case.name);
+        assert_eq!(faulted.restart_s, 0.0, "{}", case.name);
+        assert_eq!(
+            faulted.effective_makespan_s.to_bits(),
+            plain.makespan.to_bits(),
+            "{}: effective makespan {} != fault-free {}",
+            case.name,
+            faulted.effective_makespan_s,
+            plain.makespan
+        );
+        assert_eq!(faulted.result.makespan.to_bits(), plain.makespan.to_bits(), "{}", case.name);
+        for g in 0..set.world() {
+            assert_eq!(
+                faulted.result.compute_busy[g].to_bits(),
+                plain.compute_busy[g].to_bits(),
+                "{}: compute_busy[{g}]",
+                case.name
+            );
+            assert_eq!(
+                faulted.result.comm_busy[g].to_bits(),
+                plain.comm_busy[g].to_bits(),
+                "{}: comm_busy[{g}]",
+                case.name
+            );
+            assert_eq!(
+                faulted.result.comm_bytes[g].to_bits(),
+                plain.comm_bytes[g].to_bits(),
+                "{}: comm_bytes[{g}]",
+                case.name
+            );
+        }
+    }
+}
+
+#[test]
+fn faulted_simulation_invariant_under_issue_order_permutation() {
+    // the permutation-invariance property extends to injected faults:
+    // jitter is a per-rank factor, the death gate cuts on dep-determined
+    // ready times, and timed link steps key on the collective's
+    // rendezvous start — none of which depend on the order GPUs are
+    // first examined.  Both a completing spec (links + jitter) and a
+    // detecting spec (rank death mid-run) must produce bit-identical
+    // reports under seeded issue-order shuffles.
+    let machine = Machine::polaris();
+    let net = small_net();
+    let sharded = ScheduleOpts { sharded_state: true, dp_barrier: false };
+    let configs: Vec<(Strategy, Mesh, ScheduleOpts)> = vec![
+        (
+            Strategy::Tensor3d { depth: 2, transpose_opt: true },
+            Mesh::new(2, 2, 4, 1),
+            ScheduleOpts::default(),
+        ),
+        (Strategy::Tensor3d { depth: 2, transpose_opt: true }, Mesh::new(4, 2, 4, 1), sharded),
+        (
+            Strategy::Tensor3dPipeline {
+                depth: 1,
+                transpose_opt: true,
+                stages: 2,
+                microbatches: 4,
+            },
+            Mesh::new(2, 1, 2, 1),
+            ScheduleOpts::default(),
+        ),
+    ];
+    for (strategy, mesh, opts) in configs {
+        let set = strategies::build_programs_with(strategy, &net, &mesh, 64, &machine, opts);
+        let healthy = sim::simulate(&machine, &set);
+
+        // a completing spec: one sick node mid-run plus stragglers
+        let degraded = FaultSpec::default()
+            .link(0, 0.25, healthy.makespan * 0.3)
+            .jitter(0.05, 7);
+        let base = sim::try_simulate_faulted(&machine, &set, &degraded)
+            .unwrap_or_else(|e| panic!("{strategy:?} {mesh}: degraded run stalled: {e}"));
+        assert!(
+            base.result.makespan >= healthy.makespan,
+            "{strategy:?} {mesh}: degradation sped the run up ({} < {})",
+            base.result.makespan,
+            healthy.makespan
+        );
+
+        // a detecting spec: rank 1 dies mid-run; quarter-iteration
+        // checkpoints bound the lost work below the detection time
+        let mut lethal = FaultSpec::default()
+            .death(1, healthy.makespan * 0.4)
+            .checkpoint(healthy.makespan * 0.25, 2e9);
+        lethal.restart_s = 30.0;
+        let base_dead = sim::try_simulate_faulted(&machine, &set, &lethal)
+            .unwrap_or_else(|e| panic!("{strategy:?} {mesh}: death run propagated a stall: {e}"));
+        let detected = base_dead.detected.as_ref().unwrap_or_else(|| {
+            panic!("{strategy:?} {mesh}: rank death was not detected")
+        });
+        assert!(detected.at_s > 0.0 && detected.stuck_ops > 0);
+        assert!(base_dead.lost_work_s >= 0.0 && base_dead.restart_s == 30.0);
+        assert_eq!(
+            base_dead.effective_makespan_s.to_bits(),
+            (base_dead.result.makespan + 30.0 + base_dead.lost_work_s).to_bits(),
+            "{strategy:?} {mesh}: recovery accounting drifted"
+        );
+
+        let mut rng = Rng::new(0xD15EA5E);
+        for trial in 0..4u64 {
+            let mut order: Vec<usize> = (0..set.world()).collect();
+            rng.shuffle(&mut order);
+            let r = sim::simulate_faulted_permuted(&machine, &set, &degraded, &order)
+                .unwrap_or_else(|e| panic!("{strategy:?} {mesh}: trial {trial} stalled: {e}"));
+            assert_eq!(
+                r.result.makespan.to_bits(),
+                base.result.makespan.to_bits(),
+                "{strategy:?} {mesh}: trial {trial} degraded makespan {} != {}",
+                r.result.makespan,
+                base.result.makespan
+            );
+            let d = sim::simulate_faulted_permuted(&machine, &set, &lethal, &order)
+                .unwrap_or_else(|e| panic!("{strategy:?} {mesh}: trial {trial} died: {e}"));
+            let dd = d.detected.as_ref().expect("death detected under permutation");
+            assert_eq!(
+                dd.at_s.to_bits(),
+                detected.at_s.to_bits(),
+                "{strategy:?} {mesh}: trial {trial} detection time {} != {}",
+                dd.at_s,
+                detected.at_s
+            );
+            assert_eq!(dd.stuck_ops, detected.stuck_ops, "{strategy:?} {mesh}: trial {trial}");
+            assert_eq!(
+                d.effective_makespan_s.to_bits(),
+                base_dead.effective_makespan_s.to_bits(),
+                "{strategy:?} {mesh}: trial {trial} effective makespan {} != {}",
+                d.effective_makespan_s,
+                base_dead.effective_makespan_s
+            );
         }
     }
 }
