@@ -31,6 +31,9 @@ SCHEMA = [
     ("model", "str"),
     ("gpus", "pos_int"),
     ("machine", "str"),
+    # Fabric tier count (PR 8): 0 = flat two-level machine, >= 2 =
+    # multi-tier topology (node/rail/spine) with hierarchical collectives.
+    ("tiers", "int"),
     ("depth", "pos_int"),
     ("pipeline", "pos_int"),
     ("microbatches", "pos_int"),

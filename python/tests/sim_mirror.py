@@ -77,7 +77,7 @@ STATE_BUDGET = 0.6
 
 class Machine:
     def __init__(self, name, gpn, peak, mem, intra_bw, intra_lat, inter_bw, nic, inter_lat,
-                 effmax, halfdim):
+                 effmax, halfdim, tiers=None, flat_collectives=False):
         self.name = name
         self.gpus_per_node = gpn
         self.peak_flops = peak
@@ -89,6 +89,10 @@ class Machine:
         self.inter_lat_s = inter_lat
         self.gemm_eff_max = effmax
         self.gemm_eff_halfdim = halfdim
+        # mirror of sim::fabric::Tier: [(name, radix, bw, link_bw, lat_s)]
+        # from the node tier up; [] = flat two-level machine
+        self.tiers = list(tiers) if tiers else []
+        self.flat_collectives = flat_collectives
 
     def gemm_eff(self, md):
         return self.gemm_eff_max * md / (md + self.gemm_eff_halfdim)
@@ -147,6 +151,73 @@ def polaris():
 
 def frontier():
     return Machine("frontier", 8, 191.5e12, 64e9, 100e9, 2e-6, 100e9, 25e9, 4e-6, 0.55, 96.0)
+
+
+def perlmutter_xl():
+    """Mirror of Machine::perlmutter_xl (8 GPUs/node x 64-node rails x
+    128 rails = 65,536 GPUs; rail-optimized fat tree, 4:1 oversubscribed
+    into the spine)."""
+    tiers = [("node", 8, 300e9, 300e9, 2e-6),
+             ("rail", 64, 4.0 * 25e9, 25e9, 4e-6),
+             ("spine", 128, 1.6e12, 12.5e9, 6e-6)]
+    return Machine("perlmutter-xl", 8, 312e12, 80e9, 300e9, 2e-6, 4.0 * 25e9, 25e9, 4e-6,
+                   0.62, 96.0, tiers=tiers)
+
+
+FLAT_TOP_RADIX = 1 << 24
+
+
+def flat_tiers(machine):
+    """Mirror of fabric::flat_tiers: the two-tier embedding of a flat
+    Machine (node tier from the intra parameters, one boundless fabric
+    tier from the NIC parameters)."""
+    return [("node", machine.gpus_per_node, machine.intra_bw, machine.intra_bw,
+             machine.intra_lat_s),
+            ("fabric", FLAT_TOP_RADIX, machine.inter_bw_per_node, machine.nic_bw,
+             machine.inter_lat_s)]
+
+
+def unit_sizes(tiers):
+    """Mirror of fabric::unit_sizes: cumulative radix products."""
+    out, acc = [], 1
+    for (_, radix, _, _, _) in tiers:
+        acc *= radix
+        out.append(acc)
+    return out
+
+
+def max_per_unit(members, unit):
+    """Mirror of fabric::max_per_unit: most members sharing one
+    ``unit``-sized block of ranks."""
+    best = 1
+    for i, r in enumerate(members):
+        u = r // unit
+        if any(q // unit == u for q in members[:i]):
+            continue
+        best = max(best, sum(1 for q in members[i:] if q // unit == u))
+    return best
+
+
+def tiered_bw_lat(machine, members):
+    """Mirror of fabric::tiered_bw_lat: price a ring over ``members`` at
+    the highest tier it spans, splitting that tier's bandwidth across
+    the same-shape groups sharing its links and capping at every lower
+    tier's per-link ceiling."""
+    tiers = machine.tiers if machine.tiers else flat_tiers(machine)
+    sizes = unit_sizes(tiers)
+    t = 0
+    for k in range(len(tiers)):
+        t = k
+        if all(r // sizes[k] == members[0] // sizes[k] for r in members):
+            break
+    if t == 0:
+        return (tiers[0][2], tiers[0][4])
+    per_unit = max_per_unit(members, sizes[t - 1])
+    cg = max(sizes[t - 1] // max(per_unit, 1), 1)
+    share = min(tiers[t][2] / cg, tiers[t][3])
+    for k in range(1, t):
+        share = min(share, tiers[k][3])
+    return (min(share, tiers[0][2]), tiers[t][4])
 
 
 class Mesh:
@@ -392,6 +463,66 @@ def build_t3d(net, mesh_in, batch, depth, machine, sharded=False, barrier=False)
     return programs
 
 
+def hierarchize(machine, programs):
+    """Mirror of the ProgramSetBuilder's hierarchical decomposition on
+    tiered machines: every AR/AG/RS over a group with >= 2 members on
+    each of >= 2 nodes (uniformly) expands into intra-node + rail
+    sub-ops with chained deps on the caller's stream; everything else —
+    and every program on a flat or ``flat_collectives`` machine — is
+    returned untouched.  Sub-op rendezvous tags are ``(base_tag, phase,
+    subgroup)`` tuples, disjoint from the integer tags of flat ops."""
+    if not machine.tiers or machine.flat_collectives:
+        return programs
+    gpn = machine.gpus_per_node
+    split_cache = {}
+
+    def split(grp):
+        if grp in split_cache:
+            return split_cache[grp]
+        by_node, slot = [], {}
+        for r in grp:
+            s = slot.setdefault(r // gpn, len(by_node))
+            if s == len(by_node):
+                by_node.append([])
+            by_node[s].append(r)
+        m = len(by_node[0])
+        if len(by_node) < 2 or m < 2 or any(len(v) != m for v in by_node):
+            split_cache[grp] = None
+        else:
+            per = {}
+            for j in range(m):
+                rail = tuple(v[j] for v in by_node)
+                for v in by_node:
+                    per[v[j]] = (tuple(v), rail)
+            split_cache[grp] = (m, per)
+        return split_cache[grp]
+
+    out = []
+    for rank, ops in enumerate(programs):
+        new, remap = [], {}
+        for oi, (kind, a, b, tg, grp, stream, deps) in enumerate(ops):
+            deps = tuple(remap[d] for d in deps)
+            sp = split(grp) if kind in (AR, AG, RS) and grp is not None else None
+            if sp is None:
+                new.append((kind, a, b, tg, grp, stream, deps))
+            else:
+                m, per = sp
+                intra, rail = per[rank]
+                if kind == AR:
+                    new.append((RS, a, b, (tg, 0, intra), intra, stream, deps))
+                    new.append((AR, a / m, b, (tg, 1, rail), rail, stream, (len(new) - 1,)))
+                    new.append((AG, a, b, (tg, 2, intra), intra, stream, (len(new) - 1,)))
+                elif kind == AG:
+                    new.append((AG, a / m, b, (tg, 1, rail), rail, stream, deps))
+                    new.append((AG, a, b, (tg, 2, intra), intra, stream, (len(new) - 1,)))
+                else:
+                    new.append((RS, a, b, (tg, 0, intra), intra, stream, deps))
+                    new.append((RS, a / m, b, (tg, 1, rail), rail, stream, (len(new) - 1,)))
+            remap[oi] = len(new) - 1
+        out.append(new)
+    return out
+
+
 def coll_time_on(kind, bytes_, p, bw, lat):
     """Mirror of OpKind::collective_time_on (the explicitly-priced
     engine path): ring all-reduce / all-gather / reduce-scatter and the
@@ -443,6 +574,7 @@ def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=No
     heap = []
     state = {"seq": 0, "now": 0.0}
     pernode_cache = {}
+    tiered_cache = {}
 
     def per_node(grp):
         if pricing is not None:
@@ -451,6 +583,16 @@ def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=No
         if r is None:
             r = machine.members_per_node(grp)
             pernode_cache[grp] = r
+        return r
+
+    def tiered(grp):
+        # mirror of Machine::group_bw_lat on tiered machines (the
+        # ``pricing`` occupancy override is a flat-ring concept; placed
+        # tiered runs feed ``priced`` maps instead)
+        r = tiered_cache.get(grp)
+        if r is None:
+            r = tiered_bw_lat(machine, grp)
+            tiered_cache[grp] = r
         return r
 
     def try_issue(gpu):
@@ -498,6 +640,9 @@ def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=No
                         p = len(grp)
                         if priced is not None:
                             bw, lat = priced[grp]
+                            dur = coll_time_on(kind, op[1], p, bw, lat)
+                        elif machine.tiers and pricing is None:
+                            bw, lat = tiered(grp)
                             dur = coll_time_on(kind, op[1], p, bw, lat)
                         elif kind == AR:
                             dur = machine.allreduce_time(op[1], p, per_node(grp))
@@ -780,6 +925,7 @@ def refine(net, batch, world, machine, mode, k=6, depth=2):
     scored = []
     for m in top:
         progs = build_t3d(net, m, batch, depth, machine, sharded=(mode == "sh"))
+        progs = hierarchize(machine, progs)  # identity on flat machines
         scored.append((m, simulate(machine, progs)[0]))
     scored.sort(key=lambda x: x[1])
     basemk = [mk for m, mk in scored if m.key() == base.key()][0]
@@ -1287,3 +1433,88 @@ if __name__ == "__main__":
           f"expected {ips:.5f} iters/s")
     print("ok: fault-aware gpt80b/1024 plan fields match the CI golden "
           "(ci/golden_plan_gpt80b_1024_faulted.json)")
+
+    # The two-tier embedding (PR 8): every flat Machine is a two-tier
+    # fabric (node tier + one boundless NIC tier), and pricing through
+    # the tier path must reproduce ring_bw_lat exactly — the float-equal
+    # guarantee behind fabric::tests::
+    # two_tier_embedding_prices_flat_machines_bit_for_bit.
+    for fm in (perlmutter(), polaris(), frontier()):
+        tm = type(fm)(fm.name, fm.gpus_per_node, fm.peak_flops, fm.mem_bytes,
+                      fm.intra_bw, fm.intra_lat_s, fm.inter_bw_per_node, fm.nic_bw,
+                      fm.inter_lat_s, fm.gemm_eff_max, fm.gemm_eff_halfdim,
+                      tiers=flat_tiers(fm))
+        gpn = fm.gpus_per_node
+        shapes = [(0, 1), tuple(range(gpn)), (0, gpn), (0, 1, gpn, gpn + 1),
+                  tuple(range(4 * gpn)), (0, 2 * gpn, 5 * gpn, 7 * gpn), (3,)]
+        for grp in shapes:
+            flat = fm.ring_bw_lat(len(grp), fm.members_per_node(grp))
+            tier = tiered_bw_lat(tm, grp)
+            assert flat == tier, f"{fm.name} {grp}: flat {flat} vs embedded {tier}"
+    print("ok: the two-tier embedding prices every flat preset bit-for-bit")
+
+    # The hierarchical-collectives crossover pin (PR 8), asserted in
+    # Rust by strategies::tests::hierarchical_beats_flat_past_the_rail_
+    # crossover: a 256 MB all-reduce over 2 members/node on perlmutter-xl
+    # scanned across node counts.  Small groups win on halved latency
+    # rounds; inside one 64-node rail the flat ring's 2-members-share-
+    # 4-NICs price (50 GB/s) beats the decomposition's rail phase (the
+    # rail link cap, 25 GB/s per direction is already below the halved
+    # bytes' gain) by a hair; past the rail boundary both price at the
+    # spine link and the decomposition's m-fold smaller cross-fabric
+    # bytes win by ~2x.
+    xl = perlmutter_xl()
+    xlf = perlmutter_xl()
+    xlf.flat_collectives = True
+    B = 256e6
+    flat_wins = []
+    for n in (2, 4, 8, 16, 32, 64, 128, 256):
+        members = tuple(r for k in range(n) for r in (8 * k, 8 * k + 1))
+        progs = [[(AR, B, 0.0, 7, members, 1, ())] if r in set(members) else []
+                 for r in range(8 * n)]
+        t_hier, _ = simulate(xl, hierarchize(xl, progs))
+        t_flat, _ = simulate(xlf, progs)
+        if t_flat < t_hier:
+            flat_wins.append(n)
+        print(f"  AR 256 MB, 2/node x {n:>3} nodes: "
+              f"flat {t_flat * 1e3:8.3f} ms  hier {t_hier * 1e3:8.3f} ms"
+              f"  ({'flat' if t_flat < t_hier else 'hier'} wins)")
+        if n == 128:
+            assert t_flat > 1.5 * t_hier, \
+                "the cross-rail hierarchical win must be decisive (>1.5x)"
+    assert flat_wins == [16, 32, 64], \
+        f"crossover drifted: flat wins at {flat_wins}, expected [16, 32, 64]"
+    print("ok: hierarchical beats flat outside the single-rail window "
+          "(flat wins exactly 16/32/64 nodes, as the Rust test pins)")
+
+    # The tiered paper-scale golden (PR 8): the CI bench-smoke job runs
+    # `plan --model gpt80b --gpus 1024 --machine perlmutter-xl --refine 2
+    # --placements column-major --json` and diffs it against
+    # ci/golden_plan_gpt80b_1024_xl.json (discrete fields exact, floats
+    # within 5%; the golden's floats are authored here).  The refined
+    # sweep on the tiered preset exercises the hierarchical path end to
+    # end: every g_r=4 candidate's row rings put 2 members on each node
+    # and decompose into intra-node RS -> cross-rail AR -> intra-node AG.
+    xbase, xbasemk, xscored = refine(gpt80b, 1024, 1024, perlmutter_xl(), "rep",
+                                     k=2, depth=2)
+    print(f"gpt80b/1024 perlmutter-xl replicated: Eq.-4 base {xbase.key()} "
+          f"at {xbasemk!r}s")
+    for m, mk in xscored:
+        mark = " <- sim winner" if (m, mk) == xscored[0] else ""
+        print(f"  {m.key()}: {mk!r}s{mark}")
+    xwin, xmk = xscored[0]
+    golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "..", "..", "ci", "golden_plan_gpt80b_1024_xl.json")
+    with open(golden_path) as fh:
+        golden = json.load(fh)
+    assert (golden["g_data"], golden["g_r"], golden["g_c"]) == xwin.key(), \
+        f"xl golden mesh drifted: mirror {xwin.key()}"
+    assert golden["g_tensor"] == xwin.g_tensor(), "xl golden g_tensor drifted"
+    assert (golden["model"], golden["machine"]) == ("gpt80b", "perlmutter-xl")
+    assert golden["gpus"] == golden["world"] == 1024
+    assert golden["placement"] == "column-major", "xl golden placement drifted"
+    for key, val in (("makespan_s", xmk), ("eq4_makespan_s", xbasemk)):
+        assert math.isclose(val, golden[key], rel_tol=1e-12), \
+            f"xl golden {key}: mirror {val!r} vs golden {golden[key]!r}"
+    print("ok: tiered gpt80b/1024 refined plan matches the CI golden "
+          "(ci/golden_plan_gpt80b_1024_xl.json)")

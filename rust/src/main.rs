@@ -85,7 +85,7 @@ fn strategy_by_name(
 
 fn machine_by_name(name: &str) -> Result<Machine> {
     Machine::by_name(name)
-        .ok_or_else(|| anyhow!("unknown machine {name:?} (perlmutter|polaris|frontier)"))
+        .ok_or_else(|| anyhow!("unknown machine {name:?} ({})", Machine::names().join("|")))
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
@@ -159,7 +159,7 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         vec![
             opt("model", "gpt9b", "model preset"),
             opt("gpus", "16", "GPU count"),
-            opt("machine", "perlmutter", "perlmutter|polaris|frontier"),
+            opt("machine", "perlmutter", "perlmutter|polaris|frontier|perlmutter-xl"),
             opt("batch", "0", "global batch (0 = model default)"),
             opt(
                 "refine",
@@ -191,6 +191,11 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
                  healthy makespan (0 = fault-blind; needs --refine > 0)",
             ),
             flag("sharded-state", "depth-shard optimizer state (ZeRO-style memory rule)"),
+            flag(
+                "flat-collectives",
+                "ablation: single flat rings on tiered machines (no hierarchical \
+                 RS/AR/AG decomposition; no effect on flat machines)",
+            ),
             flag("json", "emit the recommendation as one-line JSON (CI golden diff)"),
         ],
     )
@@ -198,7 +203,8 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     .map_err(|e| anyhow!("{e}"))?;
     let model_name = a.str("model")?;
     let (net, kind, default_batch, _) = model_by_name(&model_name)?;
-    let machine = machine_by_name(&a.str("machine")?)?;
+    let mut machine = machine_by_name(&a.str("machine")?)?;
+    machine.flat_collectives = a.flag("flat-collectives");
     let batch = match a.usize("batch")? {
         0 => default_batch,
         b => b,
@@ -385,7 +391,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             opt("mesh", "", "inner tensor mesh g_data,g_rxg_c e.g. 8,2x4 (empty = planner)"),
             opt("depth", "2", "overdecomposition degree"),
             opt("gpus", "64", "GPU count (when mesh empty; includes pipeline stages)"),
-            opt("machine", "polaris", "perlmutter|polaris|frontier"),
+            opt("machine", "polaris", "perlmutter|polaris|frontier|perlmutter-xl"),
             opt("batch", "0", "global batch (0 = default)"),
             opt("pipeline", "1", "1F1B pipeline stages (tensor3d only; 1 = no pipelining)"),
             opt("microbatches", "8", "1F1B microbatches per iteration (with --pipeline > 1)"),
@@ -403,12 +409,18 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             ),
             flag("sharded-state", "depth-shard parameter/optimizer state (overlapped RS/AG)"),
             flag("dp-barrier", "ablation: serialize the sharded-state collectives"),
+            flag(
+                "flat-collectives",
+                "ablation: single flat rings on tiered machines (no hierarchical \
+                 RS/AR/AG decomposition; no effect on flat machines)",
+            ),
         ],
     )
     .parse(argv)
     .map_err(|e| anyhow!("{e}"))?;
     let (net, kind, default_batch, g_tensor) = model_by_name(&a.str("model")?)?;
-    let machine = machine_by_name(&a.str("machine")?)?;
+    let mut machine = machine_by_name(&a.str("machine")?)?;
+    machine.flat_collectives = a.flag("flat-collectives");
     let batch = match a.usize("batch")? {
         0 => default_batch,
         b => b,
@@ -548,7 +560,7 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         vec![
             opt("model", "gpt80b", "model preset"),
             opt("gpus", "1024", "GPU count"),
-            opt("machine", "polaris", "perlmutter|polaris|frontier"),
+            opt("machine", "polaris", "perlmutter|polaris|frontier|perlmutter-xl"),
             opt("depth", "2", "overdecomposition degree"),
             opt("batch", "0", "global batch (0 = model default)"),
             opt("pipeline", "1", "1F1B pipeline stages (1 = no pipelining)"),
@@ -582,13 +594,19 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
                  CI uses 60 to catch hot-loop regressions)",
             ),
             flag("replicated", "replicated parameter/optimizer state (default: depth-sharded)"),
+            flag(
+                "flat-collectives",
+                "ablation: single flat rings on tiered machines (no hierarchical \
+                 RS/AR/AG decomposition; no effect on flat machines)",
+            ),
         ],
     )
     .parse(argv)
     .map_err(|e| anyhow!("{e}"))?;
     let model_name = a.str("model")?;
     let (net, kind, default_batch, _) = model_by_name(&model_name)?;
-    let machine = machine_by_name(&a.str("machine")?)?;
+    let mut machine = machine_by_name(&a.str("machine")?)?;
+    machine.flat_collectives = a.flag("flat-collectives");
     let batch = match a.usize("batch")? {
         0 => default_batch,
         b => b,
@@ -695,6 +713,10 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         ("model", Json::str(&model_name)),
         ("gpus", Json::num(gpus as f64)),
         ("machine", Json::str(&machine.name)),
+        // fabric tier count: 0 = flat two-level machine, >= 2 = explicit
+        // multi-tier topology with hierarchical collectives (unless
+        // --flat-collectives)
+        ("tiers", Json::num(machine.tiers.len() as f64)),
         ("depth", Json::num(depth as f64)),
         ("pipeline", Json::num(pipeline as f64)),
         ("microbatches", Json::num(microbatches as f64)),
@@ -842,5 +864,25 @@ fn main() -> Result<()> {
         }
         "repro" => cmd_repro(rest),
         other => bail!("unknown command {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_machine_error_lists_every_preset() {
+        // the old message hardcoded "perlmutter|polaris|frontier" and
+        // silently omitted new presets; it must track Machine::names()
+        let err = machine_by_name("summit").unwrap_err().to_string();
+        for name in Machine::names() {
+            assert!(err.contains(name), "{err:?} should mention {name}");
+        }
+        assert!(err.contains("summit"));
+        // every advertised name parses back to a machine of that name
+        for name in Machine::names() {
+            assert_eq!(machine_by_name(name).unwrap().name, *name);
+        }
     }
 }

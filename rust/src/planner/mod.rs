@@ -1291,4 +1291,37 @@ mod tests {
         // the analytic bubble for (p=4, m=2) is large: 3/5
         assert!((comm_model::pipeline_bubble_fraction(4, 2) - 0.6).abs() < 1e-12);
     }
+
+    #[test]
+    fn tiered_machine_plans_refine_end_to_end() {
+        // the multi-tier preset through the full planner path: the §5
+        // volume shortlist is machine-topology-independent, so the
+        // candidate set matches the ablation's, while refinement times
+        // each shape with hierarchical (resp. flat) collectives
+        let net = gpt::gpt_9b().network();
+        let machine = Machine::perlmutter_xl();
+        let req = |m: &Machine| {
+            PlanRequest::new(&net, m, 64)
+                .batch(256)
+                .refine(2)
+                .placements(&[Placement::ColumnMajor])
+                .run()
+        };
+        let hier = req(&machine);
+        let mut ablated = machine.clone();
+        ablated.flat_collectives = true;
+        let flat = req(&ablated);
+        assert!(hier.refined && flat.refined);
+        assert!(hier.makespan_s().unwrap().is_finite());
+        assert!(flat.makespan_s().unwrap().is_finite());
+        // same volume-ranked shortlist, same scores, bit for bit
+        assert_eq!(hier.candidates.len(), flat.candidates.len());
+        let shapes = |p: &PlanReport| {
+            let mut v: Vec<_> =
+                p.candidates.iter().map(|c| (c.layout.g_data, c.layout.g_r, c.layout.g_c)).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(shapes(&hier), shapes(&flat));
+    }
 }

@@ -91,14 +91,19 @@ impl CommWorld {
             return GroupId(id);
         }
         let size = members.len();
-        let per_node = match &self.placement {
-            None => machine.members_per_node(&members),
+        let (per_node, bw, lat) = match &self.placement {
+            None => {
+                let per_node = machine.members_per_node(&members);
+                let (bw, lat) = machine.group_bw_lat(size, per_node, &members);
+                (per_node, bw, lat)
+            }
             Some(p) => {
                 let placed: Vec<usize> = members.iter().map(|&r| p[r]).collect();
-                machine.members_per_node(&placed)
+                let per_node = machine.members_per_node(&placed);
+                let (bw, lat) = machine.group_bw_lat(size, per_node, &placed);
+                (per_node, bw, lat)
             }
         };
-        let (bw, lat) = machine.ring_bw_lat(size, per_node);
         let id = self.groups.len() as u32;
         self.groups.push(GroupInfo { members: members.clone(), size, per_node, bw, lat });
         self.index.insert(members, id);
@@ -139,7 +144,7 @@ impl CommWorld {
                 None => (g.bw, g.lat),
                 Some(p) => {
                     let placed: Vec<usize> = g.members.iter().map(|&r| p[r]).collect();
-                    machine.ring_bw_lat(g.size, machine.members_per_node(&placed))
+                    machine.group_bw_lat(g.size, machine.members_per_node(&placed), &placed)
                 }
             })
             .collect()
@@ -317,6 +322,37 @@ mod tests {
         let gathered = w.price_with_faults(&m, Some(&gather), &[fault]);
         let base = w.price_with(&m, Some(&gather));
         assert_eq!(gathered[cross.0 as usize], base[cross.0 as usize]);
+    }
+
+    #[test]
+    fn tiered_machines_price_groups_at_their_span_tier() {
+        use crate::sim::fabric::tiered_bw_lat;
+        let m = Machine::perlmutter_xl();
+        let mut w = CommWorld::new();
+        let shapes: Vec<Vec<usize>> = vec![
+            (0..8).collect(),                     // node-local
+            (0..4).map(|n| n * 8).collect(),      // one rail, strided
+            (0..16).collect(),                    // two full nodes
+            (0..128).map(|n| n * 8).collect(),    // spans two rail groups
+        ];
+        for members in shapes {
+            let id = w.register(&m, members.clone());
+            let g = w.group(id);
+            let (bw, lat) = tiered_bw_lat(&m, &members);
+            assert_eq!((g.bw.to_bits(), g.lat.to_bits()), (bw.to_bits(), lat.to_bits()));
+            // per_node keeps its flat meaning (fault targeting uses it)
+            assert_eq!(g.per_node, m.members_per_node(&members));
+        }
+        // re-pricing under a permutation prices the placed span tier:
+        // pulling the strided rail ring onto one node makes it NVLink
+        let rail: Vec<usize> = (0..4).map(|n| n * 8).collect();
+        let id = w.register(&m, rail.clone());
+        let mut perm: Vec<usize> = (0..65536).collect();
+        for (slot, &r) in rail.iter().enumerate() {
+            perm.swap(slot, r);
+        }
+        let priced = w.price_with(&m, Some(&perm));
+        assert_eq!(priced[id.0 as usize], (m.intra_bw, m.intra_lat_s));
     }
 
     #[test]

@@ -308,10 +308,38 @@ pub struct ProgramSetBuilder {
     /// Tag → dense rendezvous id (build-time only; the event loop never
     /// hashes tags — see [`Binding::rv`]).
     rv_index: HashMap<u64, u32>,
+    /// Per-group hierarchical decomposition plans on tiered machines
+    /// (`None` = keep the flat ring), memoized so the O(|group|)
+    /// analysis runs once per communicator, not once per op.
+    hier_plans: HashMap<GroupId, Option<HierPlan>>,
+    /// `(base tag, phase, subgroup)` → fresh sub-op rendezvous tag.
+    /// Sub-op tags live above bit 63 — strategy tag packings top out
+    /// at bit 61 — so decomposed rendezvous can never collide with a
+    /// flat collective's.
+    hier_tags: HashMap<(u64, u8, u32), u64>,
     cur_class: u32,
     cur_building: bool,
     cur_op: u32,
     started: bool,
+}
+
+/// How a node-spanning communicator decomposes on a tiered machine:
+/// `m` members on each of `n` nodes, each member belonging to one
+/// intra-node subgroup and one cross-node "rail" subgroup (the
+/// same-position member of every node).  Every rank emits the *same*
+/// sub-op sequence — there is no leader class — so program dedup and
+/// the replay asserts are untouched.
+///
+/// The split is computed from the **logical** member list: placements
+/// re-price the frozen subgroups (the build-once/re-price-per-placement
+/// semantics of [`super::PlacedWorld`]), mirroring how a real runtime
+/// fixes its algorithm choice at communicator init.
+#[derive(Debug, Clone)]
+struct HierPlan {
+    /// Members per node.
+    m: usize,
+    /// Member rank → (intra-node subgroup, rail subgroup).
+    per_member: HashMap<usize, (GroupId, GroupId)>,
 }
 
 impl ProgramSetBuilder {
@@ -336,6 +364,8 @@ impl ProgramSetBuilder {
             },
             class_index: HashMap::new(),
             rv_index: HashMap::new(),
+            hier_plans: HashMap::new(),
+            hier_tags: HashMap::new(),
             cur_class: 0,
             cur_building: false,
             cur_op: 0,
@@ -485,6 +515,82 @@ impl ProgramSetBuilder {
         i
     }
 
+    /// The hierarchical split of `group` as seen by the current rank:
+    /// `(m, intra subgroup, rail subgroup)`, or `None` to keep the flat
+    /// ring (flat machine, `--flat-collectives`, node-local group, one
+    /// member per node, or a non-uniform node partition).
+    fn hier_split(&mut self, group: GroupId) -> Option<(usize, GroupId, GroupId)> {
+        if self.set.machine.tiers.is_empty() || self.set.machine.flat_collectives {
+            return None;
+        }
+        if !self.hier_plans.contains_key(&group) {
+            let plan = self.compute_hier_plan(group);
+            self.hier_plans.insert(group, plan);
+        }
+        let rank = self.set.rank_class.len() - 1;
+        let plan = self.hier_plans.get(&group).unwrap().as_ref()?;
+        let m = plan.m;
+        let (intra, rail) = *plan
+            .per_member
+            .get(&rank)
+            .expect("rank posted a collective on a group it is not a member of");
+        Some((m, intra, rail))
+    }
+
+    /// Analyze `group`'s logical member list into the per-node /
+    /// per-rail subgroups of [`HierPlan`], interning each subgroup as a
+    /// regular communicator (so placement re-pricing and fault targeting
+    /// see them like any other group).  Runs once per group (memoized by
+    /// [`ProgramSetBuilder::hier_split`]).
+    fn compute_hier_plan(&mut self, group: GroupId) -> Option<HierPlan> {
+        let members = self.set.comm.group(group).members.clone();
+        let gpn = self.set.machine.gpus_per_node;
+        // members per node, in member-list (ring) order; nodes in order
+        // of first appearance
+        let mut node_slot: HashMap<usize, usize> = HashMap::new();
+        let mut by_node: Vec<Vec<usize>> = Vec::new();
+        for &r in &members {
+            let n_nodes = by_node.len();
+            let slot = *node_slot.entry(r / gpn).or_insert(n_nodes);
+            if slot == by_node.len() {
+                by_node.push(Vec::new());
+            }
+            by_node[slot].push(r);
+        }
+        let n = by_node.len();
+        let m = by_node[0].len();
+        if n < 2 || m < 2 || by_node.iter().any(|v| v.len() != m) {
+            return None; // flat ring: node-local, strided, or non-uniform
+        }
+        let intra_ids: Vec<GroupId> =
+            by_node.iter().map(|v| self.group(v.clone())).collect();
+        let mut per_member = HashMap::with_capacity(members.len());
+        for j in 0..m {
+            let rail: Vec<usize> = by_node.iter().map(|v| v[j]).collect();
+            let rail_id = self.group(rail);
+            for (i, v) in by_node.iter().enumerate() {
+                per_member.insert(v[j], (intra_ids[i], rail_id));
+            }
+        }
+        Some(HierPlan { m, per_member })
+    }
+
+    /// The rendezvous tag of one decomposed phase: every member of
+    /// `sub` posting phase `phase` of the collective tagged `base` must
+    /// meet on the same fresh tag, and no one else may (see the
+    /// `hier_tags` field).
+    fn hier_tag(&mut self, base: u64, phase: u8, sub: GroupId) -> u64 {
+        let fresh = (1u64 << 63) | self.hier_tags.len() as u64;
+        *self.hier_tags.entry((base, phase, sub.0)).or_insert(fresh)
+    }
+
+    /// Append an all-reduce.  On a tiered machine a node-spanning group
+    /// compiles into the hierarchical phase sequence intra-node
+    /// reduce-scatter → cross-node all-reduce over the rail subgroup →
+    /// intra-node all-gather, as dependent ops on the caller's stream
+    /// (returning the final op's index); otherwise a single flat ring
+    /// op.  Element volume is identical either way (see
+    /// [`super::fabric`]), so wire accounting needs no special cases.
     pub fn all_reduce(
         &mut self,
         name: impl FnOnce() -> String,
@@ -494,10 +600,45 @@ impl ProgramSetBuilder {
         stream: Stream,
         deps: Vec<u32>,
     ) -> u32 {
+        if let Some((m, intra, rail)) = self.hier_split(group) {
+            let base = if self.cur_building { name() } else { String::new() };
+            let (t_rs, t_ar, t_ag) = (
+                self.hier_tag(tag, 0, intra),
+                self.hier_tag(tag, 1, rail),
+                self.hier_tag(tag, 2, intra),
+            );
+            let kind = |bytes, slot| OpKind::ReduceScatter { bytes, slot };
+            let rs =
+                self.collective(|| format!("{base}.rs@node"), kind, t_rs, intra, bytes, stream, deps);
+            let kind = |bytes, slot| OpKind::AllReduce { bytes, slot };
+            let ar = self.collective(
+                || format!("{base}.ar@rail"),
+                kind,
+                t_ar,
+                rail,
+                bytes / m as f64,
+                stream,
+                vec![rs],
+            );
+            let kind = |bytes, slot| OpKind::AllGather { bytes, slot };
+            return self.collective(
+                || format!("{base}.ag@node"),
+                kind,
+                t_ag,
+                intra,
+                bytes,
+                stream,
+                vec![ar],
+            );
+        }
         let kind = |bytes, slot| OpKind::AllReduce { bytes, slot };
         self.collective(name, kind, tag, group, bytes, stream, deps)
     }
 
+    /// Append an all-gather (`bytes` = full gathered buffer).  On a
+    /// tiered machine a node-spanning group compiles into cross-node
+    /// all-gather of the rail-local shard → intra-node all-gather; see
+    /// [`ProgramSetBuilder::all_reduce`].
     pub fn all_gather(
         &mut self,
         name: impl FnOnce() -> String,
@@ -507,10 +648,38 @@ impl ProgramSetBuilder {
         stream: Stream,
         deps: Vec<u32>,
     ) -> u32 {
+        if let Some((m, intra, rail)) = self.hier_split(group) {
+            let base = if self.cur_building { name() } else { String::new() };
+            let (t_rail, t_node) = (self.hier_tag(tag, 1, rail), self.hier_tag(tag, 2, intra));
+            let kind = |bytes, slot| OpKind::AllGather { bytes, slot };
+            let cross = self.collective(
+                || format!("{base}.ag@rail"),
+                kind,
+                t_rail,
+                rail,
+                bytes / m as f64,
+                stream,
+                deps,
+            );
+            let kind = |bytes, slot| OpKind::AllGather { bytes, slot };
+            return self.collective(
+                || format!("{base}.ag@node"),
+                kind,
+                t_node,
+                intra,
+                bytes,
+                stream,
+                vec![cross],
+            );
+        }
         let kind = |bytes, slot| OpKind::AllGather { bytes, slot };
         self.collective(name, kind, tag, group, bytes, stream, deps)
     }
 
+    /// Append a reduce-scatter (`bytes` = full pre-scatter buffer).  On
+    /// a tiered machine a node-spanning group compiles into intra-node
+    /// reduce-scatter → cross-node reduce-scatter over the rail
+    /// subgroup; see [`ProgramSetBuilder::all_reduce`].
     pub fn reduce_scatter(
         &mut self,
         name: impl FnOnce() -> String,
@@ -520,6 +689,30 @@ impl ProgramSetBuilder {
         stream: Stream,
         deps: Vec<u32>,
     ) -> u32 {
+        if let Some((m, intra, rail)) = self.hier_split(group) {
+            let base = if self.cur_building { name() } else { String::new() };
+            let (t_node, t_rail) = (self.hier_tag(tag, 0, intra), self.hier_tag(tag, 1, rail));
+            let kind = |bytes, slot| OpKind::ReduceScatter { bytes, slot };
+            let local = self.collective(
+                || format!("{base}.rs@node"),
+                kind,
+                t_node,
+                intra,
+                bytes,
+                stream,
+                deps,
+            );
+            let kind = |bytes, slot| OpKind::ReduceScatter { bytes, slot };
+            return self.collective(
+                || format!("{base}.rs@rail"),
+                kind,
+                t_rail,
+                rail,
+                bytes / m as f64,
+                stream,
+                vec![local],
+            );
+        }
         let kind = |bytes, slot| OpKind::ReduceScatter { bytes, slot };
         self.collective(name, kind, tag, group, bytes, stream, deps)
     }
@@ -1578,6 +1771,157 @@ mod tests {
         let err = try_simulate(&m, &t.finish()).expect_err("must stall");
         assert_eq!(err.stuck_ops, 2);
         assert!(err.detail.contains("dependency"), "{}", err.detail);
+    }
+
+    /// One collective per rank over the full world, every rank in one
+    /// SPMD class — the smallest program that exercises the
+    /// hierarchical decomposition end to end.
+    fn one_collective_set(
+        m: &Machine,
+        world: usize,
+        emit: impl Fn(&mut ProgramSetBuilder, GroupId),
+    ) -> ProgramSet {
+        let mut b = ProgramSetBuilder::new(m);
+        for _ in 0..world {
+            b.begin_rank(0);
+            let g = b.group((0..world).collect());
+            emit(&mut b, g);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn tiered_allreduce_decomposes_into_three_phases() {
+        let m = Machine::perlmutter_xl(); // 8 GPUs/node
+        let set = one_collective_set(&m, 16, |b, g| {
+            b.all_reduce(|| "dp".into(), 7, g, 1e9, Stream::Comm, vec![]);
+        });
+        // one class, three template ops: RS@node -> AR@rail -> AG@node
+        assert_eq!(set.classes.len(), 1);
+        let ops = &set.classes[0].ops;
+        assert_eq!(ops.len(), 3);
+        assert!(matches!(ops[0].kind, OpKind::ReduceScatter { bytes, .. } if bytes == 1e9));
+        assert!(matches!(ops[1].kind, OpKind::AllReduce { bytes, .. } if bytes == 1e9 / 8.0));
+        assert!(matches!(ops[2].kind, OpKind::AllGather { bytes, .. } if bytes == 1e9));
+        assert_eq!((ops[1].deps.as_slice(), ops[2].deps.as_slice()), (&[0u32][..], &[1u32][..]));
+        assert_eq!(set.op_name(0, 0), "dp.rs@node");
+        assert_eq!(set.op_name(0, 1), "dp.ar@rail");
+        assert_eq!(set.op_name(0, 2), "dp.ag@node");
+        // communicators: the original group, 2 intra-node, 8 rails
+        assert_eq!(set.comm.len(), 11);
+        assert_eq!(set.n_rendezvous, 2 * 2 + 8, "two phases per node group, one per rail");
+        // per-rank bindings: rank 0's intra group is node 0, rail {0, 8}
+        let b0 = set.binding(0, 0);
+        assert_eq!(set.comm.group(b0.group).members, (0..8).collect::<Vec<_>>());
+        let b1 = set.binding(0, 1);
+        assert_eq!(set.comm.group(b1.group).members, vec![0, 8]);
+        // timing: the dependent phase sequence, each on its own tier
+        let r = simulate(&m, &set);
+        let intra: Vec<usize> = (0..8).collect();
+        let (ibw, ilat) = crate::sim::fabric::tiered_bw_lat(&m, &intra);
+        let (rbw, rlat) = crate::sim::fabric::tiered_bw_lat(&m, &[0, 8]);
+        let want = Machine::reduce_scatter_time_on(1e9, 8, ibw, ilat)
+            + Machine::allreduce_time_on(1e9 / 8.0, 2, rbw, rlat)
+            + Machine::allgather_time_on(1e9, 8, ibw, ilat);
+        assert!((r.makespan - want).abs() < 1e-12, "{} vs {want}", r.makespan);
+    }
+
+    #[test]
+    fn flat_collectives_ablation_keeps_one_ring() {
+        let mut m = Machine::perlmutter_xl();
+        m.flat_collectives = true;
+        let set = one_collective_set(&m, 16, |b, g| {
+            b.all_reduce(|| "dp".into(), 7, g, 1e9, Stream::Comm, vec![]);
+        });
+        assert_eq!(set.classes[0].ops.len(), 1);
+        assert_eq!(set.comm.len(), 1);
+        // still tier-path priced: the full-node ring is NIC-capped
+        let r = simulate(&m, &set);
+        let (bw, lat) = crate::sim::fabric::tiered_bw_lat(&m, &(0..16).collect::<Vec<_>>());
+        assert_eq!(bw, m.nic_bw);
+        let want = Machine::allreduce_time_on(1e9, 16, bw, lat);
+        assert!((r.makespan - want).abs() < 1e-12, "{} vs {want}", r.makespan);
+    }
+
+    #[test]
+    fn node_local_groups_stay_flat_on_tiered_machines() {
+        // a single-tier group must emit one op priced bit-for-bit like
+        // the intra-node ring — no decomposition, no tier drift
+        let m = Machine::perlmutter_xl();
+        let set = one_collective_set(&m, 8, |b, g| {
+            b.all_reduce(|| "tp".into(), 3, g, 1e9, Stream::Comm, vec![]);
+        });
+        assert_eq!(set.classes[0].ops.len(), 1);
+        assert_eq!(set.comm.len(), 1);
+        let g = set.comm.group(GroupId(0));
+        assert_eq!((g.bw.to_bits(), g.lat.to_bits()), (m.intra_bw.to_bits(), m.intra_lat_s.to_bits()));
+        let r = simulate(&m, &set);
+        let want = m.allreduce_time(1e9, 8, 8);
+        assert_eq!(r.makespan.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn strided_groups_stay_flat_on_tiered_machines() {
+        // one member per node: there is no intra-node phase to peel off
+        let m = Machine::perlmutter_xl();
+        let mut b = ProgramSetBuilder::new(&m);
+        for _ in 0..4 {
+            b.begin_rank(0);
+            let g = b.group((0..4).map(|n| n * 8).collect());
+            b.all_reduce(|| "dp".into(), 5, g, 1e9, Stream::Comm, vec![]);
+        }
+        let set = b.finish();
+        assert_eq!(set.classes[0].ops.len(), 1);
+        assert_eq!(set.comm.len(), 1);
+    }
+
+    #[test]
+    fn hier_decomposition_preserves_rs_plus_ag_additivity() {
+        // AR = RS + AG must survive the decomposition tier by tier: the
+        // decomposed all-reduce costs what the decomposed halves cost
+        let m = Machine::perlmutter_xl();
+        let t_ar = simulate(
+            &m,
+            &one_collective_set(&m, 32, |b, g| {
+                b.all_reduce(|| "ar".into(), 1, g, 2e9, Stream::Comm, vec![]);
+            }),
+        )
+        .makespan;
+        let t_rs = simulate(
+            &m,
+            &one_collective_set(&m, 32, |b, g| {
+                b.reduce_scatter(|| "rs".into(), 1, g, 2e9, Stream::Comm, vec![]);
+            }),
+        )
+        .makespan;
+        let t_ag = simulate(
+            &m,
+            &one_collective_set(&m, 32, |b, g| {
+                b.all_gather(|| "ag".into(), 1, g, 2e9, Stream::Comm, vec![]);
+            }),
+        )
+        .makespan;
+        assert!(
+            (t_rs + t_ag - t_ar).abs() <= 1e-12 * t_ar,
+            "{t_rs} + {t_ag} != {t_ar}"
+        );
+    }
+
+    #[test]
+    fn decomposed_tags_cannot_collide_with_strategy_tags() {
+        // strategy tag packings top out at bit 61 (phase <= 8 << 58);
+        // decomposed sub-ops rendezvous above bit 63
+        let m = Machine::perlmutter_xl();
+        let top_tag = (8u64 << 58) | (u64::MAX >> 6);
+        let set = one_collective_set(&m, 16, |b, g| {
+            b.all_reduce(|| "dp".into(), top_tag, g, 1e9, Stream::Comm, vec![]);
+        });
+        for rank in 0..16 {
+            for slot in 0..set.bindings[rank].len() {
+                let tag = set.binding(rank, slot as u32).tag;
+                assert!(tag >> 63 == 1 && tag != top_tag);
+            }
+        }
     }
 
     #[test]

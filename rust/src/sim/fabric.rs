@@ -1,0 +1,276 @@
+//! Multi-tier fabric topology: the tiered generalization of the flat
+//! node/NIC [`Machine`] description.
+//!
+//! A machine is a chain of [`Tier`]s, innermost first: GPUs aggregate
+//! into nodes over NVLink (tier 0), nodes into rail groups over the
+//! leaf switches (tier 1), rail groups into the spine (tier 2), and so
+//! on.  Each tier names the *boundary* its links cross: `radix` child
+//! units attach below it, one child unit injects `bw` bytes/s of
+//! aggregate uplink into it, a single stream through it is capped at
+//! `link_bw`, and a hop across it costs `lat_s`.
+//!
+//! ## Tier-path pricing
+//!
+//! [`tiered_bw_lat`] generalizes [`Machine::ring_bw_lat`]'s NIC-share
+//! logic to arbitrary depth.  A ring over a member list is priced at
+//! its **span tier** — the highest boundary any two members straddle.
+//! At span tier `t`, the bottleneck child unit (the tier-`t-1` unit
+//! hosting the most members, `per_unit` of them) is shared by
+//! `s_{t-1} / per_unit` concurrent same-shape rings (the SPMD schedule
+//! is identical across ranks), so each ring's boundary stream gets
+//! `tiers[t].bw / concurrent_groups`, capped by the single-link
+//! bandwidth of tier `t` and of every tier below it.  With the
+//! [`flat_tiers`] embedding — tier 0 from the intra-node parameters,
+//! tier 1 from `inter_bw_per_node`/`nic_bw` — this reproduces the flat
+//! two-level formula operation for operation, so flat presets price
+//! bit-for-bit identically through either path (pinned in the tests
+//! below).
+//!
+//! ## Hierarchical collectives
+//!
+//! The tiers also drive op *decomposition*: on a tiered machine the
+//! [`super::ProgramSetBuilder`] compiles an `AllReduce` over a
+//! node-spanning group into intra-node `ReduceScatter` → cross-node
+//! `AllReduce` over the per-position rail subgroups → intra-node
+//! `AllGather` (and the analogous two-phase forms for `AllGather` /
+//! `ReduceScatter`), keeping the flat ring for node-local groups and
+//! under `Machine::flat_collectives` (the `--flat-collectives`
+//! ablation).  Element volume is preserved exactly:
+//! `(m-1)/m + (n-1)/(mn) = (p-1)/p` for `p = m×n`, so the §5 volume
+//! rules need no tier-specific cases.
+
+use super::machine::Machine;
+
+/// One aggregation level of a multi-tier fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tier {
+    /// Boundary name ("node", "rail", "spine", ...).
+    pub name: String,
+    /// Child units per unit of this tier (tier 0: GPUs per node).
+    pub radix: usize,
+    /// Aggregate uplink bandwidth one child unit injects across this
+    /// boundary, bytes/s (tier 0: the intra-node per-GPU link bandwidth).
+    pub bw: f64,
+    /// Single-stream cap across this boundary, bytes/s — one ring's
+    /// boundary stream cannot aggregate parallel links (the NIC cap of
+    /// the flat model, generalized per tier).
+    pub link_bw: f64,
+    /// Per-hop latency across this boundary, seconds.
+    pub lat_s: f64,
+}
+
+/// Cumulative unit sizes, in ranks: `sizes[k]` = ranks per tier-`k`
+/// unit (`sizes[0]` = GPUs per node).
+pub fn unit_sizes(tiers: &[Tier]) -> Vec<usize> {
+    let mut sizes = Vec::with_capacity(tiers.len());
+    let mut s = 1usize;
+    for t in tiers {
+        s *= t.radix;
+        sizes.push(s);
+    }
+    sizes
+}
+
+/// The highest boundary `members` straddle: the smallest `t` with all
+/// members inside one tier-`t` unit (0 = node-local).  Members beyond
+/// the top tier's capacity clamp to the top tier.
+pub fn span_tier(tiers: &[Tier], members: &[usize]) -> usize {
+    span_tier_sized(&unit_sizes(tiers), tiers.len(), members)
+}
+
+fn span_tier_sized(sizes: &[usize], n_tiers: usize, members: &[usize]) -> usize {
+    let first = match members.first() {
+        Some(&r) => r,
+        None => return 0,
+    };
+    for (t, &s) in sizes.iter().enumerate() {
+        if members.iter().all(|&r| r / s == first / s) {
+            return t;
+        }
+    }
+    n_tiers - 1
+}
+
+/// Members co-resident in the most-loaded unit of `unit` ranks — the
+/// tier-generalized [`Machine::members_per_node`] (same allocation-free
+/// counting pass; empty → 1).
+fn max_per_unit(members: &[usize], unit: usize) -> usize {
+    let mut best = 1usize;
+    for (i, &r) in members.iter().enumerate() {
+        let u = r / unit;
+        if members[..i].iter().any(|&q| q / unit == u) {
+            continue; // this unit was already counted at its first member
+        }
+        let c = members[i..].iter().filter(|&&q| q / unit == u).count();
+        best = best.max(c);
+    }
+    best
+}
+
+/// Ring bottleneck bandwidth and per-hop latency of one ring over the
+/// *placed* member list `members`, priced at its span tier (see the
+/// module docs).  Requires `machine.tiers` to be non-empty; flat
+/// machines take [`Machine::ring_bw_lat`] instead.
+pub fn tiered_bw_lat(machine: &Machine, members: &[usize]) -> (f64, f64) {
+    let tiers = &machine.tiers;
+    debug_assert!(!tiers.is_empty(), "tiered_bw_lat on a flat machine");
+    debug_assert_eq!(
+        tiers[0].radix, machine.gpus_per_node,
+        "tier 0 must describe the node boundary"
+    );
+    let sizes = unit_sizes(tiers);
+    let t = span_tier_sized(&sizes, tiers.len(), members);
+    if t == 0 {
+        return (tiers[0].bw, tiers[0].lat_s);
+    }
+    let per_unit = max_per_unit(members, sizes[t - 1]);
+    let concurrent_groups = (sizes[t - 1] / per_unit.max(1)).max(1) as f64;
+    let mut share = (tiers[t].bw / concurrent_groups).min(tiers[t].link_bw);
+    for k in 1..t {
+        share = share.min(tiers[k].link_bw);
+    }
+    (share.min(tiers[0].bw), tiers[t].lat_s)
+}
+
+/// Top-tier radix of [`flat_tiers`]: a flat machine has no boundary
+/// above the node, so its embedded cross-node tier is sized to hold
+/// any world this simulator runs (16 Mi nodes).
+const FLAT_TOP_RADIX: usize = 1 << 24;
+
+/// The two-tier embedding of a flat machine: tier 0 from the
+/// intra-node parameters, tier 1 from the per-node injection bandwidth
+/// with the single-NIC cap.  [`tiered_bw_lat`] on these tiers is
+/// bit-for-bit [`Machine::ring_bw_lat`] for every group shape — the
+/// invariant that lets `perlmutter`/`polaris`/`frontier` stay flat
+/// (`tiers: vec![]`) with nothing lost.
+pub fn flat_tiers(machine: &Machine) -> Vec<Tier> {
+    vec![
+        Tier {
+            name: "node".into(),
+            radix: machine.gpus_per_node,
+            bw: machine.intra_bw,
+            link_bw: machine.intra_bw,
+            lat_s: machine.intra_lat_s,
+        },
+        Tier {
+            name: "fabric".into(),
+            radix: FLAT_TOP_RADIX,
+            bw: machine.inter_bw_per_node,
+            link_bw: machine.nic_bw,
+            lat_s: machine.inter_lat_s,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xl() -> Machine {
+        Machine::perlmutter_xl()
+    }
+
+    #[test]
+    fn xl_preset_tiers_describe_65536_gpus() {
+        let m = xl();
+        assert_eq!(m.tiers.len(), 3);
+        assert_eq!(unit_sizes(&m.tiers), vec![8, 512, 65536]);
+        assert_eq!(m.tiers[0].radix, m.gpus_per_node);
+        assert_eq!(m.tiers[0].bw, m.intra_bw);
+        assert_eq!(m.tiers[0].lat_s, m.intra_lat_s);
+        assert_eq!(m.tiers[1].bw, m.inter_bw_per_node);
+        assert_eq!(m.tiers[1].link_bw, m.nic_bw);
+        assert_eq!(m.tiers[1].lat_s, m.inter_lat_s);
+        // the spine is oversubscribed: one rail's 64 nodes inject less
+        // into the spine than their aggregate NIC bandwidth
+        assert!(m.tiers[2].bw < 64.0 * m.inter_bw_per_node);
+        assert!(m.tiers[2].lat_s > m.tiers[1].lat_s);
+    }
+
+    #[test]
+    fn span_tier_finds_the_highest_boundary() {
+        let m = xl();
+        assert_eq!(span_tier(&m.tiers, &[0, 1, 7]), 0); // one node
+        assert_eq!(span_tier(&m.tiers, &[0, 8]), 1); // two nodes, one rail
+        assert_eq!(span_tier(&m.tiers, &[0, 504]), 1); // rail edge
+        assert_eq!(span_tier(&m.tiers, &[0, 512]), 2); // crosses rails
+        assert_eq!(span_tier(&m.tiers, &[65000, 65535]), 1); // last rail
+        assert_eq!(span_tier(&m.tiers, &[511, 512]), 2);
+        assert_eq!(span_tier(&m.tiers, &[42]), 0);
+        assert_eq!(span_tier(&m.tiers, &[]), 0);
+    }
+
+    #[test]
+    fn two_tier_embedding_prices_flat_machines_bit_for_bit() {
+        // every existing preset, over the group shapes the suites
+        // exercise: node-local, cross-node dense, strided, pairs
+        for flat in [Machine::perlmutter(), Machine::polaris(), Machine::frontier()] {
+            let mut tiered = flat.clone();
+            tiered.tiers = flat_tiers(&flat);
+            let gpn = flat.gpus_per_node;
+            let shapes: Vec<Vec<usize>> = vec![
+                (0..gpn).collect(),                      // one full node
+                (0..2 * gpn).collect(),                  // two full nodes
+                (0..4).map(|i| i * gpn).collect(),       // one per node
+                (0..8).map(|i| i * gpn / 2).collect(),   // two per node
+                vec![0, 1],                              // intra pair
+                vec![0, gpn],                            // cross pair
+                vec![3, gpn + 1, 5 * gpn + 2],           // ragged
+            ];
+            for g in shapes {
+                let per_node = flat.members_per_node(&g);
+                let (fb, fl) = flat.ring_bw_lat(g.len(), per_node);
+                let (tb, tl) = tiered_bw_lat(&tiered, &g);
+                assert_eq!(fb.to_bits(), tb.to_bits(), "{}: bw on {g:?}", flat.name);
+                assert_eq!(fl.to_bits(), tl.to_bits(), "{}: lat on {g:?}", flat.name);
+            }
+        }
+    }
+
+    #[test]
+    fn node_local_groups_price_identically_flat_and_tiered() {
+        // single-tier groups must be bit-for-bit the flat intra-node
+        // parameters — the precondition for keeping them undecomposed
+        let m = xl();
+        for g in [vec![0, 1], vec![8, 9, 10, 11], (24..32).collect::<Vec<_>>()] {
+            let (bw, lat) = tiered_bw_lat(&m, &g);
+            assert_eq!(bw.to_bits(), m.intra_bw.to_bits());
+            assert_eq!(lat.to_bits(), m.intra_lat_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn tier_share_generalizes_the_nic_split() {
+        let m = xl();
+        // a full node ring crossing nodes: 1 concurrent group per node,
+        // but a single stream is NIC-capped
+        let full: Vec<usize> = (0..16).collect();
+        assert_eq!(tiered_bw_lat(&m, &full).0, m.nic_bw);
+        // two members per node: 4 same-shape rings share the injection
+        let two: Vec<usize> = (0..4).flat_map(|n| [n * 8, n * 8 + 1]).collect();
+        assert_eq!(tiered_bw_lat(&m, &two).0, (m.inter_bw_per_node / 4.0).min(m.nic_bw));
+        // one member per node: 8 rings share -> 12.5 GB/s each
+        let one: Vec<usize> = (0..4).map(|n| n * 8).collect();
+        assert_eq!(tiered_bw_lat(&m, &one).0, m.inter_bw_per_node / 8.0);
+        // spine-spanning one-per-node ring: rail unit holds 64 members,
+        // 8 concurrent rings split the rail uplink, rail-link capped
+        let spine: Vec<usize> = (0..128).map(|n| n * 8).collect();
+        let (bw, lat) = tiered_bw_lat(&m, &spine);
+        assert_eq!(bw, (m.tiers[2].bw / 8.0).min(m.tiers[2].link_bw).min(m.tiers[1].link_bw));
+        assert_eq!(lat, m.tiers[2].lat_s);
+    }
+
+    #[test]
+    fn max_per_unit_matches_members_per_node_on_nodes() {
+        let m = Machine::perlmutter();
+        for g in [
+            vec![0, 1, 2, 3],
+            vec![0, 4, 8, 12],
+            vec![0, 1, 4, 5],
+            vec![7, 2, 9, 2, 14],
+            vec![],
+        ] {
+            assert_eq!(max_per_unit(&g, m.gpus_per_node), m.members_per_node(&g));
+        }
+    }
+}

@@ -9,6 +9,13 @@
 //! to supercomputers (arXiv:2502.08145): 4x MI250X per node where each
 //! MI250X exposes two GCDs — so 8 addressable "GPUs" per node — plus 4x
 //! Slingshot-11 NICs.
+//!
+//! The `perlmutter-xl` preset extends the family past the paper's
+//! 1024-GPU regime: a rail-optimized multi-tier fabric (node → rail →
+//! spine, see [`super::fabric`]) scaled to 65,536 GPUs, where flat
+//! rings die and collectives go hierarchical.
+
+use super::fabric::{self, Tier};
 
 /// A homogeneous GPU cluster.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,6 +41,18 @@ pub struct Machine {
     /// dims, as produced by extreme 1-D sharding, run less efficiently —
     /// the effect that degrades Megatron-LM's MFU at scale, Table 4).
     pub gemm_eff_halfdim: f64,
+    /// Multi-tier fabric description, innermost tier first (see
+    /// [`super::fabric`]).  Empty = flat two-level machine: every
+    /// communicator prices through [`Machine::ring_bw_lat`] and no
+    /// collective decomposes — the paper presets stay bit-for-bit
+    /// unchanged.  Non-empty: communicators price through
+    /// [`fabric::tiered_bw_lat`] and node-spanning collectives compile
+    /// hierarchically (tier 0 must describe the node boundary).
+    pub tiers: Vec<Tier>,
+    /// Ablation switch (`--flat-collectives`): keep tier-path pricing
+    /// but emit flat rings instead of hierarchical decompositions on a
+    /// tiered machine.  No effect on flat machines.
+    pub flat_collectives: bool,
 }
 
 impl Machine {
@@ -50,6 +69,8 @@ impl Machine {
             inter_lat_s: 4e-6,
             gemm_eff_max: 0.62,
             gemm_eff_halfdim: 96.0,
+            tiers: vec![],
+            flat_collectives: false,
         }
     }
 
@@ -66,6 +87,8 @@ impl Machine {
             inter_lat_s: 4e-6,
             gemm_eff_max: 0.62,
             gemm_eff_halfdim: 96.0,
+            tiers: vec![],
+            flat_collectives: false,
         }
     }
 
@@ -86,6 +109,59 @@ impl Machine {
             inter_lat_s: 4e-6,
             gemm_eff_max: 0.55,
             gemm_eff_halfdim: 96.0,
+            tiers: vec![],
+            flat_collectives: false,
+        }
+    }
+
+    /// A rail-optimized multi-tier cluster scaled to 65,536 GPUs: 8x
+    /// A100-80GB per node on NVLink, 64 nodes per rail group behind the
+    /// leaf switches (4x Slingshot-11 per node, rail-aligned so each of
+    /// the 8 per-node positions rides its own rail), 128 rail groups
+    /// behind a 4:1-oversubscribed spine.  The regime "Collective
+    /// Communication for 100k+ GPUs" (arXiv:2510.20171) describes —
+    /// flat rings die past the rail boundary and collectives go
+    /// hierarchical (see [`super::fabric`]).
+    pub fn perlmutter_xl() -> Machine {
+        Machine {
+            name: "perlmutter-xl".into(),
+            gpus_per_node: 8,
+            peak_flops: 312e12,
+            mem_bytes: 80e9, // A100-80GB
+            intra_bw: 300e9, // NVLink3 full-mesh effective
+            intra_lat_s: 2e-6,
+            inter_bw_per_node: 4.0 * 25e9, // 4x Slingshot-11 @ 200 Gb/s
+            nic_bw: 25e9,
+            inter_lat_s: 4e-6,
+            gemm_eff_max: 0.62,
+            gemm_eff_halfdim: 96.0,
+            tiers: vec![
+                Tier {
+                    name: "node".into(),
+                    radix: 8,
+                    bw: 300e9,
+                    link_bw: 300e9,
+                    lat_s: 2e-6,
+                },
+                Tier {
+                    name: "rail".into(),
+                    radix: 64,
+                    bw: 4.0 * 25e9,
+                    link_bw: 25e9,
+                    lat_s: 4e-6,
+                },
+                Tier {
+                    // 64 nodes x 100 GB/s injection per rail group,
+                    // 4:1 oversubscribed into the spine; a single
+                    // stream across the spine is capped at half a NIC
+                    name: "spine".into(),
+                    radix: 128,
+                    bw: 1.6e12,
+                    link_bw: 12.5e9,
+                    lat_s: 6e-6,
+                },
+            ],
+            flat_collectives: false,
         }
     }
 
@@ -94,8 +170,15 @@ impl Machine {
             "perlmutter" => Some(Machine::perlmutter()),
             "polaris" => Some(Machine::polaris()),
             "frontier" => Some(Machine::frontier()),
+            "perlmutter-xl" => Some(Machine::perlmutter_xl()),
             _ => None,
         }
+    }
+
+    /// Every preset name [`Machine::by_name`] accepts — the list the
+    /// CLI prints when an unknown `--machine` is requested.
+    pub fn names() -> &'static [&'static str] {
+        &["perlmutter", "polaris", "frontier", "perlmutter-xl"]
     }
 
     /// GEMM efficiency for a kernel whose smallest local matrix dimension
@@ -211,13 +294,37 @@ impl Machine {
 
     /// How many members of a `group` (global ranks, `gpus_per_node` packed
     /// per node) co-reside on the most-loaded node.
+    ///
+    /// Allocation-free: registration runs this O(#groups) per candidate
+    /// in the planner's refine sweep, where the former per-call
+    /// `BTreeMap` dominated.  Each node is counted once, at its first
+    /// member; the scan-back skip keeps the pass quadratic only in the
+    /// number of *distinct* nodes, with no heap traffic.
     pub fn members_per_node(&self, group: &[usize]) -> usize {
-        use std::collections::BTreeMap;
-        let mut per: BTreeMap<usize, usize> = BTreeMap::new();
-        for &r in group {
-            *per.entry(r / self.gpus_per_node).or_insert(0) += 1;
+        let mut best = 1usize; // empty group -> 1, as before
+        for (i, &r) in group.iter().enumerate() {
+            let node = r / self.gpus_per_node;
+            if group[..i].iter().any(|&q| q / self.gpus_per_node == node) {
+                continue; // counted at this node's first member
+            }
+            let count = group[i..].iter().filter(|&&q| q / self.gpus_per_node == node).count();
+            best = best.max(count);
         }
-        per.values().copied().max().unwrap_or(1)
+        best
+    }
+
+    /// Ring parameters for a communicator whose *placed* member list is
+    /// `placed` — the single pricing entry point [`super::CommWorld`]
+    /// registration and re-pricing use.  Flat machines (`tiers` empty)
+    /// take the two-level [`Machine::ring_bw_lat`], operation for
+    /// operation the pre-fabric behavior; tiered machines price the
+    /// ring at its span tier via [`fabric::tiered_bw_lat`].
+    pub fn group_bw_lat(&self, size: usize, per_node: usize, placed: &[usize]) -> (f64, f64) {
+        if self.tiers.is_empty() {
+            self.ring_bw_lat(size, per_node)
+        } else {
+            fabric::tiered_bw_lat(self, placed)
+        }
     }
 }
 
@@ -337,6 +444,74 @@ mod tests {
         assert_eq!(m.members_per_node(&[0, 1, 2, 3]), 4);
         assert_eq!(m.members_per_node(&[0, 4, 8, 12]), 1);
         assert_eq!(m.members_per_node(&[0, 1, 4, 5]), 2);
+    }
+
+    #[test]
+    fn members_per_node_matches_the_map_based_reference() {
+        // the allocation-free counting pass must be bit-identical to the
+        // BTreeMap accumulation it replaced, on every shape the suites
+        // exercise: dense, strided, ragged, repeated, unsorted, empty
+        fn reference(m: &Machine, group: &[usize]) -> usize {
+            use std::collections::BTreeMap;
+            let mut per: BTreeMap<usize, usize> = BTreeMap::new();
+            for &r in group {
+                *per.entry(r / m.gpus_per_node).or_insert(0) += 1;
+            }
+            per.values().copied().max().unwrap_or(1)
+        }
+        for m in [Machine::perlmutter(), Machine::frontier(), Machine::perlmutter_xl()] {
+            let gpn = m.gpus_per_node;
+            let shapes: Vec<Vec<usize>> = vec![
+                vec![],
+                vec![5],
+                (0..gpn).collect(),
+                (0..4 * gpn).collect(),
+                (0..16).map(|i| i * gpn).collect(),
+                (0..16).map(|i| i * gpn / 2).collect(),
+                vec![3, gpn + 1, 2, 5 * gpn, gpn + 2, 3],
+                (0..64).map(|i| (i * 7919) % (64 * gpn)).collect(),
+            ];
+            for g in shapes {
+                assert_eq!(m.members_per_node(&g), reference(&m, &g), "{}: {g:?}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn perlmutter_xl_scales_to_65536() {
+        let m = Machine::by_name("perlmutter-xl").unwrap();
+        assert_eq!(m.gpus_per_node, 8);
+        assert_eq!(m.mem_bytes, 80e9);
+        assert!(!m.tiers.is_empty() && !m.flat_collectives);
+        let capacity: usize = m.tiers.iter().map(|t| t.radix).product();
+        assert_eq!(capacity, 65536);
+        // node-local rings still ride NVLink through the tiered path
+        let (bw, lat) = m.group_bw_lat(8, 8, &(0..8).collect::<Vec<_>>());
+        assert_eq!((bw, lat), (m.intra_bw, m.intra_lat_s));
+    }
+
+    #[test]
+    fn machine_names_covers_every_preset() {
+        for name in Machine::names() {
+            assert_eq!(Machine::by_name(name).unwrap().name, *name);
+        }
+        assert!(Machine::by_name("perlmutter-xxl").is_none());
+    }
+
+    #[test]
+    fn group_bw_lat_is_ring_bw_lat_on_flat_machines() {
+        // bit-for-bit: the dispatch must not perturb flat pricing
+        let m = Machine::polaris();
+        for (g, per_node) in [
+            (vec![0, 1, 2, 3], 4usize),
+            (vec![0, 4, 8, 12], 1),
+            (vec![0, 1, 4, 5], 2),
+            (vec![0, 4], 1),
+        ] {
+            let (rb, rl) = m.ring_bw_lat(g.len(), per_node);
+            let (gb, gl) = m.group_bw_lat(g.len(), per_node, &g);
+            assert_eq!((rb.to_bits(), rl.to_bits()), (gb.to_bits(), gl.to_bits()));
+        }
     }
 
     #[test]

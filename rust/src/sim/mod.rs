@@ -4,7 +4,9 @@
 //! laptop: [`machine`] models the hardware (A100/MI250X flops,
 //! NVLink/Slingshot bandwidths, GEMM-efficiency curve), [`comm_world`]
 //! interns every communicator group once with its ring cost parameters
-//! precomputed, [`engine`] executes deduplicated per-GPU op programs with
+//! precomputed, [`fabric`] describes multi-tier (node/rail/spine)
+//! networks and prices rings at the highest tier they span, [`engine`]
+//! executes deduplicated per-GPU op programs with
 //! CUDA-stream semantics and rendezvous collectives, [`placed`] re-prices
 //! one built program under many rank→node placements (the planner's
 //! build-once refinement sweep), and [`trace`]
@@ -18,6 +20,7 @@
 
 pub mod comm_world;
 pub mod engine;
+pub mod fabric;
 pub mod machine;
 pub mod placed;
 pub mod reference;
@@ -30,5 +33,6 @@ pub use engine::{
     try_simulate_faulted, FaultReport, Op, OpKind, ProgramSet, ProgramSetBuilder, SimResult,
     SimScratch, StallError, Stream,
 };
+pub use fabric::Tier;
 pub use machine::Machine;
 pub use placed::PlacedWorld;

@@ -306,6 +306,13 @@ pub fn materialize(set: &super::engine::ProgramSet) -> Vec<GpuProgram> {
         "only identity-placement (column-major) programs are representable in the \
          pre-refactor reference engine"
     );
+    // likewise, the pre-refactor engine knows only the flat two-level
+    // ring pricing: a tiered-machine program would silently re-time
+    // every (decomposed) collective with the wrong formula
+    assert!(
+        set.machine.tiers.is_empty(),
+        "tiered-machine programs are not representable in the pre-refactor reference engine"
+    );
     let mut out = Vec::with_capacity(set.world());
     for rank in 0..set.world() {
         let cls = set.class_of(rank);

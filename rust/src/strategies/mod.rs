@@ -1696,4 +1696,81 @@ mod tests {
         assert!(survivor_build(&Layout::tensor3d(1, 2, 2, 1), &net, 64, &machine, 0).is_none());
         assert!(survivor_build(&layout, &net, 63, &machine, 0).is_none());
     }
+
+    /// Makespan of one all-reduce over 2 members on each of `n_nodes`
+    /// nodes (ranks `8k` and `8k+1`), the shape the crossover is pinned
+    /// on.  Non-member ranks get empty programs so the world is dense.
+    fn xl_ar_makespan(machine: &Machine, n_nodes: usize, bytes: f64) -> f64 {
+        let gpn = machine.gpus_per_node;
+        let members: Vec<usize> =
+            (0..n_nodes).flat_map(|nd| [nd * gpn, nd * gpn + 1]).collect();
+        let mut b = crate::sim::ProgramSetBuilder::new(machine);
+        for r in 0..n_nodes * gpn {
+            let member = r % gpn < 2;
+            b.begin_rank(member as u64);
+            if member {
+                let g = b.group(members.clone());
+                b.all_reduce(|| "dp".into(), 1, g, bytes, crate::sim::Stream::Comm, vec![]);
+            }
+        }
+        crate::sim::simulate(machine, &b.finish()).makespan
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_past_the_rail_crossover() {
+        // The pinned crossover (re-derived stdlib-only in
+        // python/tests/sim_mirror.py): a 256 MB all-reduce over 2
+        // members/node on perlmutter-xl.  Inside one 64-node rail the
+        // flat ring's 2-members-share-4-NICs bandwidth (25 GB/s) matches
+        // the rail phase's halved-bytes-at-12.5 GB/s exactly, so the
+        // hierarchical intra-node overhead only pays for itself while
+        // the latency saving dominates (small n) — flat wins only the
+        // {16, 32, 64}-node window.  Every cross-rail group (>= 128
+        // nodes) is spine-link-capped at 12.5 GB/s either way, the
+        // decomposition halves the cross-rail bytes, and hierarchical
+        // wins by a widening ~2x margin.
+        let hier = Machine::perlmutter_xl();
+        let mut flat = Machine::perlmutter_xl();
+        flat.flat_collectives = true;
+        let bytes = 256e6;
+        for n in [2usize, 4, 8, 16, 32, 64, 128, 256] {
+            let t_h = xl_ar_makespan(&hier, n, bytes);
+            let t_f = xl_ar_makespan(&flat, n, bytes);
+            let flat_wins = matches!(n, 16 | 32 | 64);
+            assert_eq!(t_f < t_h, flat_wins, "n={n}: hier {t_h} vs flat {t_f}");
+        }
+        let (t_h, t_f) = (xl_ar_makespan(&hier, 128, bytes), xl_ar_makespan(&flat, 128, bytes));
+        assert!(t_f > 1.5 * t_h, "cross-rail margin must be decisive: {t_f} vs {t_h}");
+    }
+
+    #[test]
+    fn tiered_build_prices_strategy_groups_hierarchically() {
+        // a real strategy build on the tiered machine: node-spanning
+        // groups decompose (more interned groups, more ops), node-local
+        // groups do not, and the flat-collectives ablation restores the
+        // one-op-per-collective shape while keeping tier-path pricing
+        let net = small_net();
+        let machine = Machine::perlmutter_xl();
+        // 32 ranks = 4 nodes; data groups stride g_r*g_c = 4, so each has
+        // 2 members/node across 4 nodes and decomposes; row/column
+        // groups are node-local and stay flat
+        let layout = Layout::tensor3d(8, 2, 2, 1);
+        let hier = build(&layout, &net, 64, &machine);
+        let mut ablated_machine = machine.clone();
+        ablated_machine.flat_collectives = true;
+        let flat = build(&layout, &net, 64, &ablated_machine);
+        assert!(hier.comm.len() > flat.comm.len(), "decomposition interns subgroups");
+        assert!(hier.total_ops() > flat.total_ops());
+        // the §5 volume identity: intra RS/AG at (m-1)/m plus the rail
+        // phase at (n-1)/(mn) telescopes to the flat ring's (p-1)/p, so
+        // each GPU moves exactly the flat wire volume and the analytic
+        // volume rules need no tiered special case
+        let rh = crate::sim::simulate(&machine, &hier);
+        let rf = crate::sim::simulate(&ablated_machine, &flat);
+        assert!(rh.makespan > 0.0 && rf.makespan > 0.0);
+        for g in 0..hier.world() {
+            let (a, b) = (rh.comm_bytes[g], rf.comm_bytes[g]);
+            assert!((a - b).abs() <= 1e-9 * b.max(1.0), "gpu {g}: {a} vs {b}");
+        }
+    }
 }

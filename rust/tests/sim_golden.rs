@@ -749,3 +749,48 @@ fn simulation_invariant_under_issue_order_permutation() {
         }
     }
 }
+
+#[test]
+fn tiered_simulation_invariant_under_issue_order_permutation() {
+    // the same property on the multi-tier machine, where node-spanning
+    // collectives compile into dependent RS/AR/AG sub-ops: decomposed
+    // rendezvous must not introduce any issue-order sensitivity.  (The
+    // tiered preset cannot join `cases()` — the pre-refactor reference
+    // engine has no tiered pricing or decomposition — so the property
+    // test is its primary engine-level golden.)
+    let machine = Machine::perlmutter_xl();
+    let net = small_net();
+    let sharded = ScheduleOpts { sharded_state: true, dp_barrier: false };
+    let t3d = |depth| Strategy::Tensor3d { depth, transpose_opt: true };
+    // data groups stride g_r*g_c = 4 -> 2 members on each of 4 (resp. 8)
+    // nodes: the gradient AR (resp. sharded RS/AG) decompose; row and
+    // column groups stay node-local flat rings
+    let configs: Vec<(Strategy, Mesh, ScheduleOpts)> = vec![
+        (t3d(2), Mesh::new(8, 2, 2, 1), ScheduleOpts::default()),
+        (t3d(1), Mesh::new(16, 2, 2, 1), sharded),
+    ];
+    for (strategy, mesh, opts) in configs {
+        let set = strategies::build_programs_with(strategy, &net, &mesh, 64, &machine, opts);
+        let baseline = sim::simulate(&machine, &set);
+        let mut rng = Rng::new(0x7EED5);
+        for trial in 0..6u64 {
+            let mut order: Vec<usize> = (0..set.world()).collect();
+            rng.shuffle(&mut order);
+            let r = sim::simulate_permuted(&machine, &set, &order);
+            assert_eq!(
+                r.makespan.to_bits(),
+                baseline.makespan.to_bits(),
+                "{strategy:?} {mesh}: trial {trial} makespan {} != {}",
+                r.makespan,
+                baseline.makespan
+            );
+            for g in 0..set.world() {
+                let (a, b) = (r.comm_bytes[g], baseline.comm_bytes[g]);
+                assert!(
+                    (a - b).abs() <= 1e-12 * b.abs().max(1.0),
+                    "{strategy:?} {mesh}: trial {trial} comm_bytes[{g}] {a} vs {b}"
+                );
+            }
+        }
+    }
+}
