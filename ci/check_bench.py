@@ -61,6 +61,13 @@ SCHEMA = [
     ("ckpt_interval_s", "pos"),
     ("ckpt_cost_s", "pos"),
     ("expected_iters_per_sec", "pos"),
+    # Recovery fields (PR 10): the shrink-vs-wait decision for the
+    # benched layout under the default recovery spec, plus the wall
+    # clock of pricing it (NOT part of the budget-gated total_s).
+    ("recovery_policy", "str"),
+    ("replan_s", "sec"),
+    ("shrunk_iters_per_sec", "pos"),
+    ("recovery_breakeven_mttr_s", "sec"),
 ]
 
 # Only present when the run refined (`refine` > 0); all-or-nothing.
@@ -155,6 +162,18 @@ def check(bench, budget_s):
                 errors.append(
                     f"fault_makespan_s: degraded {degraded} is below the healthy"
                     f" makespan_s {healthy}"
+                )
+
+    # A shrunken world runs the same global batch on fewer GPUs: its
+    # steady rate above the full world's expected rate means the survivor
+    # re-plan priced a world it does not have.
+    if all(f in bench for f in ("shrunk_iters_per_sec", "expected_iters_per_sec")):
+        shrunk, full = bench["shrunk_iters_per_sec"], bench["expected_iters_per_sec"]
+        if isinstance(shrunk, (int, float)) and isinstance(full, (int, float)):
+            if shrunk > full:
+                errors.append(
+                    f"shrunk_iters_per_sec: survivor rate {shrunk} exceeds the"
+                    f" full-world expected_iters_per_sec {full}"
                 )
 
     known = {f for f, _ in SCHEMA} | set(refine_fields)

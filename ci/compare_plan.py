@@ -28,6 +28,14 @@ FLOAT_FIELDS = {
     "ckpt_interval_s",
     "ckpt_cost_s",
     "expected_iters_per_sec",
+    # the replan recovery golden (PR 10): timeline + per-policy rates
+    "death_at_s",
+    "detect_s",
+    "shrunk_makespan_s",
+    "wait_iters_per_sec",
+    "recovery_iters_per_sec",
+    "shrunk_iters_per_sec",
+    "recovery_breakeven_mttr_s",
 }
 
 

@@ -52,6 +52,18 @@ empirically pinned Rust tests are diagnosable without a Rust toolchain:
   ring intra-node — over the fault-blind G_pipe=2 (2,1,4) winner, and
   the fault-aware gpt80b/1024 plan matches the CI golden
   (ci/golden_plan_gpt80b_1024_faulted.json).
+* The recovery layer (PR 10): ``recover`` mirrors
+  ``planner::PlanRequest::recover_layout`` — the survivor-world
+  derivation (``survivor_ranks``: dead ranks out, node eviction by
+  placement), detection via a dead-rank simulation
+  (``simulate(..., deaths=...)`` mirroring ``sim::detect_death``), and
+  the per-policy repair-cycle pricing (``recovery_cycle_ips`` /
+  ``recovery_breakeven_mttr`` mirroring ``comm_model``).  ``__main__``
+  asserts the pinned crossover of
+  ``planner::tests::recovery_policy_crossover_on_gpt9b_40`` — waiting
+  wins at MTTR 60 s, a spare (then shrinking over waiting) wins at
+  MTTR 3600 s — and authors every float in the CI recovery golden
+  (ci/golden_recovery_gpt80b_1024.json).
 * The issue-order permutation-invariance property of
   ``rust/tests/sim_golden.rs`` can be spot-checked here with
   ``simulate(..., order=...)``.
@@ -536,7 +548,8 @@ def coll_time_on(kind, bytes_, p, bw, lat):
     return (p - 1.0) / p * bytes_ / bw + (p - 1.0) * lat
 
 
-def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=None):
+def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=None,
+             deaths=None):
     """Mirror of sim::engine::simulate / simulate_permuted.
 
     Returns ``(makespan, compute_busy)``.  Stream 3 (P2p) mirrors the
@@ -557,6 +570,15 @@ def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=No
     *scale*, not expressible as an occupancy).  ``jitter`` is the
     per-rank compute-duration multiplier list of
     ``FaultSpec::jitter_factor`` (see ``jitter_factors``).
+
+    ``deaths`` (PR 10) mirrors ``FaultCtx::death``: a per-rank death
+    time list (``inf`` = alive) — a dead rank issues no op whose start
+    is at or past its death, so the run quiesces at the first
+    collective that needs it.  In this mode the return is a 3-tuple
+    ``(time, compute_busy, stuck_ops)``: ``stuck_ops == 0`` means the
+    program outran the death and ``time`` is the plain makespan;
+    otherwise ``time`` is the detection (quiesce) time of
+    ``StallError::at_s`` — the last completed event.
     """
     n = len(programs)
     done = [[False] * len(p) for p in programs]
@@ -613,6 +635,11 @@ def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=No
                         break
                     ready = max(ready, done_time[gpu][dd])
                 if not ok:
+                    continue
+                if deaths is not None and ready >= deaths[gpu]:
+                    # a dead rank issues nothing starting at or past its
+                    # death: its streams block and the first collective
+                    # needing it becomes the detected stall
                     continue
                 kind = op[0]
                 if kind == COMPUTE:
@@ -672,6 +699,11 @@ def simulate(machine, programs, order=None, pricing=None, priced=None, jitter=No
         done[g][i] = True
         done_time[g][i] = t
         try_issue(g)
+    if deaths is not None:
+        stuck = sum(1 for g in range(n) for d in done[g] if not d)
+        if stuck:
+            return state["now"], compute_busy, stuck
+        return max(max(v) if v else 0.0 for v in done_time), compute_busy, 0
     for g in range(n):
         assert all(done[g]), f"deadlock on gpu {g}"
     return max(max(v) if v else 0.0 for v in done_time), compute_busy
@@ -1043,13 +1075,16 @@ def jitter_factors(world, amplitude, seed=0):
 
 
 def fault_spec(mtbf_s, links=((0, 0.25),), jitter=0.0, jitter_seed=0,
-               ckpt_interval_s=0.0, ckpt_bw=2e9, restart_s=180.0, mttr_s=1800.0):
+               ckpt_interval_s=0.0, ckpt_bw=2e9, restart_s=180.0, mttr_s=1800.0,
+               deaths=()):
     """Mirror of FaultSpec::with_mtbf with the tunable knobs the planner
     scoring reads.  ``links`` is ``[(node, bw_scale), ...]`` — onset
-    times are irrelevant to the steady-state planner pricing."""
+    times are irrelevant to the steady-state planner pricing.
+    ``deaths`` (PR 10) is ``[(rank, at_s), ...]`` for the recovery path."""
     return {"mtbf_s": mtbf_s, "links": list(links), "jitter": jitter,
             "jitter_seed": jitter_seed, "ckpt_interval_s": ckpt_interval_s,
-            "ckpt_bw": ckpt_bw, "restart_s": restart_s, "mttr_s": mttr_s}
+            "ckpt_bw": ckpt_bw, "restart_s": restart_s, "mttr_s": mttr_s,
+            "deaths": list(deaths)}
 
 
 def fault_price(machine, progs, perm, links):
@@ -1238,6 +1273,132 @@ def refine_pipelined(net, batch, world, machine, mode, k, depth, pipes, m):
     scored.sort(key=lambda x: (x[3], x[2]))
     basemk = next(mk for p, mm, _, mk in scored if p == 1 and mm.key() == base.key())
     return base, basemk, scored
+
+
+def recovery_cycle_ips(horizon_s, overhead_s, steady_ips):
+    """Mirror of comm_model::recovery_cycle_ips: expected iterations/sec
+    over one repair cycle of ``horizon_s`` (= MTBF + MTTR, failure to
+    next failure) that opens with ``overhead_s`` of non-training
+    recovery work, then runs at the ``steady_ips`` steady-state rate
+    (the PR 7 fault-aware expected-throughput score, so policies and
+    planner candidates share one currency)."""
+    if horizon_s <= 0.0:
+        return 0.0
+    return steady_ips * max(horizon_s - overhead_s, 0.0) / horizon_s
+
+
+def recovery_breakeven_mttr(mtbf_s, core_s, shrink_overhead_s,
+                            full_ips, small_ips):
+    """Mirror of comm_model::recovery_breakeven_mttr_s: the MTTR at
+    which shrink-to-survivors overtakes wait-for-repair.  Over the cycle
+    horizon H = MTBF + MTTR, waiting earns full_ips*(MTBF - core)
+    iterations (independent of MTTR — the repair window is pure wait),
+    while shrinking earns small_ips*(H - shrink_overhead), which grows
+    with MTTR; the crossover is unique.  A dead survivor rate
+    (``small_ips <= 0``) means shrinking never pays: infinite."""
+    if small_ips <= 0.0:
+        return float("inf")
+    return max(full_ips * max(mtbf_s - core_s, 0.0) / small_ips
+               - mtbf_s + shrink_overhead_s, 0.0)
+
+
+def survivor_ranks(world, deaths, perm, gpn, evict_node=True):
+    """Mirror of planner::recovery's survivor-world derivation: the dead
+    logical ranks are removed from the world, and by default every rank
+    placed on a casualty's physical node is evicted with it (a dead GPU
+    condemns its host node; ``evict_node=False`` keeps the healthy
+    neighbors).  Returns ``(survivor_world, dead_ranks)``."""
+    dead = sorted({r for (r, _) in deaths if r < world})
+    if dead and evict_node:
+        phys = perm if perm is not None else list(range(world))
+        sick = {phys[r] // gpn for r in dead}
+        dead = sorted(r for r in range(world) if phys[r] // gpn in sick)
+    return world - len(dead), dead
+
+
+POLICY_ORDER = ("wait-for-repair", "shrink-to-survivors", "spare-node")
+
+
+def recover(net, batch, world, machine, mode, k, depth, pipes, m,
+            p, mesh, pl, mk_h, full_ips, spec, spares=0, replan_s=30.0,
+            evict_node=True):
+    """Mirror of planner::recovery (PR 10): given the running layout
+    ``(p, mesh, pl)``, its healthy makespan, and its fault-aware
+    steady-state score (``expected_ips``), price the recovery policies
+    for the FaultSpec's death and rank them by expected iterations/sec
+    over one repair cycle.
+
+    Timeline ingredients, shared by every policy:
+      * detection — the survivors' quiesce time from a dead-rank
+        simulation of the placed program (StallError::at_s);
+      * rollback — half the checkpoint interval (the expected work lost
+        since the last checkpoint);
+      * restart — ``spec["restart_s"]``;
+    then per policy:
+      * wait-for-repair: sit out MTTR, resume at the full-world
+        steady-state rate;
+      * shrink-to-survivors: re-shard the casualty's state over
+        ``ckpt_bw``, pay ``replan_s``, continue at the survivor-world
+        rate — the fault-aware refined winner of a full PlanRequest
+        re-entry on the shrunken world (global batch preserved so
+        iterations stay comparable units);
+      * spare-node (``spares > 0``): same re-shard + replan cost, but
+        resume at the full-world rate with no MTTR wait.
+
+    Returns a dict with the per-policy timelines sorted best-first."""
+    gpn = machine.gpus_per_node
+    explicit = spec.get("deaths", [])
+    deaths = [(r, t) for (r, t) in explicit if r < world]
+    if not deaths and not explicit:
+        # no scripted death: price the canonical casualty — rank 0,
+        # mid-iteration (the expected case for a memoryless failure)
+        deaths = [(0, 0.5 * mk_h)]
+    perm = placement_perm(pl, p, mesh.g_data, mesh.g_r, mesh.g_c, gpn)
+    detect = 0.0
+    death_at = min(t for _, t in deaths) if deaths else 0.0
+    if deaths:
+        progs = (build_t3d(net, mesh, batch, depth, machine, sharded=(mode == "sh"))
+                 if p <= 1 else
+                 build_t3d_pipeline(net, mesh, batch, depth, p, m, machine,
+                                    sharded=(mode == "sh")))
+        dv = [float("inf")] * world
+        for (r, t) in deaths:
+            dv[r] = min(dv[r], t)
+        q, _, stuck = simulate(machine, place_programs(progs, perm), deaths=dv)
+        # a death past the iteration's end never stalls it: detection
+        # then happens in a later (statistically identical) iteration
+        detect = q if stuck else min(death_at, q)
+    sw, dead = survivor_ranks(world, deaths, perm, gpn, evict_node)
+    interval_h, cost_h = ckpt_params(net, mode, mesh, p, spec)
+    core = detect + interval_h / 2.0 + spec["restart_s"]
+    reshard = cost_h  # one rank's shard over ckpt_bw = one checkpoint write
+    horizon = spec["mtbf_s"] + spec["mttr_s"]
+    wait_over = core + spec["mttr_s"] if dead else 0.0
+    policies = [("wait-for-repair", wait_over,
+                 recovery_cycle_ips(horizon, wait_over, full_ips))]
+    survivor = None
+    breakeven = None
+    if dead and sw >= 1:
+        sans = dict(spec)
+        sans["deaths"] = []
+        _, aware = refine_faulted(net, batch, sw, machine, mode, k, depth,
+                                  pipes, m, sans)
+        sp, sm, spl, smk, sfmk, sips = aware[0]
+        shrink_over = core + reshard + replan_s
+        policies.append(("shrink-to-survivors", shrink_over,
+                         recovery_cycle_ips(horizon, shrink_over, sips)))
+        survivor = (sp, sm, spl, smk, sfmk, sips)
+        breakeven = recovery_breakeven_mttr(spec["mtbf_s"], core, shrink_over,
+                                            full_ips, sips)
+    if dead and spares > 0:
+        spare_over = core + reshard + replan_s
+        policies.append(("spare-node", spare_over,
+                         recovery_cycle_ips(horizon, spare_over, full_ips)))
+    policies.sort(key=lambda x: (-x[2], POLICY_ORDER.index(x[0])))
+    return {"deaths": deaths, "dead": dead, "death_at": death_at,
+            "detect": detect, "survivor_world": sw, "survivor": survivor,
+            "core": core, "reshard": reshard, "breakeven": breakeven,
+            "policies": policies}
 
 
 if __name__ == "__main__":
@@ -1433,6 +1594,107 @@ if __name__ == "__main__":
           f"expected {ips:.5f} iters/s")
     print("ok: fault-aware gpt80b/1024 plan fields match the CI golden "
           "(ci/golden_plan_gpt80b_1024_faulted.json)")
+
+    # The recovery golden (PR 10): the CI bench-smoke job runs
+    # `replan --model gpt80b --gpus 1024 --machine polaris --mtbf 3600
+    # --json` and diffs it against ci/golden_recovery_gpt80b_1024.json.
+    # The canonical casualty (rank 0, mid-iteration) under blocked2
+    # takes its whole node — ranks {0,1,4,5} — leaving a 1020-GPU
+    # survivor world whose best re-plan is the awkward (17,4,15)
+    # column-major mesh; at the default 1800 s MTTR the shrink timeline
+    # still beats sitting out the repair, so the headline verdict is
+    # shrink-to-survivors, with the wait/shrink breakeven near 769 s.
+    # Every float in the golden is authored here.
+    rep = recover(gpt80b, 1024, 1024, polaris(), "rep", 2, 2, [1], 8,
+                  1, mesh1024, "blocked2", mk_b2, ips, spec3600)
+    golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "..", "..", "ci",
+                               "golden_recovery_gpt80b_1024.json")
+    with open(golden_path) as fh:
+        golden = json.load(fh)
+    sp, sm, spl, smk, sfmk, sips = rep["survivor"]
+    assert rep["deaths"] == [(0, 0.5 * mk_b2)], "canonical casualty drifted"
+    assert rep["dead"] == [0, 1, 4, 5], "blocked2 node eviction drifted"
+    assert (golden["death_rank"], golden["evicted_ranks"]) == (0, len(rep["dead"]))
+    assert golden["survivor_world"] == rep["survivor_world"] == 1020
+    assert (golden["survivor_g_data"], golden["survivor_g_r"],
+            golden["survivor_g_c"]) == sm.key() == (17, 4, 15), \
+        "survivor re-plan mesh drifted"
+    assert golden["survivor_g_tensor"] == sm.g_tensor() and sp == 1
+    assert golden["survivor_placement"] == spl == "column-major"
+    best_name, _, best_ips = rep["policies"][0]
+    assert golden["recovery_policy"] == best_name == "shrink-to-survivors", \
+        "the headline recovery verdict drifted"
+    wait_ips = next(pips for name, _, pips in rep["policies"]
+                    if name == "wait-for-repair")
+    derived = {"mttr_s": spec3600["mttr_s"],
+               "death_at_s": rep["death_at"], "detect_s": rep["detect"],
+               "shrunk_makespan_s": smk, "shrunk_iters_per_sec": sips,
+               "wait_iters_per_sec": wait_ips,
+               "recovery_iters_per_sec": best_ips,
+               "recovery_breakeven_mttr_s": rep["breakeven"]}
+    for key, val in derived.items():
+        assert math.isclose(val, golden[key], rel_tol=1e-12), \
+            f"recovery golden {key}: mirror {val!r} vs golden {golden[key]!r}"
+    print(f"gpt80b/1024 recovery (MTTR 1800 s): detect {rep['detect']:.1f}s, "
+          f"survivors 1020 -> (17,4,15) at {sips:.5f} iters/s steady; "
+          f"{best_name} wins ({best_ips:.5f} vs wait {wait_ips:.5f} iters/s, "
+          f"breakeven MTTR {rep['breakeven']:.0f}s)")
+    print("ok: recovery decision matches the CI golden "
+          "(ci/golden_recovery_gpt80b_1024.json)")
+
+    # The shrink-vs-wait crossover (PR 10): planner::tests::
+    # recovery_policy_crossover_on_gpt9b_40.  GPT-9B on 40 Polaris GPUs,
+    # MTBF 3600 s: the canonical casualty takes node 0 (ranks 0-3) and
+    # the 36-GPU survivor world re-plans onto G_pipe=2 (3,2,3).  The
+    # verdict flips with the repair regime:
+    #   * fast repairs (MTTR 60 s): waiting pays almost nothing beyond
+    #     the shared core, so wait-for-repair wins and the breakeven
+    #     MTTR (~917 s) sits far above the actual repair time;
+    #   * slow repairs (MTTR 3600 s) with one hot spare: the spare
+    #     resumes the full rate for shrink-grade overhead and wins
+    #     outright, while plain shrinking still beats sitting out the
+    #     hour-long repair (breakeven ~2608 s < 3600 s).
+    # The full-world winner itself shifts with MTTR (the degraded
+    # weight in the ranking), so each regime refines at its own spec —
+    # exactly what PlanRequest::replan does.
+    print("gpt9b/40 polaris rep, G_pipe in {1,2,4}, MTBF 3600 s:")
+    for mttr, spares, want_winner, want_best, be_lo, be_hi in (
+            (60.0, 0, (2, (5, 1, 4)), "wait-for-repair", 900.0, 935.0),
+            (3600.0, 1, (4, (5, 1, 2)), "spare-node", 2500.0, 2700.0)):
+        s = fault_spec(3600.0, mttr_s=mttr)
+        _, aware = refine_faulted(gpt9b, 64, 40, polaris(), "rep", 3, 2,
+                                  [1, 2, 4], 8, s)
+        p, mm, pl, mk, fmk, fips = aware[0]
+        assert (p, mm.key()) == want_winner and pl == "column-major", \
+            f"mttr {mttr}: full-world winner drifted to G_pipe={p} {mm.key()} {pl}"
+        rep = recover(gpt9b, 64, 40, polaris(), "rep", 3, 2, [1, 2, 4], 8,
+                      p, mm, pl, mk, fips, s, spares=spares)
+        assert rep["dead"] == [0, 1, 2, 3] and rep["survivor_world"] == 36
+        assert rep["detect"] > rep["death_at"] >= 0.0, \
+            "detection cannot precede the death"
+        sp, sm, spl, smk, sfmk, sips = rep["survivor"]
+        assert (sp, sm.key()) == (2, (3, 2, 3)), "survivor re-plan drifted"
+        assert 0.0 < sips < fips, "the shrunken world cannot outrun the full one"
+        names = [name for name, _, _ in rep["policies"]]
+        by_name = {name: pips for name, _, pips in rep["policies"]}
+        assert names[0] == want_best, \
+            f"mttr {mttr}: best policy {names[0]}, expected {want_best}"
+        assert ("spare-node" in names) == (spares > 0)
+        assert be_lo < rep["breakeven"] < be_hi, \
+            f"mttr {mttr}: breakeven {rep['breakeven']!r} outside ({be_lo}, {be_hi})"
+        if mttr < rep["breakeven"]:
+            assert by_name["wait-for-repair"] > by_name["shrink-to-survivors"], \
+                "below the breakeven, waiting must beat shrinking"
+        else:
+            assert by_name["shrink-to-survivors"] > by_name["wait-for-repair"], \
+                "above the breakeven, shrinking must beat waiting"
+        print(f"  MTTR {mttr:.0f}s (spares {spares}): full winner G_pipe={p} "
+              f"{mm.key()}, best {names[0]} "
+              f"({', '.join(f'{n} {by_name[n]:.4f}' for n in names)} iters/s), "
+              f"breakeven {rep['breakeven']:.0f}s")
+    print("ok: the shrink-vs-wait verdict flips with the repair regime "
+          "(as the Rust test pins)")
 
     # The two-tier embedding (PR 8): every flat Machine is a two-tier
     # fabric (node tier + one boundless NIC tier), and pricing through

@@ -271,6 +271,44 @@ pub fn expected_secs_per_iter(t_healthy: f64, t_degraded: f64, degraded_weight: 
     (1.0 - degraded_weight) * t_healthy + degraded_weight * t_degraded
 }
 
+/// Expected iterations/sec over one repair cycle of `horizon_s`
+/// (= MTBF + MTTR, failure to next failure) that opens with
+/// `overhead_s` of non-training recovery work, then runs at the
+/// `steady_ips` steady-state rate (the fault-aware expected-throughput
+/// score, so recovery policies and planner candidates share one
+/// currency).  An overhead longer than the cycle earns 0 — the job
+/// never trains between failures.
+pub fn recovery_cycle_ips(horizon_s: f64, overhead_s: f64, steady_ips: f64) -> f64 {
+    if horizon_s <= 0.0 {
+        return 0.0;
+    }
+    steady_ips * (horizon_s - overhead_s).max(0.0) / horizon_s
+}
+
+/// The MTTR at which shrink-to-survivors overtakes wait-for-repair.
+///
+/// Over the cycle horizon `H = MTBF + MTTR`, waiting earns
+/// `full_ips * (MTBF - core)` iterations — independent of MTTR, the
+/// repair window is pure wait — while shrinking earns
+/// `small_ips * (H - shrink_overhead)`, which grows with MTTR; the
+/// crossover is unique.  `core_s` is the shared detect + rollback +
+/// restart cost, `shrink_overhead_s` adds re-shard + replan on top.
+/// Returns 0 when shrinking wins at any repair time and
+/// [`f64::INFINITY`] when the survivor world earns nothing
+/// (`small_ips <= 0`) — waiting then wins at every MTTR.
+pub fn recovery_breakeven_mttr_s(
+    mtbf_s: f64,
+    core_s: f64,
+    shrink_overhead_s: f64,
+    full_ips: f64,
+    small_ips: f64,
+) -> f64 {
+    if small_ips <= 0.0 {
+        return f64::INFINITY;
+    }
+    (full_ips * (mtbf_s - core_s).max(0.0) / small_ips - mtbf_s + shrink_overhead_s).max(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -517,5 +555,38 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn recovery_cycle_ips_discounts_the_overhead() {
+        // no overhead -> the steady rate; full-cycle overhead -> zero
+        assert_eq!(recovery_cycle_ips(5400.0, 0.0, 0.4), 0.4);
+        assert_eq!(recovery_cycle_ips(5400.0, 5400.0, 0.4), 0.0);
+        assert_eq!(recovery_cycle_ips(5400.0, 9999.0, 0.4), 0.0, "clamped, not negative");
+        assert_eq!(recovery_cycle_ips(0.0, 0.0, 0.4), 0.0, "degenerate horizon");
+        // half the cycle lost -> half the rate
+        assert!((recovery_cycle_ips(5400.0, 2700.0, 0.4) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_breakeven_is_the_policy_crossover() {
+        let (mtbf, core, over) = (3600.0, 300.0, 350.0);
+        let (full, small) = (0.4, 0.36);
+        let be = recovery_breakeven_mttr_s(mtbf, core, over, full, small);
+        assert!(be.is_finite() && be > 0.0);
+        // at the breakeven MTTR the two cycle rates agree...
+        let h = mtbf + be;
+        let wait = recovery_cycle_ips(h, core + be, full);
+        let shrink = recovery_cycle_ips(h, over, small);
+        assert!((wait - shrink).abs() < 1e-9 * wait, "wait {wait} vs shrink {shrink}");
+        // ...shrink wins above it, wait below
+        let h = mtbf + 2.0 * be;
+        assert!(recovery_cycle_ips(h, over, small) > recovery_cycle_ips(h, core + 2.0 * be, full));
+        let h = mtbf + 0.5 * be;
+        assert!(recovery_cycle_ips(h, over, small) < recovery_cycle_ips(h, core + 0.5 * be, full));
+        // a worthless survivor world -> waiting wins at every MTTR
+        assert_eq!(recovery_breakeven_mttr_s(mtbf, core, over, full, 0.0), f64::INFINITY);
+        // a survivor world as good as the full one -> shrink from MTTR 0
+        assert_eq!(recovery_breakeven_mttr_s(mtbf, 0.0, 0.0, full, full), 0.0);
     }
 }

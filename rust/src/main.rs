@@ -5,7 +5,12 @@
 //!   plan       §5 planner: recommend (G_data, G_r, G_c) for a model+cluster
 //!              (--refine K re-ranks the K best Eq.-4 candidates by
 //!              simulated full-world makespan; --pipeline P adds the 1F1B
-//!              pipeline axis G_pipe with its bubble-fraction term)
+//!              pipeline axis G_pipe with its bubble-fraction term;
+//!              --recovery prices the shrink-vs-wait decision alongside)
+//!   replan     recovery planner: fault-aware plan plus the recovery
+//!              decision for a detected death — wait for repair, shrink
+//!              to the survivors, or swap in a spare — ranked by expected
+//!              iterations/sec over one MTBF+MTTR repair cycle
 //!   simulate   one iteration of a strategy on the cluster simulator
 //!              (--pipeline P --microbatches M runs tensor3d under 1F1B)
 //!   bench-sim  paper-scale simulator benchmark: build + simulate a full
@@ -23,7 +28,7 @@ use tensor3d::models::{gpt, unet, NetworkDesc};
 use tensor3d::planner::{self, NetKind};
 use tensor3d::repro;
 use tensor3d::sim::Machine;
-use tensor3d::spec::{FaultSpec, Placement};
+use tensor3d::spec::{FaultSpec, Placement, RecoverySpec};
 use tensor3d::strategies::{self, Strategy};
 use tensor3d::trainer::{self, optimizer::AdamWConfig, TrainConfig};
 use tensor3d::util::cli::{flag, opt, Args};
@@ -190,6 +195,13 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
                  at 1/4 link bandwidth, Young-optimal checkpointing) instead of \
                  healthy makespan (0 = fault-blind; needs --refine > 0)",
             ),
+            opt(
+                "recovery",
+                "",
+                "also price the recovery policies for the spec's death on the \
+                 recommendation: a comma list of spares:N, replan:SECONDS and \
+                 rank-only clauses, or `default` (needs --mtbf > 0)",
+            ),
             flag("sharded-state", "depth-shard optimizer state (ZeRO-style memory rule)"),
             flag(
                 "flat-collectives",
@@ -237,10 +249,26 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     if let Some(pls) = placements_by_spec(&a.str("placements")?)? {
         req = req.placements(&pls);
     }
+    let spec = FaultSpec::with_mtbf(mtbf);
     if mtbf > 0.0 {
-        req = req.faults(&FaultSpec::with_mtbf(mtbf));
+        req = req.faults(&spec);
     }
-    let r = req.run();
+    let recovery_arg = a.str("recovery")?;
+    let rec = if recovery_arg.is_empty() {
+        None
+    } else {
+        if mtbf <= 0.0 {
+            bail!("--recovery prices MTBF+MTTR repair cycles; add --mtbf SECONDS");
+        }
+        Some(RecoverySpec::parse(&recovery_arg).map_err(|e| anyhow!("{e}"))?)
+    };
+    let (r, recovery) = match &rec {
+        Some(rec) => {
+            let (r, rr) = req.replan(rec);
+            (r, Some(rr))
+        }
+        None => (req.run(), None),
+    };
     let best = r.layout().clone();
 
     if a.flag("json") {
@@ -274,6 +302,9 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
             fields.push(("ckpt_interval_s", Json::num(f.ckpt_interval_s)));
             fields.push(("ckpt_cost_s", Json::num(f.ckpt_cost_s)));
             fields.push(("expected_iters_per_sec", Json::num(f.expected_iters_per_sec)));
+        }
+        if let Some(rr) = &recovery {
+            push_recovery_fields(&mut fields, rr, spec.mttr_s);
         }
         println!("{}", Json::obj(fields));
         return Ok(());
@@ -333,6 +364,9 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
                 f.expected_iters_per_sec
             );
         }
+        if let (Some(rr), Some(rec)) = (&recovery, &rec) {
+            print_recovery(rr, &spec, rec);
+        }
         return Ok(());
     }
     println!(
@@ -375,6 +409,275 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
             fmt_bytes(c.score * strategies::BYTES_PER_ELEM)
         );
     }
+    Ok(())
+}
+
+/// Append the recovery-decision fields to a plan JSON line (the schema
+/// `ci/golden_recovery_gpt80b_1024.json` pins; diffed by
+/// `ci/compare_plan.py`).
+fn push_recovery_fields(
+    fields: &mut Vec<(&'static str, tensor3d::util::json::Json)>,
+    rr: &planner::RecoveryReport,
+    mttr_s: f64,
+) {
+    use tensor3d::util::json::Json;
+    fields.push(("mttr_s", Json::num(mttr_s)));
+    if let Some(d) = rr.deaths.first() {
+        fields.push(("death_rank", Json::num(d.rank as f64)));
+        fields.push(("death_at_s", Json::num(rr.death_at_s)));
+        fields.push(("detect_s", Json::num(rr.detect_s)));
+    }
+    fields.push(("evicted_ranks", Json::num(rr.dead.len() as f64)));
+    fields.push(("survivor_world", Json::num(rr.survivor_world as f64)));
+    if let Some(c) = rr.survivor_best() {
+        fields.push(("survivor_g_data", Json::num(c.layout.g_data as f64)));
+        fields.push(("survivor_g_r", Json::num(c.layout.g_r as f64)));
+        fields.push(("survivor_g_c", Json::num(c.layout.g_c as f64)));
+        fields.push(("survivor_g_tensor", Json::num(c.layout.g_tensor() as f64)));
+        fields.push(("survivor_placement", Json::str(&c.layout.placement.label())));
+        fields.push(("shrunk_makespan_s", Json::num(c.makespan_s.unwrap_or(f64::NAN))));
+        fields.push(("shrunk_iters_per_sec", Json::num(c.expected_ips.unwrap_or(f64::NAN))));
+    }
+    fields.push(("recovery_policy", Json::str(rr.best().policy.label())));
+    let wait = rr
+        .policies
+        .iter()
+        .find(|p| p.policy == planner::RecoveryPolicy::WaitForRepair)
+        .expect("wait-for-repair is always priced");
+    fields.push(("wait_iters_per_sec", Json::num(wait.expected_ips)));
+    fields.push(("recovery_iters_per_sec", Json::num(rr.best().expected_ips)));
+    if let Some(be) = rr.breakeven_mttr_s {
+        fields.push(("recovery_breakeven_mttr_s", Json::num(be)));
+    }
+}
+
+/// The human-readable recovery section shared by `plan --recovery` and
+/// `replan`.
+fn print_recovery(rr: &planner::RecoveryReport, spec: &FaultSpec, rec: &RecoverySpec) {
+    if rr.dead.is_empty() {
+        println!("  recovery: no casualty in this world — keep running at the full rate");
+        return;
+    }
+    let d = rr.deaths.first().expect("a casualty implies a death");
+    println!(
+        "  recovery (MTTR {:.0} s, {}, replan budget {:.0} s):",
+        spec.mttr_s,
+        if rec.evict_node { "node eviction" } else { "rank-only eviction" },
+        rec.replan_s
+    );
+    println!(
+        "    death: rank {} at {:.2} s, survivors quiesce at {:.2} s; {} rank{} evicted, \
+         {} survive",
+        d.rank,
+        rr.death_at_s,
+        rr.detect_s,
+        rr.dead.len(),
+        if rr.dead.len() == 1 { "" } else { "s" },
+        rr.survivor_world
+    );
+    if let Some(c) = rr.survivor_best() {
+        println!(
+            "    survivor plan: g_data={} g_r={} g_c={} @{} — {:.3} s/iter, {:.4} iters/s \
+             steady",
+            c.layout.g_data,
+            c.layout.g_r,
+            c.layout.g_c,
+            c.layout.placement.label(),
+            c.makespan_s.unwrap_or(f64::NAN),
+            c.expected_ips.unwrap_or(f64::NAN)
+        );
+    }
+    println!(
+        "    timeline: core {:.1} s (detect + expected rollback + restart), re-shard {:.1} s",
+        rr.core_s, rr.reshard_s
+    );
+    for (i, p) in rr.policies.iter().enumerate() {
+        println!(
+            "    {} {:<20} {:.4} iters/s over the repair cycle (overhead {:.1} s)",
+            if i == 0 { "->" } else { "  " },
+            p.policy.label(),
+            p.expected_ips,
+            p.overhead_s
+        );
+    }
+    if let Some(be) = rr.breakeven_mttr_s {
+        println!("    shrinking overtakes waiting at MTTR >= {be:.0} s");
+    }
+}
+
+fn cmd_replan(argv: &[String]) -> Result<()> {
+    let a = Args::new(
+        "tensor3d replan",
+        vec![
+            opt("model", "gpt80b", "model preset"),
+            opt("gpus", "1024", "GPU count"),
+            opt("machine", "polaris", "perlmutter|polaris|frontier|perlmutter-xl"),
+            opt("batch", "0", "global batch (0 = model default)"),
+            opt(
+                "refine",
+                "2",
+                "re-rank the K best Eq.-4 candidates per pipeline depth by simulated \
+                 expected iterations/sec (recovery is priced in that currency, so \
+                 K >= 1)",
+            ),
+            opt("depth", "2", "overdecomposition degree used by the refine simulations"),
+            opt(
+                "pipeline",
+                "1",
+                "max pipeline depth: search G_pipe over the divisors of this value \
+                 with the 1F1B bubble term (1 = no pipelining)",
+            ),
+            opt("microbatches", "8", "1F1B microbatches per iteration (with --pipeline > 1)"),
+            opt(
+                "placements",
+                "auto",
+                "placement search set: auto (the named set per candidate shape) or a \
+                 comma list of column-major|row-major|depth-outer|blockedN",
+            ),
+            opt("mtbf", "3600", "mean time between failures in seconds (must be positive)"),
+            opt("mttr", "0", "mean time to repair in seconds (0 = the spec default, 1800)"),
+            opt(
+                "dead",
+                "",
+                "scripted death RANK@SECONDS (empty = the canonical casualty: rank 0, \
+                 mid-iteration)",
+            ),
+            opt(
+                "recovery",
+                "default",
+                "recovery options: a comma list of spares:N, replan:SECONDS and \
+                 rank-only clauses",
+            ),
+            flag("sharded-state", "depth-shard optimizer state (ZeRO-style memory rule)"),
+            flag(
+                "flat-collectives",
+                "ablation: single flat rings on tiered machines (no hierarchical \
+                 RS/AR/AG decomposition; no effect on flat machines)",
+            ),
+            flag("json", "emit plan + recovery decision as one-line JSON (CI golden diff)"),
+        ],
+    )
+    .parse(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+    let model_name = a.str("model")?;
+    let (net, kind, default_batch, _) = model_by_name(&model_name)?;
+    let mut machine = machine_by_name(&a.str("machine")?)?;
+    machine.flat_collectives = a.flag("flat-collectives");
+    let batch = match a.usize("batch")? {
+        0 => default_batch,
+        b => b,
+    };
+    let gpus = a.usize("gpus")?;
+    let mode = if a.flag("sharded-state") {
+        planner::StateMode::DepthSharded
+    } else {
+        planner::StateMode::Replicated
+    };
+    let refine = a.usize("refine")?;
+    if refine == 0 {
+        bail!("replan prices recovery by simulated expected throughput; --refine must be >= 1");
+    }
+    let pipeline = a.usize("pipeline")?;
+    let microbatches = a.usize("microbatches")?;
+    if pipeline > 1 && microbatches == 0 {
+        bail!("--pipeline needs --microbatches >= 1");
+    }
+    let pipes = tensor3d::mesh::divisors(pipeline.max(1));
+    let mtbf = a.f64("mtbf")?;
+    if mtbf <= 0.0 {
+        bail!("replan prices MTBF+MTTR repair cycles; --mtbf must be positive");
+    }
+    let mut spec = FaultSpec::with_mtbf(mtbf);
+    let mttr = a.f64("mttr")?;
+    if !mttr.is_finite() || mttr < 0.0 {
+        bail!("--mttr must be finite and non-negative");
+    }
+    if mttr > 0.0 {
+        spec.mttr_s = mttr;
+    }
+    let dead = a.str("dead")?;
+    if !dead.is_empty() {
+        let (rank, at) = dead
+            .split_once('@')
+            .ok_or_else(|| anyhow!("--dead wants RANK@SECONDS, got {dead:?}"))?;
+        let rank: usize =
+            rank.parse().map_err(|_| anyhow!("--dead rank {rank:?} is not an integer"))?;
+        let at: f64 = at.parse().map_err(|_| anyhow!("--dead time {at:?} is not a number"))?;
+        if !at.is_finite() || at < 0.0 {
+            bail!("--dead time {at} must be finite and non-negative");
+        }
+        spec = spec.death(rank, at);
+    }
+    let rec = RecoverySpec::parse(&a.str("recovery")?).map_err(|e| anyhow!("{e}"))?;
+    let mut req = planner::PlanRequest::new(&net, &machine, gpus)
+        .kind(kind)
+        .batch(batch)
+        .state(mode)
+        .pipelines(&pipes)
+        .microbatches(microbatches.max(1))
+        .refine(refine)
+        .depth(a.usize("depth")?)
+        .faults(&spec);
+    if let Some(pls) = placements_by_spec(&a.str("placements")?)? {
+        req = req.placements(&pls);
+    }
+    let (r, rr) = req.replan(&rec);
+    let best = r.layout().clone();
+
+    if a.flag("json") {
+        use tensor3d::util::json::Json;
+        let f = r.fault.as_ref().expect("replan always runs fault-aware");
+        let mut fields = vec![
+            ("model", Json::str(&model_name)),
+            ("gpus", Json::num(gpus as f64)),
+            ("machine", Json::str(&machine.name)),
+            ("world", Json::num(best.world() as f64)),
+            ("g_data", Json::num(best.g_data as f64)),
+            ("g_r", Json::num(best.g_r as f64)),
+            ("g_c", Json::num(best.g_c as f64)),
+            ("g_tensor", Json::num(best.g_tensor() as f64)),
+            ("placement", Json::str(&best.placement.label())),
+        ];
+        if pipeline > 1 {
+            fields.push(("pipeline", Json::num(best.g_pipe as f64)));
+            fields.push(("microbatches", Json::num(microbatches as f64)));
+            fields.push((
+                "bubble_fraction",
+                Json::num(comm_model::pipeline_bubble_fraction(best.g_pipe, microbatches)),
+            ));
+        }
+        fields.push(("makespan_s", Json::num(r.makespan_s().unwrap_or(f64::NAN))));
+        fields.push(("eq4_makespan_s", Json::num(r.baseline_makespan_s().unwrap_or(f64::NAN))));
+        fields.push(("mtbf_s", Json::num(f.mtbf_s)));
+        fields.push(("fault_makespan_s", Json::num(f.fault_makespan_s)));
+        fields.push(("ckpt_interval_s", Json::num(f.ckpt_interval_s)));
+        fields.push(("ckpt_cost_s", Json::num(f.ckpt_cost_s)));
+        fields.push(("expected_iters_per_sec", Json::num(f.expected_iters_per_sec)));
+        push_recovery_fields(&mut fields, &rr, spec.mttr_s);
+        println!("{}", Json::obj(fields));
+        return Ok(());
+    }
+
+    println!(
+        "model {} ({} params), batch {batch}, {gpus}x {}: fault-aware plan + recovery \
+         (MTBF {mtbf:.0} s)",
+        net.name,
+        fmt_bytes(net.params),
+        machine.name
+    );
+    let gp = if best.g_pipe > 1 { format!("G_pipe={} ", best.g_pipe) } else { String::new() };
+    println!(
+        "  full world: {gp}g_data={} g_r={} g_c={} @{} — {:.3} s/iter healthy, \
+         {:.3} s degraded, {:.4} iters/s expected",
+        best.g_data,
+        best.g_r,
+        best.g_c,
+        best.placement.label(),
+        r.makespan_s().unwrap_or(f64::NAN),
+        r.fault.as_ref().map_or(f64::NAN, |f| f.fault_makespan_s),
+        r.fault.as_ref().map_or(f64::NAN, |f| f.expected_iters_per_sec)
+    );
+    print_recovery(&rr, &spec, &rec);
     Ok(())
 }
 
@@ -709,6 +1012,29 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
     let expected_ips =
         ckpt_eff / comm_model::expected_secs_per_iter(r.makespan, fault_makespan, weight);
 
+    // recovery fields: the shrink-vs-wait decision for this exact layout
+    // (the `replan` cost model; schema in ROADMAP.md).  The survivor
+    // re-plan searches column-major only — these fields gate schema and
+    // sanity, not placement quality — and its wall clock is reported as
+    // replan_s but kept OUT of total_s so the hot-loop budgets keep
+    // gating the same work they always did.
+    let rec_spec = RecoverySpec::default();
+    let rreq = planner::PlanRequest::new(&net, &machine, gpus)
+        .kind(kind)
+        .batch(batch)
+        .state(mode)
+        .pipelines(&[pipeline])
+        .microbatches(microbatches.max(1))
+        .depth(depth)
+        .refine(1)
+        .placements(&[Placement::ColumnMajor])
+        .faults(&fault_spec);
+    let sw = Stopwatch::start();
+    let recovery = rreq.recover_layout(&layout, r.makespan, expected_ips, &rec_spec);
+    let replan_s = sw.secs();
+    let shrunk_ips = recovery.survivor_best().and_then(|c| c.expected_ips).unwrap_or(0.0);
+    let breakeven = recovery.breakeven_mttr_s.unwrap_or(0.0);
+
     let mut fields = vec![
         ("model", Json::str(&model_name)),
         ("gpus", Json::num(gpus as f64)),
@@ -741,6 +1067,10 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         ("ckpt_interval_s", Json::num(ckpt_interval)),
         ("ckpt_cost_s", Json::num(ckpt_cost)),
         ("expected_iters_per_sec", Json::num(expected_ips)),
+        ("recovery_policy", Json::str(recovery.best().policy.label())),
+        ("replan_s", Json::num(replan_s)),
+        ("shrunk_iters_per_sec", Json::num(shrunk_ips)),
+        ("recovery_breakeven_mttr_s", Json::num(breakeven)),
     ];
     if refine > 0 {
         // the planner-path metrics the CI refine budget gates (schema in
@@ -800,6 +1130,12 @@ fn cmd_bench_sim(argv: &[String]) -> Result<()> {
         "  faults:  degraded {fault_makespan:.3} s/iter @ MTBF {mtbf:.0} s   ckpt every \
          {ckpt_interval:.1} s ({ckpt_cost:.2} s each)   expected {expected_ips:.4} iters/s"
     );
+    println!(
+        "  recovery: {} (survivors {:.4} iters/s steady, shrink/wait breakeven at MTTR \
+         {breakeven:.0} s; priced in {replan_s:.2} s)",
+        recovery.best().policy.label(),
+        shrunk_ips
+    );
     println!("  results -> {out}");
     let budget = a.f64("budget-s")?;
     let gated = report.refine_s + total_s;
@@ -840,7 +1176,7 @@ fn main() -> Result<()> {
     let Some((cmd, rest)) = argv.split_first() else {
         eprintln!(
             "tensor3d — communication-minimizing asynchronous tensor parallelism\n\
-             usage: tensor3d <train|plan|simulate|bench-sim|sweep|trace|repro> [options]\n\
+             usage: tensor3d <train|plan|replan|simulate|bench-sim|sweep|trace|repro> [options]\n\
              run a subcommand with --help-me to see its options"
         );
         return Ok(());
@@ -848,6 +1184,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "plan" => cmd_plan(rest),
+        "replan" => cmd_replan(rest),
         "simulate" => cmd_simulate(rest),
         "bench-sim" => cmd_bench_sim(rest),
         "sweep" => {

@@ -64,7 +64,10 @@ use crate::strategies;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-pub use crate::spec::{FaultSpec, Layout, Placement, StateMode};
+pub use crate::spec::{FaultSpec, Layout, Placement, RecoverySpec, StateMode};
+
+mod recovery;
+pub use recovery::{PolicyOutcome, RecoveryPolicy, RecoveryReport};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NetKind {
@@ -1323,5 +1326,93 @@ mod tests {
             v
         };
         assert_eq!(shapes(&hier), shapes(&flat));
+    }
+
+    #[test]
+    fn recovery_policy_crossover_on_gpt9b_40() {
+        // Acceptance (PR 10): the wait-vs-shrink verdict flips with the
+        // repair time.  GPT-9B on 40 Polaris GPUs, G_pipe over {1,2,4},
+        // MTBF 3600 s under the default failure scenario: node eviction
+        // takes rank 0's whole node (ranks 0..4), and the 36-GPU
+        // survivor world re-plans to G_pipe=2 (3,2,3) — a worse-factored
+        // world whose data rings cross the sick node, so its steady rate
+        // sits well below the full world's.  At MTTR 60 s repairs are
+        // quick and waiting wins; at MTTR 3600 s the idle repair window
+        // dominates and shrinking overtakes it; with a hot spare the
+        // swap beats both.  Mirror-derived in python/tests/sim_mirror.py
+        // (at authoring time: MTTR 60 -> wait 0.3483 vs shrink 0.2766
+        // iters/s, breakeven 917 s; MTTR 3600 -> spare 0.2942 > shrink
+        // 0.1651 > wait 0.1412, breakeven 2608 s).
+        let net = gpt::gpt_9b().network();
+        let machine = Machine::polaris();
+        let run = |mttr: f64, rec: &RecoverySpec| {
+            let mut spec = FaultSpec::with_mtbf(3600.0);
+            spec.mttr_s = mttr;
+            PlanRequest::new(&net, &machine, 40)
+                .batch(64)
+                .pipelines(&[1, 2, 4])
+                .microbatches(8)
+                .refine(3)
+                .faults(&spec)
+                .replan(rec)
+        };
+        let ips = |r: &RecoveryReport, label: &str| {
+            r.policies.iter().find(|p| p.policy.label() == label).map(|p| p.expected_ips)
+        };
+
+        // quick repairs: waiting wins — shrink pays detect + rollback +
+        // re-shard + replan only to run the slower survivor world
+        let (plan, recov) = run(60.0, &RecoverySpec::default());
+        let b = plan.layout();
+        assert_eq!(
+            (b.g_pipe, b.g_data, b.g_r, b.g_c),
+            (2, 5, 1, 4),
+            "full-world winner drifted: {:?}",
+            plan.candidates
+        );
+        assert_eq!(recov.dead, vec![0, 1, 2, 3], "node eviction takes rank 0's node");
+        assert_eq!(recov.survivor_world, 36);
+        let sb = recov.survivor_best().expect("shrink candidate priced").layout.clone();
+        assert_eq!(
+            (sb.g_pipe, sb.g_data, sb.g_r, sb.g_c),
+            (2, 3, 2, 3),
+            "survivor-world winner drifted"
+        );
+        assert_eq!(recov.best().policy, RecoveryPolicy::WaitForRepair);
+        assert!(
+            ips(&recov, "wait-for-repair").unwrap() > ips(&recov, "shrink-to-survivors").unwrap(),
+            "MTTR 60 s: waiting must beat shrinking: {:?}",
+            recov.policies
+        );
+        assert!(ips(&recov, "spare-node").is_none(), "no spares -> no spare policy");
+        // detection is the survivors' sub-iteration quiesce time
+        assert!(recov.detect_s > recov.death_at_s);
+        assert!(recov.detect_s < 2.0 * plan.makespan_s().unwrap());
+        let be = recov.breakeven_mttr_s.expect("breakeven priced");
+        assert!((900.0..935.0).contains(&be), "breakeven drifted: {be}");
+
+        // slow repairs: shrinking overtakes waiting; a hot spare —
+        // shrink's overhead at the full world's rate — beats both
+        let (plan, recov) = run(3600.0, &RecoverySpec::default().spares(1));
+        let b = plan.layout();
+        assert_eq!(
+            (b.g_pipe, b.g_data, b.g_r, b.g_c),
+            (4, 5, 1, 2),
+            "full-world winner drifted: {:?}",
+            plan.candidates
+        );
+        assert_eq!(recov.best().policy, RecoveryPolicy::SpareNode { spares: 1 });
+        assert!(
+            ips(&recov, "shrink-to-survivors").unwrap() > ips(&recov, "wait-for-repair").unwrap(),
+            "MTTR 3600 s: shrinking must beat waiting: {:?}",
+            recov.policies
+        );
+        let be = recov.breakeven_mttr_s.expect("breakeven priced");
+        assert!((2500.0..2700.0).contains(&be), "breakeven drifted: {be}");
+        // the cross-check the bench schema enforces: the survivor world
+        // never out-earns the full world it shrank from
+        let sips = recov.survivor_best().unwrap().expected_ips.unwrap();
+        let fips = plan.best().expected_ips.unwrap();
+        assert!(sips < fips, "survivor {sips} vs full {fips}");
     }
 }

@@ -1,0 +1,464 @@
+//! The recovery layer: what to do when a rank actually dies.
+//!
+//! PR 7 made failure a *static* planning input — the planner prices a
+//! degraded steady state and ranks layouts by expected throughput under
+//! it.  This module answers the *dynamic* question production campaigns
+//! (arXiv:2502.08145) spend real wall-clock on: a [`FaultSpec`] death
+//! has been detected — should the job **wait for repair** (sit out the
+//! MTTR, resume on the full world), **shrink to the survivors** (evict
+//! the casualty's node, re-plan onto the smaller world, keep training),
+//! or swap in a **spare node** (re-shard onto a standby, resume at full
+//! rate)?
+//!
+//! Every policy is priced in the PR 7 currency — expected iterations/sec
+//! — over one repair cycle `H = MTBF + MTTR` (failure to next failure):
+//!
+//! * all policies pay a shared **core**: detection (the survivors'
+//!   quiesce time from a dead-rank simulation, [`sim::detect_death`]),
+//!   expected rollback (half the layout's checkpoint interval), and the
+//!   spec's restart cost;
+//! * **wait-for-repair** adds the MTTR, then earns `full_ips` for the
+//!   rest of the cycle;
+//! * **shrink-to-survivors** adds the re-shard (the casualty's state
+//!   shard over `ckpt_bw` — one checkpoint write) and the replan budget,
+//!   then earns the survivor world's rate: the fault-aware winner of a
+//!   full [`PlanRequest`] re-entry on the shrunken world, global batch
+//!   preserved so iterations stay comparable units;
+//! * **spare-node** pays the shrink overhead but earns `full_ips` —
+//!   available only when [`RecoverySpec::spares`] `> 0`.
+//!
+//! The verdict is world-shape-dependent, not universal: a survivor
+//! world that factors badly (prime-ish, cross-node data rings through
+//! the sick scenario) can price *below* the degraded full world, making
+//! waiting optimal at any realistic MTTR, while a clean shrink overtakes
+//! waiting once repairs are slow — the pinned gpt9b/40 crossover below,
+//! re-derived line-for-line by `python/tests/sim_mirror.py`.
+
+use super::{Candidate, PlanReport, PlanRequest};
+use crate::comm_model;
+use crate::sim;
+use crate::spec::{FaultSpec, Layout, RankDeath, RecoverySpec};
+use crate::strategies;
+
+/// What the job does after a detected death — the vocabulary
+/// [`RecoveryReport`] ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Sit out the MTTR, resume on the repaired full world.
+    WaitForRepair,
+    /// Evict the casualties, re-plan onto the survivors, keep training
+    /// at the smaller world's rate.
+    ShrinkToSurvivors,
+    /// Re-shard onto a hot standby node and resume at the full-world
+    /// rate (priced only when spares are available).
+    SpareNode {
+        /// Standby nodes available when the policy was priced.
+        spares: usize,
+    },
+}
+
+impl RecoveryPolicy {
+    /// The stable CLI/JSON label (`recovery_policy` in `BENCH_sim.json`
+    /// and the recovery golden).
+    pub fn label(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::WaitForRepair => "wait-for-repair",
+            RecoveryPolicy::ShrinkToSurvivors => "shrink-to-survivors",
+            RecoveryPolicy::SpareNode { .. } => "spare-node",
+        }
+    }
+
+    /// Deterministic tie-break order (wait < shrink < spare): ties on
+    /// expected throughput resolve to the operationally simplest policy.
+    fn order(&self) -> usize {
+        match self {
+            RecoveryPolicy::WaitForRepair => 0,
+            RecoveryPolicy::ShrinkToSurvivors => 1,
+            RecoveryPolicy::SpareNode { .. } => 2,
+        }
+    }
+}
+
+/// One priced policy: its recovery timeline and the expected
+/// iterations/sec over the repair cycle.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyOutcome {
+    /// The policy.
+    pub policy: RecoveryPolicy,
+    /// Non-training seconds the cycle opens with (detect + rollback +
+    /// restart, plus MTTR for waiting or re-shard + replan for
+    /// shrinking/spares).
+    pub overhead_s: f64,
+    /// Expected iterations/sec over the cycle: the policy's steady-state
+    /// rate discounted by its overhead
+    /// ([`comm_model::recovery_cycle_ips`]).
+    pub expected_ips: f64,
+}
+
+/// The recovery layer's answer: the priced timelines for one death,
+/// ranked best first.
+#[derive(Debug)]
+pub struct RecoveryReport {
+    /// The deaths priced: the spec's (filtered to ranks the world has),
+    /// or the canonical casualty — rank 0, mid-iteration — when the
+    /// spec scripts none.
+    pub deaths: Vec<RankDeath>,
+    /// Earliest death time (seconds into the iteration; 0 when nothing
+    /// died).
+    pub death_at_s: f64,
+    /// Detection time: when the survivors quiesced at the first
+    /// collective touching a dead rank (capped at the iteration end for
+    /// a death the program never blocks on).
+    pub detect_s: f64,
+    /// Every evicted logical rank, sorted: the dead ranks themselves,
+    /// plus — under [`RecoverySpec::evict_node`] — all ranks placed on
+    /// a casualty's physical node.
+    pub dead: Vec<usize>,
+    /// Ranks remaining after eviction.
+    pub survivor_world: usize,
+    /// The survivor-world re-plan (fault-aware, same spec minus the
+    /// deaths): what the job would run after shrinking.  `None` when
+    /// nothing died or no rank survives.
+    pub survivor: Option<PlanReport>,
+    /// The shared timeline core: detect + half the checkpoint interval
+    /// (expected rollback) + restart.
+    pub core_s: f64,
+    /// Re-shard cost: the casualty's state shard over `ckpt_bw` (one
+    /// checkpoint write).
+    pub reshard_s: f64,
+    /// The budgeted replan time charged to shrink/spare timelines.
+    pub replan_s: f64,
+    /// The MTTR at which shrinking overtakes waiting
+    /// ([`comm_model::recovery_breakeven_mttr_s`]); `None` when no
+    /// shrink candidate was priced.
+    pub breakeven_mttr_s: Option<f64>,
+    /// Priced policies, best first (descending expected iterations/sec,
+    /// ties to the simplest policy).  Never empty: wait-for-repair is
+    /// always priced — with zero overhead when nothing died.
+    pub policies: Vec<PolicyOutcome>,
+}
+
+impl RecoveryReport {
+    /// The recommended policy.
+    pub fn best(&self) -> &PolicyOutcome {
+        &self.policies[0]
+    }
+
+    /// The survivor re-plan's recommendation, when one was priced.
+    pub fn survivor_best(&self) -> Option<&Candidate> {
+        self.survivor.as_ref().map(|s| s.best())
+    }
+}
+
+impl<'a> PlanRequest<'a> {
+    /// Fault-aware plan plus recovery decision in one call: runs the
+    /// request (which must carry [`PlanRequest::faults`] and
+    /// `refine(k > 0)` — recovery is priced in expected iterations/sec,
+    /// which only the fault-aware refinement computes), then prices the
+    /// recovery policies for the spec's death on the recommended layout.
+    ///
+    /// With an empty/default [`RecoverySpec`] the returned [`PlanReport`]
+    /// is exactly what [`PlanRequest::run`] produces — the recovery
+    /// layer never perturbs the PR 7 planner (golden-pinned by CI).
+    pub fn replan(self, rec: &RecoverySpec) -> (PlanReport, RecoveryReport) {
+        let req = self.clone();
+        let report = self.run();
+        let recovery = req.recover(&report, rec);
+        (report, recovery)
+    }
+
+    /// Price the recovery policies for `report`'s recommendation (a
+    /// report this request produced).  See [`PlanRequest::replan`].
+    pub fn recover(&self, report: &PlanReport, rec: &RecoverySpec) -> RecoveryReport {
+        let mk_h = report
+            .makespan_s()
+            .expect("recovery pricing needs a refined report (refine(k > 0))");
+        let full_ips = report
+            .best()
+            .expected_ips
+            .expect("recovery pricing needs a fault-aware report (faults(spec))");
+        self.recover_layout(report.layout(), mk_h, full_ips, rec)
+    }
+
+    /// The work-horse behind [`PlanRequest::recover`], also used by
+    /// `bench-sim` for its directly-benched (non-refined) layout:
+    /// price the recovery policies for a running `layout` with healthy
+    /// makespan `mk_h` and fault-aware steady-state score `full_ips`.
+    pub fn recover_layout(
+        &self,
+        layout: &Layout,
+        mk_h: f64,
+        full_ips: f64,
+        rec: &RecoverySpec,
+    ) -> RecoveryReport {
+        let spec = self
+            .faults
+            .as_ref()
+            .expect("recovery pricing needs a FaultSpec: call faults(spec) first")
+            .clone();
+        let gpn = self.machine.gpus_per_node;
+        let perm = layout.perm(gpn);
+
+        // The deaths to price: the spec's, filtered to ranks this world
+        // has (a scripted death on a rank the layout doesn't use is not
+        // an event for this job).  A spec that scripts none gets the
+        // canonical casualty: rank 0, mid-iteration — the expected
+        // arrival of a memoryless failure.
+        let mut deaths: Vec<RankDeath> =
+            spec.deaths.iter().copied().filter(|d| d.rank < self.world).collect();
+        if deaths.is_empty() && spec.deaths.is_empty() {
+            deaths.push(RankDeath { rank: 0, at_s: 0.5 * mk_h });
+        }
+
+        let mut death_at = 0.0;
+        let mut detect = 0.0;
+        if !deaths.is_empty() {
+            death_at = deaths.iter().map(|d| d.at_s).fold(f64::INFINITY, f64::min);
+            let set = strategies::build(layout, self.net, self.batch, self.machine);
+            let probe = FaultSpec { deaths: deaths.clone(), ..FaultSpec::default() };
+            let mut scratch = sim::SimScratch::default();
+            detect = match sim::detect_death(
+                self.machine,
+                &set,
+                perm.as_deref(),
+                &probe,
+                &mut scratch,
+            ) {
+                Ok(sim::Detection::Stalled(stall)) => stall.at_s,
+                // a death past the iteration's end never stalls it:
+                // detection then happens in a later (statistically
+                // identical) iteration
+                Ok(sim::Detection::Survived { makespan_s }) => death_at.min(makespan_s),
+                Err(stall) => panic!("deadlock: {stall}"),
+            };
+        }
+
+        // Survivor derivation: the dead ranks go; under node eviction a
+        // dead GPU condemns its host node (via the placement — physical
+        // co-residency is what a drained node takes with it).
+        let phys = |r: usize| perm.as_ref().map_or(r, |p| p[r]);
+        let mut dead: Vec<usize> = deaths.iter().map(|d| d.rank).collect();
+        dead.sort_unstable();
+        dead.dedup();
+        if !dead.is_empty() && rec.evict_node {
+            let sick: Vec<usize> = {
+                let mut nodes: Vec<usize> = dead.iter().map(|&r| phys(r) / gpn).collect();
+                nodes.sort_unstable();
+                nodes.dedup();
+                nodes
+            };
+            dead = (0..self.world).filter(|&r| sick.binary_search(&(phys(r) / gpn)).is_ok()).collect();
+        }
+        let survivor_world = self.world - dead.len();
+
+        let (interval, cost) = self.ckpt_params(&spec, layout);
+        let core = detect + interval / 2.0 + spec.restart_s;
+        let reshard = cost;
+        let horizon = spec.mtbf_s + spec.mttr_s;
+        let shrink_over = core + reshard + rec.replan_s;
+
+        // Nothing died -> a trivial single-policy report: keep running.
+        let wait_over = if dead.is_empty() { 0.0 } else { core + spec.mttr_s };
+        let mut policies = vec![PolicyOutcome {
+            policy: RecoveryPolicy::WaitForRepair,
+            overhead_s: wait_over,
+            expected_ips: comm_model::recovery_cycle_ips(horizon, wait_over, full_ips),
+        }];
+
+        let mut survivor = None;
+        let mut breakeven = None;
+        if !dead.is_empty() && survivor_world >= 1 {
+            // Re-plan onto the survivors: the same request on the
+            // shrunken world — global batch preserved, same failure
+            // scenario minus the deaths (the sickness outlives the
+            // casualty; the casualty does not).
+            let mut sans = spec.clone();
+            sans.deaths.clear();
+            let mut sreq = PlanRequest::new(self.net, self.machine, survivor_world)
+                .kind(self.kind)
+                .batch(self.batch)
+                .state(self.state)
+                .pipelines(&self.pipelines)
+                .microbatches(self.microbatches)
+                .refine(self.refine.max(1))
+                .depth(self.depth)
+                .threads(self.threads)
+                .faults(&sans);
+            if let Some(pls) = &self.placements {
+                sreq = sreq.placements(pls);
+            }
+            let srep = sreq.run();
+            let sips = srep
+                .best()
+                .expected_ips
+                .expect("fault-aware refinement populates expected_ips");
+            policies.push(PolicyOutcome {
+                policy: RecoveryPolicy::ShrinkToSurvivors,
+                overhead_s: shrink_over,
+                expected_ips: comm_model::recovery_cycle_ips(horizon, shrink_over, sips),
+            });
+            breakeven = Some(comm_model::recovery_breakeven_mttr_s(
+                spec.mtbf_s,
+                core,
+                shrink_over,
+                full_ips,
+                sips,
+            ));
+            survivor = Some(srep);
+        }
+        if !dead.is_empty() && rec.spares > 0 {
+            policies.push(PolicyOutcome {
+                policy: RecoveryPolicy::SpareNode { spares: rec.spares },
+                overhead_s: shrink_over,
+                expected_ips: comm_model::recovery_cycle_ips(horizon, shrink_over, full_ips),
+            });
+        }
+        policies.sort_by(|a, b| {
+            b.expected_ips
+                .total_cmp(&a.expected_ips)
+                .then(a.policy.order().cmp(&b.policy.order()))
+        });
+
+        RecoveryReport {
+            deaths,
+            death_at_s: death_at,
+            detect_s: detect,
+            dead,
+            survivor_world,
+            survivor,
+            core_s: core,
+            reshard_s: reshard,
+            replan_s: rec.replan_s,
+            breakeven_mttr_s: breakeven,
+            policies,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::gpt::GptDims;
+    use crate::models::NetworkDesc;
+    use crate::sim::Machine;
+
+    // The degenerate-worlds suite's tiny transformer: fits anywhere,
+    // simulates in microseconds.
+    fn tiny() -> NetworkDesc {
+        GptDims { vocab: 4096, hidden: 512, layers: 4, heads: 8, seq: 64 }.network()
+    }
+
+    fn well_formed(r: &RecoveryReport) {
+        assert!(!r.policies.is_empty(), "wait-for-repair is always priced");
+        for p in &r.policies {
+            assert!(p.expected_ips.is_finite() && p.expected_ips >= 0.0, "{:?}", r.policies);
+            assert!(p.overhead_s.is_finite() && p.overhead_s >= 0.0, "{:?}", r.policies);
+        }
+        assert!(r.detect_s.is_finite() && r.detect_s >= 0.0);
+        assert!(r.core_s.is_finite() && r.reshard_s.is_finite());
+        if let Some(be) = r.breakeven_mttr_s {
+            assert!(be.is_finite() && be >= 0.0, "breakeven {be}");
+        }
+    }
+
+    #[test]
+    fn death_at_time_zero_is_detected_and_priced() {
+        let net = tiny();
+        let machine = Machine::polaris();
+        let spec = FaultSpec::with_mtbf(3600.0).death(0, 0.0);
+        let (plan, r) = PlanRequest::new(&net, &machine, 8)
+            .batch(16)
+            .refine(1)
+            .faults(&spec)
+            .replan(&RecoverySpec::default());
+        assert!(plan.makespan_s().unwrap() > 0.0);
+        assert_eq!(r.death_at_s, 0.0);
+        // rank 0 issues nothing; node eviction takes its whole node
+        assert_eq!(r.dead, vec![0, 1, 2, 3]);
+        assert_eq!(r.survivor_world, 4);
+        assert!(r.survivor.is_some());
+        well_formed(&r);
+    }
+
+    #[test]
+    fn every_rank_dead_returns_a_wait_only_report() {
+        let net = tiny();
+        let machine = Machine::polaris();
+        let mut spec = FaultSpec::with_mtbf(3600.0);
+        for rank in 0..8 {
+            spec = spec.death(rank, 1.0);
+        }
+        let (_, r) = PlanRequest::new(&net, &machine, 8)
+            .batch(16)
+            .refine(1)
+            .faults(&spec)
+            .replan(&RecoverySpec::default());
+        assert_eq!(r.survivor_world, 0, "no one to shrink onto");
+        assert!(r.survivor.is_none() && r.breakeven_mttr_s.is_none());
+        assert_eq!(r.policies.len(), 1);
+        assert_eq!(r.best().policy, RecoveryPolicy::WaitForRepair);
+        well_formed(&r);
+    }
+
+    #[test]
+    fn survivor_world_of_one_replans_onto_the_single_rank() {
+        let net = tiny();
+        let machine = Machine::polaris();
+        let spec = FaultSpec::with_mtbf(3600.0).death(1, 0.5);
+        // rank-only eviction: both ranks share node 0, so node eviction
+        // would leave no survivors — keeping the healthy neighbor is the
+        // point of the flag
+        let rec = RecoverySpec::parse("rank-only").expect("rank-only");
+        let (_, r) = PlanRequest::new(&net, &machine, 2)
+            .batch(4)
+            .refine(1)
+            .faults(&spec)
+            .replan(&rec);
+        assert_eq!(r.dead, vec![1]);
+        assert_eq!(r.survivor_world, 1);
+        let s = r.survivor.as_ref().expect("survivor re-plan priced");
+        assert_eq!(s.mesh().world(), 1);
+        assert!(s.best().expected_ips.unwrap() > 0.0);
+        well_formed(&r);
+    }
+
+    #[test]
+    fn mttr_of_zero_prices_finite_policies() {
+        let net = tiny();
+        let machine = Machine::polaris();
+        let mut spec = FaultSpec::with_mtbf(3600.0);
+        spec.mttr_s = 0.0;
+        let (_, r) = PlanRequest::new(&net, &machine, 8)
+            .batch(16)
+            .refine(1)
+            .faults(&spec)
+            .replan(&RecoverySpec::default().spares(1));
+        // instant repairs: waiting pays only the core and wins outright
+        assert_eq!(r.best().policy, RecoveryPolicy::WaitForRepair);
+        assert_eq!(r.policies.len(), 3, "wait + shrink + spare all priced");
+        well_formed(&r);
+    }
+
+    #[test]
+    fn death_on_a_rank_the_layout_does_not_use_is_trivial() {
+        let net = tiny();
+        let machine = Machine::polaris();
+        let spec = FaultSpec::with_mtbf(3600.0).death(100, 1.0);
+        let (plan, r) = PlanRequest::new(&net, &machine, 8)
+            .batch(16)
+            .refine(1)
+            .faults(&spec)
+            .replan(&RecoverySpec::default());
+        // a scripted death outside the world is not an event for this
+        // job: no casualty, no default injection, keep running
+        assert!(r.deaths.is_empty() && r.dead.is_empty());
+        assert_eq!((r.death_at_s, r.detect_s), (0.0, 0.0));
+        assert_eq!(r.survivor_world, 8);
+        assert!(r.survivor.is_none() && r.breakeven_mttr_s.is_none());
+        assert_eq!(r.policies.len(), 1);
+        assert_eq!(r.best().overhead_s, 0.0);
+        let full = plan.best().expected_ips.unwrap();
+        assert!((r.best().expected_ips - full).abs() < 1e-12 * full, "keep the full rate");
+        well_formed(&r);
+    }
+}

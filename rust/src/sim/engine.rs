@@ -1073,6 +1073,51 @@ fn try_simulate_faulted_impl(
     }
 }
 
+/// How the survivors learned about an injected death — the recovery
+/// layer's detection probe, returned by [`detect_death`].
+#[derive(Debug)]
+pub enum Detection {
+    /// The survivors quiesced: every live rank arrived at the first
+    /// collective touching a dead rank and nothing further could run.
+    /// [`StallError::at_s`] is the detection time.
+    Stalled(StallError),
+    /// The iteration completed despite the deaths (a death past the
+    /// iteration's end, or on a rank the program never blocks on):
+    /// detection then happens in a later, statistically identical
+    /// iteration.
+    Survived {
+        /// Makespan of the completed iteration.
+        makespan_s: f64,
+    },
+}
+
+/// Time how long the survivors take to *notice* a [`FaultSpec`] death:
+/// simulate `set` under the spec's deaths only — links and jitter
+/// cleared, healthy placed pricing via `perm` — and report the quiesce
+/// time.  The job was healthy until the failure, so detection runs at
+/// healthy speed; the sickness the spec's link faults describe is what
+/// the *post*-recovery policies price, not the pre-death world.
+///
+/// Every death must name a rank `< set.world()` (callers filter).
+/// `Err` is a genuine deadlock: the program stalled with no death
+/// injected.
+pub fn detect_death(
+    machine: &Machine,
+    set: &ProgramSet,
+    perm: Option<&[usize]>,
+    spec: &FaultSpec,
+    scratch: &mut SimScratch,
+) -> Result<Detection, StallError> {
+    let probe = FaultSpec { deaths: spec.deaths.clone(), ..FaultSpec::default() };
+    let pricing = set.comm.price_with(machine, perm);
+    let ctx = FaultCtx::new(machine, set, &probe);
+    match simulate_impl(machine, set, Some(&pricing), false, None, ctx.as_ref(), scratch) {
+        Ok(r) => Ok(Detection::Survived { makespan_s: r.makespan }),
+        Err(stall) if probe.deaths.is_empty() => Err(stall),
+        Err(stall) => Ok(Detection::Stalled(stall)),
+    }
+}
+
 /// [`simulate`] with re-priced communicator parameters and a caller-owned
 /// [`SimScratch`] — the sweep entry point [`crate::sim::PlacedWorld`]
 /// uses.  `pricing[g]` is the `(bw, lat)` to time [`GroupId`] `g` with,

@@ -29,9 +29,9 @@ pub mod trace;
 pub use comm_world::{CommWorld, GroupId, GroupInfo};
 pub(crate) use engine::{simulate_repriced_faulted, FaultCtx};
 pub use engine::{
-    simulate, simulate_faulted_permuted, simulate_permuted, simulate_with_trace, try_simulate,
-    try_simulate_faulted, FaultReport, Op, OpKind, ProgramSet, ProgramSetBuilder, SimResult,
-    SimScratch, StallError, Stream,
+    detect_death, simulate, simulate_faulted_permuted, simulate_permuted, simulate_with_trace,
+    try_simulate, try_simulate_faulted, Detection, FaultReport, Op, OpKind, ProgramSet,
+    ProgramSetBuilder, SimResult, SimScratch, StallError, Stream,
 };
 pub use fabric::Tier;
 pub use machine::Machine;

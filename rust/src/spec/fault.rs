@@ -159,6 +159,14 @@ impl FaultSpec {
     /// Parse the `simulate --fault` syntax: a comma-separated list of
     /// `dead:RANK@T`, `link:NODE@SCALE[@T]` and `jitter:AMP[@SEED]`
     /// clauses, e.g. `--fault link:0@0.25,jitter:0.05@7`.
+    ///
+    /// Malformed scenarios are rejected per clause, naming the
+    /// offending token: a duplicate `dead:`/`link:` clause for the same
+    /// rank/node (last-one-wins shadowing would make the scenario mean
+    /// something other than what was typed), negative or non-finite
+    /// times, negative or fractional rank/node indices, negative jitter
+    /// amplitudes, and bandwidth scales outside `(0, 1]` (a "degraded"
+    /// link faster than healthy is a typo, not a fault).
     pub fn parse(s: &str) -> Result<FaultSpec, String> {
         let mut spec = FaultSpec::default();
         for clause in s.split(',').filter(|c| !c.is_empty()) {
@@ -172,12 +180,68 @@ impl FaultSpec {
                     .and_then(|p| p.parse::<f64>().ok())
                     .ok_or_else(|| format!("fault clause `{clause}`: bad number"))
             };
+            let index = |i: usize, what: &str| -> Result<usize, String> {
+                let v = num(i)?;
+                if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+                    return Err(format!(
+                        "fault clause `{clause}`: {what} `{}` must be a \
+                         non-negative integer",
+                        parts[i]
+                    ));
+                }
+                Ok(v as usize)
+            };
+            let time = |i: usize| -> Result<f64, String> {
+                let v = num(i)?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!(
+                        "fault clause `{clause}`: onset time `{}` must be \
+                         finite and non-negative",
+                        parts[i]
+                    ));
+                }
+                Ok(v)
+            };
             match (kind, parts.len()) {
-                ("dead", 2) => spec = spec.death(num(0)? as usize, num(1)?),
-                ("link", 2) => spec = spec.link(num(0)? as usize, num(1)?, 0.0),
-                ("link", 3) => spec = spec.link(num(0)? as usize, num(1)?, num(2)?),
-                ("jitter", 1) => spec = spec.jitter(num(0)?, 0),
-                ("jitter", 2) => spec = spec.jitter(num(0)?, num(1)? as u64),
+                ("dead", 2) => {
+                    let rank = index(0, "rank")?;
+                    if spec.deaths.iter().any(|d| d.rank == rank) {
+                        return Err(format!(
+                            "fault clause `{clause}`: duplicate death for rank {rank}"
+                        ));
+                    }
+                    spec = spec.death(rank, time(1)?);
+                }
+                ("link", 2 | 3) => {
+                    let node = index(0, "node")?;
+                    if spec.links.iter().any(|l| l.node == node) {
+                        return Err(format!(
+                            "fault clause `{clause}`: duplicate link fault for \
+                             node {node}"
+                        ));
+                    }
+                    let scale = num(1)?;
+                    if scale.is_nan() || scale <= 0.0 || scale > 1.0 {
+                        return Err(format!(
+                            "fault clause `{clause}`: bw_scale `{}` outside (0, 1]",
+                            parts[1]
+                        ));
+                    }
+                    let at_s = if parts.len() == 3 { time(2)? } else { 0.0 };
+                    spec = spec.link(node, scale, at_s);
+                }
+                ("jitter", 1 | 2) => {
+                    let amp = num(0)?;
+                    if !amp.is_finite() || amp < 0.0 {
+                        return Err(format!(
+                            "fault clause `{clause}`: jitter amplitude `{}` must \
+                             be finite and non-negative",
+                            parts[0]
+                        ));
+                    }
+                    let seed = if parts.len() == 2 { index(1, "seed")? as u64 } else { 0 };
+                    spec = spec.jitter(amp, seed);
+                }
                 _ => {
                     return Err(format!(
                         "unknown fault clause `{clause}` (expected dead:RANK@T, \
@@ -242,6 +306,53 @@ mod tests {
         assert!(FaultSpec::parse("dead:3").is_err());
         assert!(FaultSpec::parse("flaky:1@2").is_err());
         assert!(FaultSpec::parse("link:0@x").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_clauses_naming_the_token() {
+        let e = FaultSpec::parse("dead:3@1.0,dead:3@2.0").unwrap_err();
+        assert!(e.contains("dead:3@2.0") && e.contains("duplicate"), "{e}");
+        let e = FaultSpec::parse("link:0@0.25,link:0@0.5").unwrap_err();
+        assert!(e.contains("link:0@0.5") && e.contains("duplicate"), "{e}");
+        // distinct ranks / nodes stay legal
+        let ok = FaultSpec::parse("dead:0@0.0,dead:1@0.5,link:0@0.25,link:1@0.5")
+            .expect("distinct indices");
+        assert_eq!(ok.deaths.len(), 2);
+        assert_eq!(ok.links.len(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_negative_times() {
+        let e = FaultSpec::parse("dead:3@-1.0").unwrap_err();
+        assert!(e.contains("dead:3@-1.0") && e.contains("-1.0"), "{e}");
+        let e = FaultSpec::parse("link:0@0.25@-2.0").unwrap_err();
+        assert!(e.contains("link:0@0.25@-2.0"), "{e}");
+        // a death at t=0 is a legal (degenerate) scenario
+        assert!(FaultSpec::parse("dead:0@0.0").is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_bw_scale_outside_unit_interval() {
+        let e = FaultSpec::parse("link:0@1.5").unwrap_err();
+        assert!(e.contains("link:0@1.5") && e.contains("(0, 1]"), "{e}");
+        let e = FaultSpec::parse("link:0@0").unwrap_err();
+        assert!(e.contains("(0, 1]"), "{e}");
+        let e = FaultSpec::parse("link:0@-0.5").unwrap_err();
+        assert!(e.contains("(0, 1]"), "{e}");
+        // exactly healthy bandwidth is the boundary no-op, still legal
+        assert!(FaultSpec::parse("link:0@1.0").is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_bad_indices_and_negative_jitter() {
+        let e = FaultSpec::parse("dead:-1@1.0").unwrap_err();
+        assert!(e.contains("dead:-1@1.0") && e.contains("rank"), "{e}");
+        let e = FaultSpec::parse("link:1.5@0.5").unwrap_err();
+        assert!(e.contains("link:1.5@0.5") && e.contains("node"), "{e}");
+        let e = FaultSpec::parse("jitter:-0.1").unwrap_err();
+        assert!(e.contains("jitter:-0.1"), "{e}");
+        let e = FaultSpec::parse("jitter:0.1@-7").unwrap_err();
+        assert!(e.contains("seed"), "{e}");
     }
 
     #[test]

@@ -25,6 +25,8 @@ use crate::ndmesh::Extent;
 
 pub mod fault;
 pub use fault::{FaultSpec, LinkFault, RankDeath};
+pub mod recovery;
+pub use recovery::RecoverySpec;
 
 /// How parameter/optimizer state is laid out across the data dimension.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

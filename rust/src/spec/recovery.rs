@@ -1,0 +1,119 @@
+//! The recovery vocabulary: what the job is allowed to do *after* a
+//! [`FaultSpec`](crate::spec::FaultSpec) death is detected.
+//!
+//! A [`RecoverySpec`] is pure data, like the fault spec it rides on:
+//! it does not describe the failure (that is the `FaultSpec`'s job) but
+//! the operator's options once one happens — whether hot spare nodes
+//! are on standby, how long a planner re-entry is budgeted to take, and
+//! whether a dead GPU condemns its whole host node.  The planner's
+//! recovery layer ([`crate::planner::PlanRequest::replan`]) prices the
+//! resulting policies — wait for repair, shrink to the survivors, or
+//! swap in a spare — by expected iterations/sec over one repair cycle.
+
+/// The operator-side recovery options priced by
+/// [`crate::planner::RecoveryReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoverySpec {
+    /// Hot spare nodes on standby: when `> 0`, the spare-node policy is
+    /// priced — same re-shard + replan cost as shrinking, but the job
+    /// resumes at the full-world rate with no MTTR wait.
+    pub spares: usize,
+    /// Budgeted wall-clock for the survivor-world planner re-entry
+    /// (seconds); charged to the shrink and spare timelines.
+    pub replan_s: f64,
+    /// Whether a dead GPU condemns its host node: when `true` (the
+    /// default, and how real schedulers drain) every rank placed on a
+    /// casualty's physical node is evicted with it; `false` keeps the
+    /// healthy neighbors and removes only the dead ranks themselves.
+    pub evict_node: bool,
+}
+
+impl Default for RecoverySpec {
+    fn default() -> RecoverySpec {
+        RecoverySpec { spares: 0, replan_s: 30.0, evict_node: true }
+    }
+}
+
+impl RecoverySpec {
+    /// Builder-style: set the hot spare count.
+    pub fn spares(mut self, spares: usize) -> RecoverySpec {
+        self.spares = spares;
+        self
+    }
+
+    /// Parse the `--recovery` CLI syntax: a comma-separated list of
+    /// `spares:N`, `replan:SECONDS` and `rank-only` clauses, e.g.
+    /// `--recovery spares:1,replan:60`.  The empty string and the word
+    /// `default` both mean the default spec (no spares, 30 s replan,
+    /// node eviction on).
+    pub fn parse(s: &str) -> Result<RecoverySpec, String> {
+        let mut spec = RecoverySpec::default();
+        if s == "default" {
+            return Ok(spec);
+        }
+        for clause in s.split(',').filter(|c| !c.is_empty()) {
+            match clause.split_once(':') {
+                None if clause == "rank-only" => spec.evict_node = false,
+                Some(("spares", n)) => {
+                    spec.spares = n.parse::<usize>().map_err(|_| {
+                        format!("recovery clause `{clause}`: bad spare count `{n}`")
+                    })?;
+                }
+                Some(("replan", t)) => {
+                    let v = t.parse::<f64>().unwrap_or(f64::NAN);
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(format!(
+                            "recovery clause `{clause}`: replan seconds `{t}` must \
+                             be finite and non-negative"
+                        ));
+                    }
+                    spec.replan_s = v;
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown recovery clause `{clause}` (expected spares:N, \
+                         replan:SECONDS or rank-only)"
+                    ))
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_documented_policy_set() {
+        let spec = RecoverySpec::default();
+        assert_eq!(spec.spares, 0);
+        assert_eq!(spec.replan_s, 30.0);
+        assert!(spec.evict_node);
+    }
+
+    #[test]
+    fn parse_roundtrips_the_cli_syntax() {
+        assert_eq!(RecoverySpec::parse("").expect("empty"), RecoverySpec::default());
+        assert_eq!(
+            RecoverySpec::parse("default").expect("default"),
+            RecoverySpec::default()
+        );
+        let spec = RecoverySpec::parse("spares:2,replan:60,rank-only").expect("full");
+        assert_eq!(spec.spares, 2);
+        assert_eq!(spec.replan_s, 60.0);
+        assert!(!spec.evict_node);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        let e = RecoverySpec::parse("spares:x").unwrap_err();
+        assert!(e.contains("spares:x"), "{e}");
+        let e = RecoverySpec::parse("replan:-5").unwrap_err();
+        assert!(e.contains("replan:-5"), "{e}");
+        let e = RecoverySpec::parse("spares:1,hot-swap").unwrap_err();
+        assert!(e.contains("hot-swap"), "{e}");
+        assert!(RecoverySpec::parse("spares:-1").is_err());
+    }
+}
